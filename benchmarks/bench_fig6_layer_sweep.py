@@ -1,0 +1,71 @@
+"""Figure 6 reproduction: per-layer GOPS across 60 (VU9P) / 40 (PYNQ) CONV
+layers with varying fmap size / channels / kernel size.
+
+Paper claims: Spatial-mode throughput is stable and near peak; Winograd-mode
+throughput is higher but fluctuates and DROPS where the layer becomes
+memory-bound (Sec. 6.2). We reproduce the sweep with the Eq. 6-15 model and
+report the stability statistics + the count of layers where the memory bound
+bites Winograd below Spatial.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import perf_model as pm
+from repro.core.hybrid_conv import ConvSpec
+
+
+def _layer_pool(n: int) -> list[ConvSpec]:
+    """n diverse CONV layers (fmap, channels, kernel size)."""
+    rng = np.random.default_rng(7)
+    specs = []
+    for i in range(n):
+        h = int(rng.choice([7, 14, 28, 56, 112, 224]))
+        c = int(rng.choice([32, 64, 128, 256, 512]))
+        k = int(rng.choice([32, 64, 128, 256, 512]))
+        r = int(rng.choice([1, 3, 5]))
+        specs.append(ConvSpec(f"L{i}", h, h, c, k, r=r, s=r))
+    return specs
+
+
+def _sweep(target: pm.FPGATarget, hw, n_layers: int):
+    specs = _layer_pool(n_layers)
+    gops_spat, gops_wino = [], []
+    wino_membound = 0
+    for s in specs:
+        lat_s = pm.fpga_layer_latency(target, s, hw[0], hw[1], hw[2],
+                                      hw[2] - 2, "spat", "is")
+        gops_spat.append(2 * s.macs / lat_s / 1e9)
+        if s.wino_eligible():
+            lat_w = pm.fpga_layer_latency(target, s, hw[0], hw[1], hw[2],
+                                          hw[2] - 2, "wino", "is")
+            gops_wino.append(2 * s.macs / lat_w / 1e9)
+            # memory-bound check: does LDW dominate COMP in wino mode?
+            t_cp = pm.fpga_t_cp(target, s, hw[0], hw[1], hw[2], hw[2] - 2,
+                                "wino")
+            t_ldw = pm.fpga_t_ldw(target, s, hw[0], hw[1], hw[2], hw[2] - 2,
+                                  "wino")
+            if t_ldw > t_cp:
+                wino_membound += 1
+                if lat_w > lat_s:
+                    pass
+    return (np.array(gops_spat), np.array(gops_wino), wino_membound)
+
+
+def run() -> list[dict]:
+    rows = []
+    for target, name, hw, n in ((pm.VU9P, "VU9P", (4, 4, 6), 60),
+                                (pm.PYNQ_Z1, "PYNQ-Z1", (4, 4, 4), 40)):
+        spat, wino, membound = _sweep(target, hw, n)
+        rows.append({
+            "bench": "fig6_layer_sweep", "name": name, "n_layers": n,
+            "spat_gops_mean": round(float(spat.mean()), 1),
+            "spat_cv": round(float(spat.std() / spat.mean()), 3),
+            "wino_gops_mean": round(float(wino.mean()), 1),
+            "wino_cv": round(float(wino.std() / wino.mean()), 3),
+            "wino_membound_layers": membound,
+            "claim_spatial_stabler": bool(
+                spat.std() / spat.mean() < wino.std() / wino.mean()),
+            "claim_wino_faster_mean": bool(wino.mean() > spat.mean()),
+        })
+    return rows

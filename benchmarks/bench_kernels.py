@@ -1,0 +1,50 @@
+"""Pallas kernel microbenchmarks (interpret mode on CPU: correctness-path
+timings, NOT TPU throughput — the TPU numbers come from the roofline)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gemm import batched_matmul
+from repro.kernels.spatial_conv import spatial_conv2d
+from repro.kernels.winograd import winograd_conv2d
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> list[dict]:
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    a = jax.random.normal(key, (4, 128, 128), jnp.float32)
+    b = jax.random.normal(key, (4, 128, 128), jnp.float32)
+    for df in ("is", "ws"):
+        us = _time(lambda a, b, df=df: batched_matmul(a, b, dataflow=df), a, b)
+        rows.append({"bench": "kernels", "name": f"gemm_pe_4x128_{df}",
+                     "us_per_call": round(us, 1)})
+
+    x = jax.random.normal(key, (1, 32, 32, 16), jnp.float32)
+    g = jax.random.normal(key, (3, 3, 16, 32), jnp.float32)
+    for m in (2, 4):
+        us = _time(lambda x, g, m=m: winograd_conv2d(x, g, m=m), x, g)
+        rows.append({"bench": "kernels", "name": f"wino_conv_F{m}x{m}",
+                     "us_per_call": round(us, 1)})
+    us = _time(lambda x, g: spatial_conv2d(x, g), x, g)
+    rows.append({"bench": "kernels", "name": "spatial_conv",
+                 "us_per_call": round(us, 1)})
+
+    q = jax.random.normal(key, (1, 4, 256, 64), jnp.float32)
+    us = _time(lambda q: flash_attention(q, q, q, bq=128, bk=128), q)
+    rows.append({"bench": "kernels", "name": "flash_attention_256",
+                 "us_per_call": round(us, 1)})
+    return rows

@@ -1,0 +1,44 @@
+"""Aggregates the dry-run roofline JSONs into the EXPERIMENTS.md tables."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records(mesh: str | None = None) -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(f) as fh:
+            r = json.load(fh)
+        if mesh is None or r.get("mesh") == mesh:
+            recs.append(r)
+    return recs
+
+
+def run() -> list[dict]:
+    rows = []
+    for r in load_records("single"):
+        if r["status"] != "OK":
+            rows.append({"bench": "roofline", "name":
+                         f"{r['arch']}/{r['shape']}", "status": r["status"],
+                         "reason": r.get("reason", r.get("error", ""))[:60]})
+            continue
+        roof = r["roofline"]
+        rows.append({
+            "bench": "roofline",
+            "name": f"{r['arch']}/{r['shape']}",
+            "status": "OK",
+            "bound": roof["bound"],
+            "compute_ms": round(roof["compute_s"] * 1e3, 2),
+            "memory_ms": round(roof["memory_s"] * 1e3, 2),
+            "collective_ms": round(roof["collective_s"] * 1e3, 2),
+            "step_ms": round(roof["step_time_s"] * 1e3, 2),
+            "mem_gb_tpu": r.get("bytes_per_device_gb_tpu_est"),
+            "useful_flops_ratio": (round(r["useful_flops_ratio"], 3)
+                                   if r.get("useful_flops_ratio") else None),
+        })
+    return rows

@@ -1,0 +1,39 @@
+"""Table 3 reproduction: resource utilization of the DSE-chosen accelerators.
+
+Evaluates the Eq. 3-5 analytical resource model at the paper's configurations
+(VU9P: PI=4 PO=4 PT=6 NI=6; PYNQ-Z1: PI=4 PO=4 PT=4 NI=1) and reports
+utilization vs the paper's measured Table 3 numbers.
+"""
+from __future__ import annotations
+
+from repro.core import perf_model as pm
+
+PAPER = {
+    "VU9P": {"LUTs": 706353, "DSPs": 5163, "BRAMs": 3169,
+             "cfg": (4, 4, 6, 6)},
+    "PYNQ-Z1": {"LUTs": 37034, "DSPs": 220, "BRAMs": 277,
+                "cfg": (4, 4, 4, 1)},
+}
+
+
+def run() -> list[dict]:
+    rows = []
+    for target, name in ((pm.VU9P, "VU9P"), (pm.PYNQ_Z1, "PYNQ-Z1")):
+        pi, po, pt, ni = PAPER[name]["cfg"]
+        m = pt - 2
+        model = {
+            "DSPs": ni * pm.fpga_dsp(target, pi, po, pt, m),
+            "BRAMs": ni * pm.fpga_bram(target, pi, po, pt, m),
+            "LUTs": ni * pm.fpga_lut(target, pi, po, pt, m),
+        }
+        for res in ("DSPs", "BRAMs", "LUTs"):
+            paper_val = PAPER[name][res]
+            err = abs(model[res] - paper_val) / paper_val * 100
+            rows.append({
+                "bench": "table3_resources",
+                "name": f"{name}/{res}",
+                "model": round(model[res], 1),
+                "paper": paper_val,
+                "err_pct": round(err, 2),
+            })
+    return rows

@@ -1,0 +1,65 @@
+"""Table 4 reproduction: end-to-end VGG16 throughput (GOPS).
+
+* paper-faithful: the FPGA DSE re-derives the paper's configurations and the
+  Eq. 6-15 latency model reproduces the published GOPS (VU9P 3375.7 /
+  PYNQ-Z1 83.3).
+* hybrid-vs-spatial-only: the paper's headline 1.8x-class gain, measured by
+  forcing all-Spatial plans through the same model.
+* TPU analog: the hardware-adapted model's GOPS for the v5e target.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import perf_model as pm
+from repro.core.dse import DSEResult, run_fpga_dse, run_tpu_dse
+from repro.models.vgg import conv_specs
+
+PAPER_GOPS = {"VU9P": 3375.7, "PYNQ-Z1": 83.3}
+
+
+def _gops(specs, total_latency):
+    return sum(2 * s.macs for s in specs) / 1e9 / total_latency
+
+
+def _spatial_only_latency(target, specs, hw) -> float:
+    t_inst = dataclasses.replace(target, bw=target.bw / hw.ni)
+    total = 0.0
+    for spec in specs:
+        best = min(
+            pm.fpga_layer_latency(t_inst, spec, hw.pi, hw.po, hw.pt, hw.m,
+                                  "spat", df)
+            for df in ("is", "ws"))
+        total += best / hw.ni
+    return total
+
+
+def run() -> list[dict]:
+    specs = conv_specs()
+    rows = []
+    for target, name in ((pm.VU9P, "VU9P"), (pm.PYNQ_Z1, "PYNQ-Z1")):
+        r: DSEResult = run_fpga_dse(target, specs)
+        gops = _gops(specs, r.total_latency)
+        err = abs(gops - PAPER_GOPS[name]) / PAPER_GOPS[name] * 100
+        rows.append({
+            "bench": "table4_vgg16", "name": f"{name}/hybrid",
+            "config": f"PI{r.hw.pi}_PO{r.hw.po}_PT{r.hw.pt}_NI{r.hw.ni}",
+            "gops": round(gops, 1), "paper": PAPER_GOPS[name],
+            "err_pct": round(err, 2),
+            "wino_layers": sum(p.mode == "wino" for p in r.plans),
+        })
+        spat_lat = _spatial_only_latency(target, specs, r.hw)
+        gops_spat = _gops(specs, spat_lat)
+        rows.append({
+            "bench": "table4_vgg16", "name": f"{name}/spatial_only",
+            "gops": round(gops_spat, 1),
+            "hybrid_speedup": round(gops / gops_spat, 2),
+        })
+    rt = run_tpu_dse(specs, batch=8)
+    rows.append({
+        "bench": "table4_vgg16", "name": "v5e/tpu_dse",
+        "config": f"bm{rt.hw.bm}_bk{rt.hw.bk}_bn{rt.hw.bn}_m{rt.hw.m}",
+        "gops": round(8 * _gops(specs, rt.total_latency), 1),
+        "wino_layers": sum(p.mode == "wino" for p in rt.plans),
+    })
+    return rows

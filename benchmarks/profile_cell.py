@@ -1,0 +1,61 @@
+"""Hillclimb profiler: lower+compile one cell, print the roofline terms and
+the top ops by collective / memory bytes with op_name attribution.
+
+  PYTHONPATH=src python -m benchmarks.profile_cell --arch minitron-8b \
+      --shape train_4k [--top 10]
+"""
+from __future__ import annotations
+
+import argparse
+import re
+
+from repro.launch import roofline as rl
+
+
+def profile(arch: str, shape: str, top: int = 10):
+    from repro.launch.dryrun import lower_cell, trip_count
+    lowered, cfg, shape_spec, mesh = lower_cell(arch, shape, False)
+    compiled = lowered.compile()
+    txt = compiled.as_text()
+    trip = trip_count(cfg)
+    st = rl.analyze_hlo(txt, trip_count=trip)
+    corr = 0.5 if cfg.dtype == "bfloat16" else 1.0
+    roof = rl.roofline_from_stats(
+        rl.HLOStats(st.flops, st.bytes_accessed * corr,
+                    st.collective_bytes * corr), mesh.devices.size)
+    ma = compiled.memory_analysis()
+    print(f"== {arch} x {shape} (single-pod) ==")
+    print(f"mem/dev: {(ma.argument_size_in_bytes + ma.output_size_in_bytes + ma.temp_size_in_bytes * corr)/2**30:.2f} GB (TPU est)")
+    print(f"compute {roof.compute_s:.3f}s | memory {roof.memory_s:.3f}s | "
+          f"collective {roof.collective_s:.3f}s -> bound={roof.bound} "
+          f"step={roof.step_time_s:.3f}s")
+
+    comps = rl.parse_hlo(txt)
+    mult = rl._loop_multipliers(comps, trip)
+    coll, mem = [], []
+    for cname, comp in comps.items():
+        m = mult[cname]
+        for op in comp.ops:
+            base = op.opcode.removesuffix("-start")
+            meta = re.search(r'op_name="([^"]+)"', op.rest)
+            tag = (meta.group(1) if meta else "")[-70:]
+            b = rl._shape_bytes(op.type_str)
+            if base in rl.COLLECTIVES and not op.opcode.endswith("-done"):
+                coll.append((m * b * corr, base, op.type_str[:40], tag))
+            elif op.opcode == "fusion":
+                mem.append((m * b * corr, "fusion", op.type_str[:40], tag))
+    for title, rows in (("top collectives", coll), ("top fusion outputs", mem)):
+        rows.sort(reverse=True)
+        print(f"\n-- {title} --")
+        for r in rows[:top]:
+            print(f"{r[0]/1e9:8.2f}GB {r[1]:18s} {r[2]} | {r[3]}")
+    return roof
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--top", type=int, default=10)
+    args = ap.parse_args()
+    profile(args.arch, args.shape, args.top)

@@ -1,0 +1,26 @@
+"""Batched serving with a KV/SSM cache (deliverable (b)): prefill a batch of
+prompts, then decode tokens step by step — the same ``serve_step`` the
+decode_32k/long_500k dry-run cells lower.
+
+  PYTHONPATH=src python examples/serve_batch.py --arch qwen3-32b --gen 24
+"""
+import argparse
+
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-32b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+    toks = serve(args.arch, reduced=True, batch=args.batch,
+                 prompt_len=args.prompt_len, gen=args.gen)
+    assert toks.shape == (args.batch, args.gen)
+    print(f"generated {toks.shape} tokens")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""HybridDNN on TPU: hybrid Spatial/Winograd conv engine + multi-pod JAX
+training/serving framework. See README.md / DESIGN.md."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,11 @@
+"""The paper's primary contribution (HybridDNN, 2020):
+
+- winograd:     F(2,3)/F(4,3) transforms, GEMM formulation, kernel decomp.
+- hybrid_conv:  the hybrid Spatial/Winograd PE with IS/WS dataflows
+- isa:          the 128-bit instruction set (Fig. 2)
+- compiler:     DNN graph + DSE plan -> instruction stream (Fig. 4 loops)
+- runtime:      functional executor with handshake-hazard checking
+- layouts:      WINO/SPAT data layouts + SAVE-side reorders (Sec. 4.3)
+- perf_model:   Eq. 3-15 verbatim (FPGA) + TPU-adapted analytical models
+- dse:          the 3-step design space exploration (Sec. 5.3)
+"""

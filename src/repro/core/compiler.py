@@ -1,0 +1,202 @@
+"""HybridDNN compiler: DNN graph + DSE plan -> 128-bit instruction stream.
+
+Implements the CONV-operation partition of Sec. 4.2.4 and the IS/WS loop
+orders of Figure 4:
+
+* feature maps are partitioned into ``G_H`` row groups (``H`` for Spatial,
+  ``H/m`` for Winograd — we use a configurable group height that defaults to
+  the largest on-chip-fitting slab, the paper's per-row case being the
+  finest),
+* weights are partitioned into ``G_K`` groups along output channels,
+* IS: for each input group, stream all weight groups; WS: for each weight
+  group, stream all input groups.
+
+DRAM addresses come from a bump allocator (words); BUFF_BASE alternates
+between ping-pong slots 0/1 so that LOAD(i+1) can overlap COMP(i) — the
+runtime checks the resulting hazard discipline with handshake tokens.
+
+Winograd-mode weights are written to DRAM *pre-transformed* (Sec. 4.2.3
+offline transform), so LOAD_WGT sizes reproduce Eq. 8 vs Eq. 9's bandwidth
+asymmetry exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core.hybrid_conv import ConvSpec
+from repro.core.isa import Instruction, Opcode
+from repro.core.layouts import layout_for_mode
+from repro.core.winograd import R_WINO, pt_for
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """Per-layer software parameters chosen by the DSE (Table 2)."""
+    mode: str = "spat"          # "spat" | "wino"
+    dataflow: str = "is"        # "is" | "ws"
+    m: int = 4                  # Winograd output tile size (PT = m + 2)
+    g_k: int = 1                # weight groups along output channels
+    g_h: int = 1                # input-row groups
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledLayer:
+    spec: ConvSpec
+    plan: LayerPlan
+    layer_id: int
+    inp_addr: int               # DRAM base of this layer's input fmap
+    wgt_addr: int               # DRAM base of (possibly transformed) weights
+    bias_addr: int
+    out_addr: int
+    inp_layout: str             # layout the input is stored in ("spat"/"wino")
+    out_layout: str             # layout SAVE writes for the next layer
+    out_m: int                  # tile size of the WINO out layout (next layer's m)
+    # derived group geometry
+    row_groups: tuple[tuple[int, int], ...]   # output-row ranges per group
+    k_groups: tuple[tuple[int, int], ...]     # output-channel ranges
+
+
+@dataclasses.dataclass
+class Program:
+    instructions: list[Instruction]
+    layers: list[CompiledLayer]
+    dram_size_words: int
+
+
+def _split(total: int, groups: int, align: int = 1) -> list[tuple[int, int]]:
+    """Split [0, total) into ~equal ranges aligned to ``align``."""
+    groups = max(1, min(groups, math.ceil(total / align)))
+    base = math.ceil(total / groups / align) * align
+    out = []
+    lo = 0
+    while lo < total:
+        hi = min(total, lo + base)
+        out.append((lo, hi))
+        lo = hi
+    return out
+
+
+def _wgt_words(spec: ConvSpec, plan: LayerPlan, k_lo: int, k_hi: int) -> int:
+    """Weight transfer size in words; Winograd weights are pre-transformed
+    (ceil(R/r)*ceil(S/r)*PT^2 words per (c,k) — Eq. 9's numerator)."""
+    kk = k_hi - k_lo
+    if plan.mode == "wino":
+        pt = pt_for(plan.m)
+        nr = math.ceil(spec.r / R_WINO) * math.ceil(spec.s / R_WINO)
+        return kk * spec.c * nr * pt * pt
+    return kk * spec.c * spec.r * spec.s
+
+
+def _inp_words(spec: ConvSpec, row_lo: int, row_hi: int) -> int:
+    """Input rows needed for output rows [row_lo, row_hi) incl. halo."""
+    pad = (spec.r - 1) // 2 if spec.padding.upper() == "SAME" else 0
+    in_lo = max(0, row_lo * spec.stride - pad)
+    in_hi = min(spec.h, (row_hi - 1) * spec.stride + spec.r - pad)
+    return (in_hi - in_lo) * spec.w * spec.c
+
+
+def compile_network(
+    specs: list[ConvSpec],
+    plans: list[LayerPlan],
+    *,
+    input_layout: str | None = None,
+) -> Program:
+    """Compile a chain of CONV layers into the instruction stream.
+
+    The LOAD module only performs identity loads (Sec. 4.3), so the network
+    input must be stored in the layout of layer 0's mode — the runtime's
+    ``write_input`` does that host-side conversion.
+    """
+    assert len(specs) == len(plans)
+    if input_layout is None:
+        input_layout = layout_for_mode(plans[0].mode)
+    instrs: list[Instruction] = []
+    layers: list[CompiledLayer] = []
+    alloc = 0
+
+    def bump(words: int) -> int:
+        nonlocal alloc
+        base = alloc
+        alloc += words
+        return base
+
+    # allocate DRAM: input of layer 0, then per layer (weights, bias, output)
+    inp_addr = bump(specs[0].h * specs[0].w * specs[0].c)
+    inp_layout = input_layout
+
+    for lid, (spec, plan) in enumerate(zip(specs, plans)):
+        ho, wo = spec.out_hw
+        wgt_addr = bump(_wgt_words(spec, plan, 0, spec.k))
+        bias_addr = bump(spec.k)
+        out_addr = bump(ho * wo * spec.k)
+
+        next_plan = plans[lid + 1] if lid + 1 < len(plans) else None
+        out_layout = layout_for_mode(next_plan.mode) if next_plan else "spat"
+        out_m = next_plan.m if (next_plan and out_layout == "wino") else 0
+
+        align = plan.m if plan.mode == "wino" else 1
+        row_groups = tuple(_split(ho, plan.g_h, align))
+        k_groups = tuple(_split(spec.k, plan.g_k))
+
+        cl = CompiledLayer(
+            spec=spec, plan=plan, layer_id=lid,
+            inp_addr=inp_addr, wgt_addr=wgt_addr, bias_addr=bias_addr,
+            out_addr=out_addr, inp_layout=inp_layout, out_layout=out_layout,
+            out_m=out_m, row_groups=row_groups, k_groups=k_groups)
+        layers.append(cl)
+
+        wino_f = plan.mode == "wino"
+        ws = plan.dataflow == "ws"
+        common = dict(wino_flag=wino_f, dataflow_ws=ws, m_tile=plan.m if wino_f else 0,
+                      layer_id=lid)
+
+        instrs.append(Instruction(Opcode.LOAD_BIAS, buff_base=0,
+                                  dram_base=bias_addr, size=spec.k, **common))
+
+        def li(ih, slot):
+            lo, hi = row_groups[ih]
+            return Instruction(Opcode.LOAD_INP, buff_base=(ih << 1) | slot,
+                               dram_base=inp_addr, size=_inp_words(spec, lo, hi),
+                               **common)
+
+        def lw(kg, slot):
+            lo, hi = k_groups[kg]
+            return Instruction(Opcode.LOAD_WGT, buff_base=(kg << 1) | slot,
+                               dram_base=wgt_addr,
+                               size=_wgt_words(spec, plan, lo, hi), **common)
+
+        def comp(ih, kg, islot, wslot):
+            # SIZE packs (row-group, k-group, buffer slots) for the runtime
+            packed = ih | (kg << 12) | (islot << 24) | (wslot << 25)
+            return Instruction(Opcode.COMP, buff_base=islot, size=packed,
+                               relu_flag=spec.relu, **common)
+
+        def save(ih, kg):
+            packed = ih | (kg << 12)
+            return Instruction(
+                Opcode.SAVE, buff_base=0, dram_base=out_addr, size=packed,
+                layout_out_wino=(out_layout == "wino"), relu_flag=spec.relu,
+                **common)
+
+        if not ws:  # Input Stationary (Fig. 4 left): inputs outer
+            for ih in range(len(row_groups)):
+                instrs.append(li(ih, ih % 2))
+                for kg in range(len(k_groups)):
+                    instrs.append(lw(kg, kg % 2))
+                    instrs.append(comp(ih, kg, ih % 2, kg % 2))
+                instrs.append(save(ih, 0))   # full-K row slab
+        else:       # Weight Stationary: weights outer, inputs re-streamed
+            for kg in range(len(k_groups)):
+                instrs.append(lw(kg, kg % 2))
+                for ih in range(len(row_groups)):
+                    instrs.append(li(ih, ih % 2))
+                    instrs.append(comp(ih, kg, ih % 2, kg % 2))
+                    instrs.append(save(ih, kg))  # (row, K-group) block
+
+        inp_addr = out_addr
+        inp_layout = out_layout
+
+    return Program(instructions=instrs, layers=layers, dram_size_words=alloc)

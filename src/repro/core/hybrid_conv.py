@@ -1,0 +1,130 @@
+"""The hybrid Spatial/Winograd convolution engine (Sec. 4.2).
+
+One engine, two CONV modes, two dataflows — the paper's PE, as a composable
+JAX module. ``use_pallas=True`` routes through the Pallas TPU kernels
+(kernels/gemm + kernels/winograd + kernels/spatial_conv); ``use_pallas=False``
+uses mathematically identical XLA-partitionable paths so the same layer can
+live inside a pjit-sharded model (GSPMD cannot split an opaque custom call —
+on real hardware the Pallas path is wrapped in shard_map, see
+parallel/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import winograd as wino
+from repro.kernels.spatial_conv import spatial_conv2d
+from repro.kernels.winograd import winograd_conv2d
+
+Mode = Literal["spat", "wino"]
+Dataflow = Literal["is", "ws"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """Static description of one CONV layer (the DSE/compiler currency)."""
+    name: str
+    h: int                  # input spatial height
+    w: int
+    c: int                  # input channels
+    k: int                  # output channels
+    r: int = 3              # kernel height
+    s: int = 3              # kernel width
+    stride: int = 1
+    padding: str = "SAME"
+    relu: bool = True
+
+    @property
+    def out_hw(self) -> tuple[int, int]:
+        if self.padding.upper() == "SAME":
+            return (-(-self.h // self.stride), -(-self.w // self.stride))
+        return ((self.h - self.r) // self.stride + 1,
+                (self.w - self.s) // self.stride + 1)
+
+    @property
+    def macs(self) -> int:
+        ho, wo = self.out_hw
+        return self.k * self.c * self.r * self.s * ho * wo
+
+    def wino_eligible(self, m: int = 4) -> bool:
+        """Winograd mode requires stride 1 (paper Sec. 4.2.1)."""
+        return self.stride == 1 and self.r >= 1 and self.s >= 1
+
+
+def hybrid_conv2d(
+    x_nhwc: jax.Array,
+    g_rsck: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    mode: Mode = "spat",
+    m: int = 4,
+    dataflow: Dataflow = "is",
+    stride: int = 1,
+    padding: str = "SAME",
+    relu: bool = False,
+    use_pallas: bool = True,
+    interpret: bool | None = None,
+    out_dtype=None,
+) -> jax.Array:
+    """Run one convolution on the hybrid PE in the requested mode."""
+    out_dtype = out_dtype or x_nhwc.dtype
+    if mode == "wino":
+        if stride != 1:
+            raise ValueError("Winograd mode requires stride 1")
+        if use_pallas:
+            return winograd_conv2d(
+                x_nhwc, g_rsck, bias, m=m, padding=padding, relu=relu,
+                dataflow=dataflow, out_dtype=out_dtype, interpret=interpret)
+        y = wino.winograd_conv2d_reference(
+            x_nhwc, g_rsck, m=m, padding=padding, out_dtype=jnp.float32)
+        if bias is not None:
+            y = y + bias.astype(jnp.float32)
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        return y.astype(out_dtype)
+    elif mode == "spat":
+        if use_pallas:
+            return spatial_conv2d(
+                x_nhwc, g_rsck, bias, stride=stride, padding=padding,
+                relu=relu, dataflow=dataflow, out_dtype=out_dtype,
+                interpret=interpret)
+        y = lax.conv_general_dilated(
+            x_nhwc.astype(jnp.float32), g_rsck.astype(jnp.float32),
+            (stride, stride), padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        if bias is not None:
+            y = y + bias.astype(jnp.float32)
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        return y.astype(out_dtype)
+    raise ValueError(f"unknown mode {mode!r}")
+
+
+def max_pool2d(x_nhwc: jax.Array, window: int = 2, stride: int = 2) -> jax.Array:
+    init = jnp.array(-jnp.inf, x_nhwc.dtype) if jnp.issubdtype(
+        x_nhwc.dtype, jnp.floating) else jnp.iinfo(x_nhwc.dtype).min
+    return lax.reduce_window(
+        x_nhwc, init, lax.max,
+        (1, window, window, 1), (1, stride, stride, 1), "VALID")
+
+
+def dense(x: jax.Array, w_ck: jax.Array, bias: jax.Array | None = None,
+          relu: bool = False, use_pallas: bool = False,
+          interpret: bool | None = None) -> jax.Array:
+    """FC layer; routes through the shared GEMM PE when use_pallas."""
+    if use_pallas:
+        from repro.kernels.gemm import matmul
+        y = matmul(x, w_ck, out_dtype=jnp.float32, interpret=interpret)
+    else:
+        y = jnp.dot(x.astype(jnp.float32), w_ck.astype(jnp.float32))
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y.astype(x.dtype)

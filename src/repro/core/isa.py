@@ -1,0 +1,92 @@
+"""The 128-bit customized instruction set (Sec. 4.1, Figure 2).
+
+Five opcodes — LOAD_INP, LOAD_WGT, LOAD_BIAS, COMP, SAVE — each encoded in
+128 bits (four little-endian uint32 words). Every instruction carries a
+WINO_FLAG indicating the current CONV mode; LOAD/SAVE instructions carry
+BUFF_BASE / DRAM_BASE so the compiler fully controls data movement and can
+realize IS or WS dataflow purely in the instruction stream (Sec. 4.2.4).
+
+Bit layout (word:bit, little-endian within the 128-bit word):
+
+  word0: [ 3:0]  OPCODE        [4] WINO_FLAG      [5] DATAFLOW (0=IS,1=WS)
+         [6]    LAYOUT_OUT (SAVE: 0=SPAT,1=WINO)  [7] RELU_FLAG
+         [15:8] M_TILE (Winograd m)               [31:16] LAYER_ID
+  word1: BUFF_BASE  (32b on-chip buffer word address / ping-pong slot)
+  word2: DRAM_BASE  (32b external-memory word address)
+  word3: SIZE       (32b transfer size in words; COMP: group index)
+
+The encode/decode pair is bit-exact and round-trip tested (hypothesis).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+import numpy as np
+
+
+class Opcode(enum.IntEnum):
+    LOAD_INP = 1
+    LOAD_WGT = 2
+    LOAD_BIAS = 3
+    COMP = 4
+    SAVE = 5
+
+
+@dataclasses.dataclass(frozen=True)
+class Instruction:
+    opcode: Opcode
+    wino_flag: bool = False          # current CONV mode
+    dataflow_ws: bool = False        # 0 = IS, 1 = WS
+    layout_out_wino: bool = False    # SAVE: layout written for the next layer
+    relu_flag: bool = False
+    m_tile: int = 0                  # Winograd output tile size m (0 for SPAT)
+    layer_id: int = 0
+    buff_base: int = 0
+    dram_base: int = 0
+    size: int = 0
+
+    def encode(self) -> np.ndarray:
+        """-> uint32[4] (128 bits)."""
+        if not (0 <= self.layer_id < 1 << 16):
+            raise ValueError("layer_id out of range")
+        if not (0 <= self.m_tile < 1 << 8):
+            raise ValueError("m_tile out of range")
+        w0 = (int(self.opcode) & 0xF)
+        w0 |= (1 << 4) if self.wino_flag else 0
+        w0 |= (1 << 5) if self.dataflow_ws else 0
+        w0 |= (1 << 6) if self.layout_out_wino else 0
+        w0 |= (1 << 7) if self.relu_flag else 0
+        w0 |= (self.m_tile & 0xFF) << 8
+        w0 |= (self.layer_id & 0xFFFF) << 16
+        words = [w0, self.buff_base & 0xFFFFFFFF,
+                 self.dram_base & 0xFFFFFFFF, self.size & 0xFFFFFFFF]
+        return np.array(words, dtype=np.uint32)
+
+
+def decode(words: np.ndarray) -> Instruction:
+    """uint32[4] -> Instruction."""
+    w0, buff, dram, size = (int(w) for w in np.asarray(words, np.uint32))
+    return Instruction(
+        opcode=Opcode(w0 & 0xF),
+        wino_flag=bool(w0 >> 4 & 1),
+        dataflow_ws=bool(w0 >> 5 & 1),
+        layout_out_wino=bool(w0 >> 6 & 1),
+        relu_flag=bool(w0 >> 7 & 1),
+        m_tile=w0 >> 8 & 0xFF,
+        layer_id=w0 >> 16 & 0xFFFF,
+        buff_base=buff,
+        dram_base=dram,
+        size=size,
+    )
+
+
+def encode_stream(instrs: list[Instruction]) -> np.ndarray:
+    """-> uint32[n, 4] instruction memory image."""
+    if not instrs:
+        return np.zeros((0, 4), np.uint32)
+    return np.stack([i.encode() for i in instrs])
+
+
+def decode_stream(image: np.ndarray) -> list[Instruction]:
+    return [decode(row) for row in np.asarray(image, np.uint32).reshape(-1, 4)]

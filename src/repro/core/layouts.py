@@ -1,0 +1,81 @@
+"""Feature-map data layouts and the SAVE-side reorder transforms (Sec. 4.3).
+
+The paper defines two external-memory layouts (Figure 5):
+
+* ``SPAT`` — plain raster order. Here: NHWC.
+* ``WINO`` — tile-position-major order so that the Winograd load manager can
+  stream all tiles of one (tile-row, tile-col) position contiguously.
+  Here: (N, nh, nw, m, m, C) — output tiles of size m x m laid out tile-major.
+
+The SAVE module supports all four layout transforms (WINO-to-WINO,
+WINO-to-SPAT, SPAT-to-SPAT, SPAT-to-WINO) so successive layers may run in
+different CONV modes without a standalone reorder pass; the LOAD module only
+ever performs identity loads. ``runtime.py`` enforces exactly this contract.
+
+On TPU these transforms are XLA reshape/transposes — "free" when fused into
+the neighboring op, which is the same effect the paper achieves by folding the
+reorder into SAVE.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+SPAT = "spat"
+WINO = "wino"
+
+
+def _check_divisible(h: int, w: int, m: int):
+    if h % m or w % m:
+        raise ValueError(f"feature map {h}x{w} not divisible by tile size m={m}; "
+                         "pad before converting to WINO layout")
+
+
+def spat_to_wino(x_nhwc: jax.Array, m: int) -> jax.Array:
+    """NHWC -> (N, H/m, W/m, m, m, C) tile-major WINO layout."""
+    n, h, w, c = x_nhwc.shape
+    _check_divisible(h, w, m)
+    x = x_nhwc.reshape(n, h // m, m, w // m, m, c)
+    return x.transpose(0, 1, 3, 2, 4, 5)
+
+
+def wino_to_spat(x_tiled: jax.Array) -> jax.Array:
+    """(N, nh, nw, m, m, C) -> NHWC."""
+    n, nh, nw, m, m2, c = x_tiled.shape
+    assert m == m2
+    x = x_tiled.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(n, nh * m, nw * m, c)
+
+
+def save_transform(y_nhwc: jax.Array, to_layout: str, m: int) -> jax.Array:
+    """SAVE-side reorder: COMP always emits NHWC internally; SAVE writes the
+    layout the *next* layer's mode wants (the paper's 4 transform modes)."""
+    if to_layout == SPAT:
+        return y_nhwc
+    if to_layout == WINO:
+        n, h, w, c = y_nhwc.shape
+        ph, pw = (-h) % m, (-w) % m
+        if ph or pw:
+            y_nhwc = jnp.pad(y_nhwc, ((0, 0), (0, ph), (0, pw), (0, 0)))
+        return spat_to_wino(y_nhwc, m)
+    raise ValueError(to_layout)
+
+
+def load_view(x: jax.Array, layout: str, hw: tuple[int, int] | None = None) -> jax.Array:
+    """LOAD-side identity view back to NHWC for COMP.
+
+    ``hw`` crops padding introduced by save_transform for non-divisible maps.
+    """
+    if layout == SPAT:
+        return x
+    if layout == WINO:
+        y = wino_to_spat(x)
+        if hw is not None:
+            y = y[:, :hw[0], :hw[1], :]
+        return y
+    raise ValueError(layout)
+
+
+def layout_for_mode(mode: str) -> str:
+    """The layout a layer's LOAD manager wants given its CONV mode."""
+    return WINO if mode == "wino" else SPAT

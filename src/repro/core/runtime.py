@@ -1,0 +1,239 @@
+"""Light-weight runtime: executes a HybridDNN instruction stream (Sec. 3 (4)).
+
+A functional interpreter of the 128-bit ISA. It models the accelerator's
+on-chip state — ping-pong input/weight buffers, a bias buffer and the
+accumulating output buffer — and enforces the handshake-FIFO hazard
+discipline of Sec. 4.1: COMP validates that the buffer slots it addresses
+hold the (layer, group) data its operands require (the "wait for the
+producer's token"), and SAVE validates that every block it flushes was
+produced (the "consumer token" on the COMP->SAVE FIFO). A mis-scheduled
+stream — LOAD overwriting a live slot, COMP before its LOADs, SAVE before
+COMP — raises ``HazardError`` rather than silently computing garbage.
+
+DRAM is a word-addressed store (dict base-address -> tensor). Winograd-mode
+weights live in DRAM pre-transformed to U-space (Sec. 4.2.3), so LOAD_WGT
+traffic matches Eq. 9. The SAVE stage applies the layout reorder for the next
+layer's mode (Sec. 4.3) once the layer's last block lands.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import layouts
+from repro.core.compiler import CompiledLayer, Program
+from repro.core.hybrid_conv import hybrid_conv2d
+from repro.core.isa import Instruction, Opcode
+from repro.core.winograd import (
+    pt_for,
+    transform_weights,
+    winograd_apply_pretransformed,
+)
+
+
+class HazardError(RuntimeError):
+    """Instruction-stream hazard: the handshake FIFO discipline was violated."""
+
+
+@dataclasses.dataclass
+class _Slot:
+    tag: tuple | None = None
+    data: Any = None
+
+
+class HybridRuntime:
+    """Executes a compiled Program against DRAM-resident params and input."""
+
+    def __init__(self, program: Program, use_pallas: bool = False,
+                 interpret: bool | None = None):
+        self.program = program
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+        self.dram: dict[int, Any] = {}
+        # pipeline statistics (4-stage pipeline occupancy model)
+        self.stats = {"load_inp": 0, "load_wgt": 0, "load_bias": 0,
+                      "comp": 0, "save": 0,
+                      "inp_words": 0, "wgt_words": 0}
+
+    # -- DRAM management ----------------------------------------------------
+    def load_params(self, params: list[tuple[Any, Any]]):
+        """params: [(w_rsck, bias), ...] per layer. Winograd layers store U."""
+        for cl, (w, b) in zip(self.program.layers, params):
+            if cl.plan.mode == "wino":
+                assert cl.spec.r == 3 and cl.spec.s == 3, \
+                    "runtime pre-transform supports r=s=3 (VGG family)"
+                self.dram[cl.wgt_addr] = transform_weights(w, cl.plan.m)
+            else:
+                self.dram[cl.wgt_addr] = w
+            self.dram[cl.bias_addr] = b
+
+    def write_input(self, x_nhwc):
+        cl0 = self.program.layers[0]
+        if cl0.inp_layout == "wino":
+            x_nhwc = layouts.save_transform(x_nhwc, "wino", cl0.plan.m)
+        self.dram[cl0.inp_addr] = x_nhwc
+
+    # -- execution ----------------------------------------------------------
+    def run(self, x_nhwc=None):
+        if x_nhwc is not None:
+            self.write_input(x_nhwc)
+        inp_slots = [_Slot(), _Slot()]
+        wgt_slots = [_Slot(), _Slot()]
+        bias_buf = _Slot()
+        out_blocks: dict[tuple[int, int], Any] = {}
+        cur_layer = -1
+        staging = None           # NHWC assembly of the current layer's output
+
+        for ins in self.program.instructions:
+            cl = self.program.layers[ins.layer_id]
+            if ins.layer_id != cur_layer:
+                if cur_layer >= 0:
+                    self._flush_layer(self.program.layers[cur_layer], staging,
+                                      out_blocks)
+                cur_layer = ins.layer_id
+                staging = None
+                out_blocks = {}
+
+            op = ins.opcode
+            if op == Opcode.LOAD_BIAS:
+                bias_buf = _Slot((ins.layer_id,), self.dram[ins.dram_base])
+                self.stats["load_bias"] += 1
+            elif op == Opcode.LOAD_INP:
+                ih, slot = ins.buff_base >> 1, ins.buff_base & 1
+                data = self._load_input_group(cl, ih)
+                inp_slots[slot] = _Slot((ins.layer_id, ih), data)
+                self.stats["load_inp"] += 1
+                self.stats["inp_words"] += ins.size
+            elif op == Opcode.LOAD_WGT:
+                kg, slot = ins.buff_base >> 1, ins.buff_base & 1
+                lo, hi = cl.k_groups[kg]
+                w = self.dram[ins.dram_base][..., lo:hi]
+                wgt_slots[slot] = _Slot((ins.layer_id, kg), w)
+                self.stats["load_wgt"] += 1
+                self.stats["wgt_words"] += ins.size
+            elif op == Opcode.COMP:
+                ih = ins.size & 0xFFF
+                kg = (ins.size >> 12) & 0xFFF
+                islot = (ins.size >> 24) & 1
+                wslot = (ins.size >> 25) & 1
+                if inp_slots[islot].tag != (ins.layer_id, ih):
+                    raise HazardError(
+                        f"COMP L{ins.layer_id} row-group {ih}: input slot "
+                        f"{islot} holds {inp_slots[islot].tag}")
+                if wgt_slots[wslot].tag != (ins.layer_id, kg):
+                    raise HazardError(
+                        f"COMP L{ins.layer_id} k-group {kg}: weight slot "
+                        f"{wslot} holds {wgt_slots[wslot].tag}")
+                if bias_buf.tag != (ins.layer_id,):
+                    raise HazardError(f"COMP L{ins.layer_id}: stale bias buffer")
+                blk = self._compute(cl, inp_slots[islot].data,
+                                    wgt_slots[wslot].data,
+                                    bias_buf.data, ih, kg, ins)
+                out_blocks[(ih, kg)] = blk
+                self.stats["comp"] += 1
+            elif op == Opcode.SAVE:
+                ih = ins.size & 0xFFF
+                kg = (ins.size >> 12) & 0xFFF
+                ho, wo = cl.spec.out_hw
+                if staging is None:
+                    n = self._batch(cl)
+                    staging = jnp.zeros((n, ho, wo, cl.spec.k),
+                                        self._dtype(cl))
+                if cl.plan.dataflow == "is":
+                    # one SAVE per row group: all K groups must be computed
+                    need = [(ih, g) for g in range(len(cl.k_groups))]
+                else:
+                    need = [(ih, kg)]
+                for key in need:
+                    if key not in out_blocks:
+                        raise HazardError(
+                            f"SAVE L{ins.layer_id} block {key} not computed")
+                r0, r1 = cl.row_groups[ih]
+                if cl.plan.dataflow == "is":
+                    row = jnp.concatenate(
+                        [out_blocks.pop((ih, g)) for g in
+                         range(len(cl.k_groups))], axis=-1)
+                    staging = staging.at[:, r0:r1].set(row.astype(staging.dtype))
+                else:
+                    c0, c1 = cl.k_groups[kg]
+                    staging = staging.at[:, r0:r1, :, c0:c1].set(
+                        out_blocks.pop((ih, kg)).astype(staging.dtype))
+                self.stats["save"] += 1
+            else:
+                raise ValueError(op)
+
+        if cur_layer >= 0:
+            self._flush_layer(self.program.layers[cur_layer], staging,
+                              out_blocks)
+        last = self.program.layers[-1]
+        return self.dram[last.out_addr]
+
+    # -- helpers ------------------------------------------------------------
+    def _batch(self, cl: CompiledLayer) -> int:
+        x = self.dram[cl.inp_addr]
+        return x.shape[0]
+
+    def _dtype(self, cl: CompiledLayer):
+        return self.dram[cl.inp_addr].dtype
+
+    def _input_nhwc(self, cl: CompiledLayer):
+        x = self.dram[cl.inp_addr]
+        return layouts.load_view(x, cl.inp_layout, hw=(cl.spec.h, cl.spec.w))
+
+    def _load_input_group(self, cl: CompiledLayer, ih: int):
+        """Slice the input rows (plus halo) needed for output rows group ih."""
+        spec = cl.spec
+        x = self._input_nhwc(cl)
+        r0, r1 = cl.row_groups[ih]
+        pad = (spec.r - 1) // 2 if spec.padding.upper() == "SAME" else 0
+        in_lo = r0 * spec.stride - pad
+        in_hi = (r1 - 1) * spec.stride + spec.r - pad
+        pad_top = max(0, -in_lo)
+        pad_bot = max(0, in_hi - spec.h)
+        sl = x[:, max(0, in_lo):min(spec.h, in_hi)]
+        if pad_top or pad_bot:
+            sl = jnp.pad(sl, ((0, 0), (pad_top, pad_bot), (0, 0), (0, 0)))
+        return sl
+
+    def _compute(self, cl: CompiledLayer, x_slab, w_grp, bias, ih, kg, ins):
+        spec, plan = cl.spec, cl.plan
+        lo, hi = cl.k_groups[kg]
+        b_grp = bias[lo:hi]
+        # horizontal padding only: vertical halo is already materialized
+        pad_w = (spec.s - 1) // 2 if spec.padding.upper() == "SAME" else 0
+        padding = ((0, 0), (pad_w, spec.s - 1 - pad_w))
+        if plan.mode == "wino":
+            x_p = jnp.pad(x_slab, ((0, 0), (0, 0), padding[1], (0, 0)))
+            blk = winograd_apply_pretransformed(
+                x_p, w_grp, b_grp, plan.m, relu=ins.relu_flag,
+                padding="VALID", out_dtype=x_slab.dtype)
+        else:
+            blk = hybrid_conv2d(
+                x_slab, w_grp, b_grp, mode="spat", dataflow=plan.dataflow,
+                stride=spec.stride, relu=ins.relu_flag,
+                padding=[(0, 0), padding[1]] if spec.padding.upper() == "SAME"
+                else "VALID",
+                use_pallas=False)
+        r0, r1 = cl.row_groups[ih]
+        return blk[:, :r1 - r0]
+
+    def _flush_layer(self, cl: CompiledLayer, staging, out_blocks):
+        if out_blocks:
+            raise HazardError(
+                f"layer {cl.layer_id}: {len(out_blocks)} COMP blocks never SAVEd")
+        if staging is None:
+            raise HazardError(f"layer {cl.layer_id}: no SAVE executed")
+        if cl.out_layout == "wino":
+            self.dram[cl.out_addr] = layouts.save_transform(
+                staging, "wino", cl.out_m)
+        else:
+            self.dram[cl.out_addr] = staging
+
+
+def run_program(program: Program, params, x_nhwc, **kw):
+    rt = HybridRuntime(program, **kw)
+    rt.load_params(params)
+    return rt.run(x_nhwc)

@@ -1,0 +1,47 @@
+"""Shared helpers for Pallas TPU kernels.
+
+All kernels in this package are written against the TPU backend
+(``pl.pallas_call`` with explicit ``BlockSpec`` VMEM tiling) and validated on
+CPU with ``interpret=True``.  ``INTERPRET`` flips interpret mode globally so the
+whole test-suite runs on the CPU container while the lowering path stays
+TPU-shaped.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+# Interpret unless we are actually on TPU hardware.
+INTERPRET = jax.default_backend() != "tpu"
+
+# TPU hardware constants (v5e) used for block-shape heuristics.
+LANE = 128          # last-dim tiling (VREG lane count, MXU edge)
+SUBLANE = 8         # second-to-last dim tiling for fp32
+VMEM_BYTES = 128 * 1024 * 1024  # per-core VMEM budget (v5e ~128MB)
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def pad_to(x: jax.Array, axis: int, multiple: int, value=0.0) -> jax.Array:
+    """Zero-pad ``x`` along ``axis`` up to the next multiple of ``multiple``."""
+    size = x.shape[axis]
+    target = round_up(size, multiple)
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+@functools.lru_cache(None)
+def is_cpu() -> bool:
+    return jax.default_backend() == "cpu"

@@ -1,0 +1,10 @@
+"""Blocked online-softmax attention (TPU Pallas), for 32k-prefill cells.
+
+Not part of the paper (HybridDNN is a CNN framework) but required by the
+assigned LM architectures: attention is their dominant compute hot-spot and
+gets the same treatment the paper gives CONV — a VMEM-tiled kernel on the
+shared-MXU engine.
+"""
+from repro.kernels.flash_attention.ops import flash_attention
+
+__all__ = ["flash_attention"]

@@ -1,0 +1,48 @@
+"""Jitted public wrapper: padding, GQA head expansion, block selection."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import round_up
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(
+    q: jax.Array,   # (B, H, Sq, D)
+    k: jax.Array,   # (B, Hkv, Skv, D)
+    v: jax.Array,   # (B, Hkv, Skv, D)
+    *,
+    causal: bool = True,
+    bq: int = 256,
+    bk: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert h % hkv == 0
+    if hkv != h:  # GQA: expand KV heads
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+
+    bq = min(bq, round_up(sq, 8))
+    bk = min(bk, round_up(skv, 8))
+    sqp, skvp = round_up(sq, bq), round_up(skv, bk)
+    qf = q.reshape(b * h, sq, d)
+    kf = k.reshape(b * h, skv, d)
+    vf = v.reshape(b * h, skv, d)
+    if sqp != sq:
+        qf = jnp.pad(qf, ((0, 0), (0, sqp - sq), (0, 0)))
+    if skvp != skv:
+        # padded KV columns are masked in-kernel past kv_len
+        kf = jnp.pad(kf, ((0, 0), (0, skvp - skv), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, skvp - skv), (0, 0)))
+
+    o = flash_attention_kernel(
+        qf, kf, vf, bq=bq, bk=bk, causal=causal,
+        scale=d ** -0.5, kv_len=skv, interpret=interpret)
+    return o[:, :sq].reshape(b, h, sq, d)

@@ -1,0 +1,10 @@
+"""The shared PE: a batched, blocked Pallas GEMM with IS/WS dataflows.
+
+This is the TPU analog of the paper's ``PT x PT`` array of ``PI x PO`` GEMM
+cores (Sec. 4.2.2): the leading grid axis ranges over the PT^2 independent
+GEMMs of the Winograd formulation (Eq. 2); Spatial convolution and every
+transformer matmul use the same kernel with a singleton leading axis.
+"""
+from repro.kernels.gemm.ops import batched_matmul, matmul
+
+__all__ = ["batched_matmul", "matmul"]

@@ -1,0 +1,71 @@
+"""Jitted public wrappers around the batched GEMM Pallas kernel.
+
+Handles padding to block multiples, block-shape selection (the PI/PO/PT
+parallel-factor analog: MXU wants the last dim a multiple of 128 and the
+second-to-last a multiple of 8), and un-padding of the result.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import LANE, SUBLANE, cdiv, round_up
+from repro.kernels.gemm.kernel import batched_matmul_kernel
+
+
+def pick_block_shapes(m: int, k: int, n: int) -> tuple[int, int, int]:
+    """Choose (bm, bk, bn) hardware-aligned block shapes.
+
+    Heuristic mirrors the paper's DSE Step (1): grow parallel factors until the
+    VMEM working set would be exceeded. Working set per step is
+    bm*bk + bk*bn + bm*bn fp32 words; we stay well under VMEM with margin for
+    double buffering.
+    """
+    bm = min(round_up(m, SUBLANE), 512)
+    bn = min(round_up(n, LANE), 512)
+    bk = min(round_up(k, LANE), 512)
+    return bm, bk, bn
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "dataflow", "out_dtype", "interpret"),
+)
+def batched_matmul(
+    a: jax.Array,              # (G, M, K)
+    b: jax.Array,              # (G, K, N)
+    *,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+    dataflow: str = "is",
+    out_dtype=jnp.float32,
+    interpret: bool | None = None,
+) -> jax.Array:
+    g, m, k = a.shape
+    _, _, n = b.shape
+    dbm, dbk, dbn = pick_block_shapes(m, k, n)
+    bm = bm or dbm
+    bn = bn or dbn
+    bk = bk or dbk
+
+    mp, kp, np_ = round_up(m, bm), round_up(k, bk), round_up(n, bn)
+    if (mp, kp) != (m, k):
+        a = jnp.pad(a, ((0, 0), (0, mp - m), (0, kp - k)))
+    if (kp, np_) != (k, n):
+        b = jnp.pad(b, ((0, 0), (0, kp - k), (0, np_ - n)))
+
+    out = batched_matmul_kernel(
+        a, b, bm=bm, bn=bn, bk=bk, dataflow=dataflow,
+        out_dtype=out_dtype, interpret=interpret,
+    )
+    if (mp, np_) != (m, n):
+        out = out[:, :m, :n]
+    return out
+
+
+def matmul(a: jax.Array, b: jax.Array, **kw) -> jax.Array:
+    """2-D convenience wrapper: (M, K) @ (K, N)."""
+    return batched_matmul(a[None], b[None], **kw)[0]

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the batched GEMM kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def batched_matmul_ref(a: jax.Array, b: jax.Array, out_dtype=jnp.float32) -> jax.Array:
+    """(G, M, K) @ (G, K, N) -> (G, M, N), fp32 accumulation."""
+    out = jnp.einsum(
+        "gmk,gkn->gmn",
+        a.astype(jnp.float32),
+        b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(out_dtype)
+
+
+def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=jnp.float32) -> jax.Array:
+    return batched_matmul_ref(a[None], b[None], out_dtype)[0]

@@ -1,0 +1,9 @@
+"""Spatial (direct) convolution on the shared GEMM PE.
+
+The paper's Spatial mode merges all GEMM cores into one large broadcast array
+(Sec. 4.2.2) — here: im2col patch extraction followed by the *same*
+``kernels/gemm`` Pallas kernel with a singleton leading batch (PT^2 = 1).
+"""
+from repro.kernels.spatial_conv.ops import spatial_conv2d
+
+__all__ = ["spatial_conv2d"]

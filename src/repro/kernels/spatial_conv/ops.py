@@ -1,0 +1,65 @@
+"""Spatial convolution = im2col + the shared GEMM PE (+ fused epilogue).
+
+im2col is the LOAD manager's Spatial-mode addressing (Sec. 4.2.3: "directly
+loads input feature maps and broadcasts them to the PE"): an XLA gather that
+produces the (T, R*S*C) patch matrix; the matmul against (R*S*C, K) reshaped
+weights runs on ``kernels/gemm`` with leading batch 1 (all GEMM cores merged
+into one broadcast array, Sec. 4.2.2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.common import LANE, SUBLANE, round_up
+from repro.kernels.gemm.kernel import batched_matmul_kernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("stride", "padding", "relu", "dataflow", "out_dtype", "interpret"),
+)
+def spatial_conv2d(
+    x_nhwc: jax.Array,
+    g_rsck: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    relu: bool = False,
+    dataflow: str = "is",
+    out_dtype=None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    out_dtype = out_dtype or x_nhwc.dtype
+    n, h, w, c = x_nhwc.shape
+    r, s, _, k = g_rsck.shape
+    if bias is None:
+        bias = jnp.zeros((k,), jnp.float32)
+
+    # im2col: (N, HO, WO, C*R*S), feature dim ordered channel-major (C, R, S)
+    patches = lax.conv_general_dilated_patches(
+        x_nhwc, filter_shape=(r, s), window_strides=(stride, stride),
+        padding=padding, dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    _, ho, wo, crs = patches.shape
+    t = n * ho * wo
+    a = patches.reshape(t, crs)                                # (T, C*R*S)
+    # match the channel-major patch ordering: (R,S,C,K) -> (C,R,S,K)
+    b = g_rsck.transpose(2, 0, 1, 3).reshape(crs, k)
+
+    bm = min(round_up(t, SUBLANE), 256)
+    bk_ = min(round_up(crs, LANE), 512)
+    bn = min(round_up(k, LANE), 256)
+    tp, crsp, kp = round_up(t, bm), round_up(crs, bk_), round_up(k, bn)
+    a = jnp.pad(a, ((0, tp - t), (0, crsp - crs)))[None]
+    b = jnp.pad(b, ((0, crsp - crs), (0, kp - k)))[None]
+    bias_p = jnp.pad(bias.astype(jnp.float32), (0, kp - k))[None]
+
+    y = batched_matmul_kernel(
+        a, b, bias_p, bm=bm, bn=bn, bk=bk_, dataflow=dataflow, relu=relu,
+        out_dtype=jnp.float32, interpret=interpret)[0]          # (Tp, Kp)
+    y = y[:t, :k].reshape(n, ho, wo, k)
+    return y.astype(out_dtype)

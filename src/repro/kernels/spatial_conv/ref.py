@@ -1,0 +1,26 @@
+"""Direct-convolution oracle for the spatial kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def spatial_conv2d_ref(
+    x_nhwc: jax.Array,
+    g_rsck: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    relu: bool = False,
+) -> jax.Array:
+    y = lax.conv_general_dilated(
+        x_nhwc.astype(jnp.float32), g_rsck.astype(jnp.float32),
+        (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y.astype(x_nhwc.dtype)

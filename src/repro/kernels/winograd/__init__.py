@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the Winograd input/output transforms.
+
+The paper's load manager performs the online ``B^T d B`` input transform and
+the save manager the ``A^T M A`` output transform (Sec. 4.2.3). Here each is a
+Pallas kernel blocked over (tiles x channels); the EWMM-as-GEMM middle stage
+is the shared ``kernels/gemm`` PE with leading batch PT^2.
+"""
+from repro.kernels.winograd.ops import (
+    input_transform,
+    output_transform,
+    winograd_conv2d,
+)
+
+__all__ = ["input_transform", "output_transform", "winograd_conv2d"]

@@ -1,0 +1,156 @@
+"""Jitted Winograd convolution assembled from Pallas stages.
+
+Pipeline (the paper's COMP-module datapath, Sec. 4.2):
+
+  tile extract (XLA gather)           — LOAD manager addressing
+  -> input_transform  (Pallas)        — LOAD manager online B^T d B
+  -> batched GEMM, batch PT^2 (Pallas, kernels/gemm) — the PE, Eq. 2
+  -> output_transform (Pallas, fused bias+ReLU)      — SAVE manager A^T M A
+  -> tile scatter (XLA reshape)       — SAVE manager layout write
+
+Weights are transformed offline (``transform_weights``), matching Sec. 4.2.3.
+Kernels with R, S > 3 use the paper's kernel-decomposition (Sec. 4.2.5).
+``dataflow`` ("is"/"ws") is forwarded to the GEMM grid order.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.winograd import (
+    R_WINO,
+    decompose_kernel,
+    pt_for,
+    tile_input,
+    transform_weights,
+)
+from repro.kernels.common import LANE, SUBLANE, round_up
+from repro.kernels.gemm.kernel import batched_matmul_kernel
+from repro.kernels.winograd.kernel import (
+    input_transform_kernel,
+    output_transform_kernel,
+)
+
+
+def _pick_tile_blocks(t: int, c: int, k: int) -> tuple[int, int, int]:
+    """(bt, bc, bk): tile-block, channel blocks. MXU-aligned where possible."""
+    bt = min(round_up(t, SUBLANE), 256)
+    bc = min(round_up(c, LANE), 256)
+    bk = min(round_up(k, LANE), 256)
+    return bt, bc, bk
+
+
+def _wino_conv_piece(x, u_flat, m, t_blocks, out_dtype, dataflow, interpret):
+    """One r x r sub-kernel's Winograd conv. x already padded+shifted.
+
+    u_flat: (PT^2, Cp, Kp) transformed weights (already channel-padded).
+    Returns M-space output (PT^2, T, Kp) accumulated later, plus tile geometry.
+    """
+    tiles, (nh, nw) = tile_input(x, m)
+    n = x.shape[0]
+    pt = pt_for(m)
+    c = tiles.shape[-1]
+    t = n * nh * nw
+    bt, bc, bk = t_blocks
+    tp, cp = round_up(t, bt), round_up(c, bc)
+    tiles = tiles.reshape(t, pt, pt, c)
+    if (tp, cp) != (t, c):
+        tiles = jnp.pad(tiles, ((0, tp - t), (0, 0), (0, 0), (0, cp - c)))
+    v = input_transform_kernel(tiles, m=m, bt=bt, bc=bc,
+                               out_dtype=jnp.float32, interpret=interpret)
+    mm = batched_matmul_kernel(
+        v, u_flat, bm=bt, bn=bk, bk=bc, dataflow=dataflow,
+        out_dtype=jnp.float32, interpret=interpret)        # (PT^2, Tp, Kp)
+    return mm, (n, nh, nw, t, tp)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m", "padding", "relu", "dataflow", "out_dtype", "interpret"),
+)
+def winograd_conv2d(
+    x_nhwc: jax.Array,
+    g_rsck: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    m: int = 4,
+    padding: str = "SAME",
+    relu: bool = False,
+    dataflow: str = "is",
+    out_dtype=None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Winograd F(m x m, 3 x 3) convolution, stride 1, NHWC/HWIO."""
+    out_dtype = out_dtype or x_nhwc.dtype
+    n, h, w, c = x_nhwc.shape
+    rr, ss, _, k = g_rsck.shape
+    if bias is None:
+        bias = jnp.zeros((k,), jnp.float32)
+
+    if padding.upper() == "SAME":
+        ph, pw = (rr - 1) // 2, (ss - 1) // 2
+        pad = ((ph, rr - 1 - ph), (pw, ss - 1 - pw))
+    elif padding.upper() == "VALID":
+        pad = ((0, 0), (0, 0))
+    else:
+        raise ValueError(padding)
+    x = jnp.pad(x_nhwc, ((0, 0), pad[0], pad[1], (0, 0)))
+    ho, wo = x.shape[1] - rr + 1, x.shape[2] - ss + 1
+
+    if (rr, ss) == (R_WINO, R_WINO):
+        pieces = [(0, 0, g_rsck)]
+    else:
+        pieces = decompose_kernel(g_rsck, m)
+        x = jnp.pad(x, ((0, 0),
+                        (0, (-(-rr // R_WINO)) * R_WINO - rr),
+                        (0, (-(-ss // R_WINO)) * R_WINO - ss),
+                        (0, 0)))
+
+    # geometry is identical across pieces; block sizes from the first
+    t_est = n * (-(-ho // m)) * (-(-wo // m))
+    bt, bc, bk = _pick_tile_blocks(t_est, c, k)
+    cp, kp = round_up(c, bc), round_up(k, bk)
+    pt = pt_for(m)
+
+    m_acc = None
+    geom = None
+    for (oh, ow, sub) in pieces:
+        u = transform_weights(sub, m).astype(jnp.float32)  # (PT, PT, C, K)
+        u = u.reshape(pt * pt, c, k)
+        if (cp, kp) != (c, k):
+            u = jnp.pad(u, ((0, 0), (0, cp - c), (0, kp - k)))
+        xs = x[:, oh:oh + ho + R_WINO - 1, ow:ow + wo + R_WINO - 1, :]
+        mm, geom = _wino_conv_piece(xs, u, m, (bt, bc, bk), out_dtype,
+                                    dataflow, interpret)
+        m_acc = mm if m_acc is None else m_acc + mm       # accumulate in M-space
+    n_, nh, nw, t, tp = geom
+
+    bias_p = jnp.pad(bias.astype(jnp.float32), (0, kp - k))
+    y = output_transform_kernel(m_acc, bias_p, m=m, bt=bt, bk=bk, relu=relu,
+                                out_dtype=jnp.float32, interpret=interpret)
+    y = y[:t].reshape(n_, nh, nw, m, m, kp).transpose(0, 1, 3, 2, 4, 5)
+    y = y.reshape(n_, nh * m, nw * m, kp)[:, :ho, :wo, :k]
+    return y.astype(out_dtype)
+
+
+def input_transform(tiles, m, **kw):
+    """Padded public wrapper for the input-transform Pallas kernel."""
+    t, pt, _, c = tiles.shape
+    bt, bc, _ = _pick_tile_blocks(t, c, c)
+    tp, cp = round_up(t, bt), round_up(c, bc)
+    tiles = jnp.pad(tiles, ((0, tp - t), (0, 0), (0, 0), (0, cp - c)))
+    v = input_transform_kernel(tiles, m=m, bt=bt, bc=bc, **kw)
+    return v[:, :t, :c]
+
+
+def output_transform(m_arr, bias, m, relu=False, **kw):
+    """Padded public wrapper for the output-transform Pallas kernel."""
+    pt2, t, k = m_arr.shape
+    bt, _, bk = _pick_tile_blocks(t, k, k)
+    tp, kp = round_up(t, bt), round_up(k, bk)
+    m_arr = jnp.pad(m_arr, ((0, 0), (0, tp - t), (0, kp - k)))
+    bias_p = jnp.pad(bias.astype(jnp.float32), (0, kp - k))
+    y = output_transform_kernel(m_arr, bias_p, m=m, bt=bt, bk=bk, relu=relu, **kw)
+    return y[:t, :, :, :k]

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Winograd transform kernels and full conv."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.winograd import (
+    pt_for,
+    transform_matrices,
+    winograd_conv2d_reference,
+)
+
+
+def input_transform_ref(tiles: jax.Array, m: int, out_dtype=jnp.float32) -> jax.Array:
+    """(T, PT, PT, C) -> (PT^2, T, C)."""
+    bt, _, _ = transform_matrices(m, jnp.float32)
+    t, pt, _, c = tiles.shape
+    v = jnp.einsum("ip,tpqc,jq->ijtc", bt, tiles.astype(jnp.float32), bt)
+    return v.reshape(pt * pt, t, c).astype(out_dtype)
+
+
+def output_transform_ref(m_arr: jax.Array, bias: jax.Array, m: int,
+                         relu: bool = False, out_dtype=jnp.float32) -> jax.Array:
+    """(PT^2, T, K), (K,) -> (T, m, m, K)."""
+    _, _, at = transform_matrices(m, jnp.float32)
+    pt = pt_for(m)
+    pt2, t, k = m_arr.shape
+    mm = m_arr.astype(jnp.float32).reshape(pt, pt, t, k)
+    y = jnp.einsum("ip,pqtk,jq->tijk", at, mm, at)
+    y = y + bias.astype(jnp.float32).reshape(1, 1, 1, k)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y.astype(out_dtype)
+
+
+def conv2d_ref(x_nhwc: jax.Array, g_rsck: jax.Array, padding="SAME",
+               bias: jax.Array | None = None, relu: bool = False,
+               stride: int = 1) -> jax.Array:
+    """Direct convolution oracle (lax.conv), fp32 accumulation."""
+    y = lax.conv_general_dilated(
+        x_nhwc.astype(jnp.float32), g_rsck.astype(jnp.float32),
+        (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y.astype(x_nhwc.dtype)
+
+
+winograd_conv2d_ref = winograd_conv2d_reference

@@ -1,0 +1,317 @@
+"""Roofline-term extraction from compiled HLO (post-SPMD-partitioning).
+
+XLA's ``cost_analysis()`` visits a ``while`` body ONCE (scan trip counts are
+not applied), so for scan-over-layers models we parse the optimized HLO text
+ourselves:
+
+* FLOPs        — every ``dot``/``convolution`` op: 2 * prod(result shape) *
+                 contraction size, scaled by the enclosing loop's trip count.
+* HBM bytes    — per top-level op: operand bytes + result bytes (post-fusion
+                 accounting, matching HloCostAnalysis), scaled likewise.
+* Collective bytes — ``all-reduce``/``all-gather``/``reduce-scatter``/
+                 ``all-to-all``/``collective-permute`` (+ ``-start``
+                 variants): max(operand, result) bytes, scaled likewise.
+
+Loop attribution: computations reachable (via ``body=``/``to_apply=``/
+``calls=``/fusion) from a ``while`` body get the ``trip_count`` multiplier.
+
+Everything is PER-PARTITION (the HLO is the single SPMD program), i.e.
+per-chip — exactly what the roofline terms want.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]"
+    r"(?:\{[^}]*\})?)\s*([\w\-]+)\((.*)$")
+_CALL_ATTR_RE = re.compile(
+    r"(?:body|condition|to_apply|calls)=\s*%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%?([\w.\-]+)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of 'bf16[2,3]{1,0}' or a tuple '(f32[2], s32[])'."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str           # operand list + attributes (raw tail of the line)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list[Op]
+    symbols: dict[str, str]   # op name -> type string
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        ls = line.strip()
+        if (ls.startswith("%") or ls.startswith("ENTRY")) and ls.endswith("{"):
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-]+)", ls)
+            cur = Computation(m.group(1), [], {})
+            comps[cur.name] = cur
+            continue
+        if ls.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, rest = m.groups()
+        cur.ops.append(Op(name, type_str, opcode, rest))
+        cur.symbols[name] = type_str
+    return comps
+
+
+def _loop_multipliers(comps: dict[str, Computation],
+                      trip_count: int) -> dict[str, int]:
+    """computation name -> multiplier (trip_count if inside a while body)."""
+    # call edges
+    edges: dict[str, set[str]] = {c: set() for c in comps}
+    while_bodies: set[str] = set()
+    for cname, comp in comps.items():
+        for op in comp.ops:
+            for callee in _CALL_ATTR_RE.findall(op.rest):
+                if callee in comps:
+                    edges[cname].add(callee)
+                    if op.opcode == "while":
+                        while_bodies.add(callee)
+
+    mult = {c: 1 for c in comps}
+    # BFS from while bodies: everything reachable runs trip_count times
+    stack = list(while_bodies)
+    seen = set()
+    while stack:
+        c = stack.pop()
+        if c in seen:
+            continue
+        seen.add(c)
+        mult[c] = trip_count
+        stack.extend(edges.get(c, ()))
+    return mult
+
+
+def _operand_names(comp: Computation, op: Op) -> list[str]:
+    """Operand op-names: tokens in rest up to the first attr (=)."""
+    depth = 0
+    args = ""
+    for ch in op.rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        args += ch
+    names = []
+    for tok in args.split(","):
+        tok = tok.strip()
+        m = re.match(r"%?([\w.\-]+)$", tok)
+        if m and m.group(1) in comp.symbols:
+            names.append(m.group(1))
+    return names
+
+
+def _dot_flops(comp: Computation, op: Op) -> float:
+    out_dims = _shape_dims(op.type_str)
+    out_elems = math.prod(out_dims) if out_dims else 1
+    ops_ = _operand_names(comp, op)
+    contract = 1
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    if m and ops_:
+        lhs_dims = _shape_dims(comp.symbols[ops_[0]])
+        for d in (m.group(1).split(",") if m.group(1) else []):
+            contract *= lhs_dims[int(d)]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(comp: Computation, op: Op) -> float:
+    out_dims = _shape_dims(op.type_str)
+    out_elems = math.prod(out_dims) if out_dims else 1
+    ops_ = _operand_names(comp, op)
+    if len(ops_) < 2:
+        return 0.0
+    k_dims = _shape_dims(comp.symbols[ops_[1]])
+    m = re.search(r"dim_labels=[^\s,]*_([0-9a-z]+)->", op.rest)
+    kernel_contract = 1
+    if m and k_dims:
+        labels = m.group(1)          # e.g. '01io'
+        for i, lab in enumerate(labels):
+            if lab != "o":           # all kernel dims except output feature
+                kernel_contract *= k_dims[i]
+    else:
+        kernel_contract = math.prod(k_dims[:-1]) if k_dims else 1
+    feature_group = 1
+    fg = re.search(r"feature_group_count=(\d+)", op.rest)
+    if fg:
+        feature_group = int(fg.group(1))
+    return 2.0 * out_elems * kernel_contract / max(1, feature_group)
+
+
+@dataclasses.dataclass
+class HLOStats:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    collective_counts: dict = dataclasses.field(default_factory=dict)
+
+
+def _scan_aware_bytes(type_str: str, m: int, trip: int) -> int:
+    """Bytes of a tensor touched per loop iteration: a stacked scan
+    input/output (leading dim == trip inside a x-trip computation) is
+    dynamic-sliced — only 1/trip of it moves per iteration."""
+    b = _shape_bytes(type_str)
+    if m == trip > 1:
+        dims = _shape_dims(type_str)
+        if dims and dims[0] == trip:
+            return b // trip
+    return b
+
+
+def analyze_hlo(text: str, trip_count: int = 1) -> HLOStats:
+    comps = parse_hlo(text)
+    mult = _loop_multipliers(comps, trip_count)
+    st = HLOStats()
+    skip_opcodes = {"parameter", "constant", "tuple", "get-tuple-element",
+                    "bitcast", "while", "call", "conditional"}
+    # computations whose ops are accounted at their caller's boundary
+    sub_comps: set[str] = set()
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode in ("fusion", "reduce", "scatter", "sort", "map",
+                             "reduce-window", "select-and-scatter"):
+                for callee in _CALL_ATTR_RE.findall(op.rest):
+                    sub_comps.add(callee)
+    for cname, comp in comps.items():
+        if cname in sub_comps:
+            continue
+        m = mult[cname]
+        for op in comp.ops:
+            if op.opcode in skip_opcodes:
+                continue
+            out_b = _scan_aware_bytes(op.type_str, m, trip_count)
+            operands = _operand_names(comp, op)
+            if op.opcode == "dynamic-slice":
+                # touches only the slice, not the full operand (a scan
+                # carrying a stacked KV cache would otherwise count the
+                # whole cache once per layer: ~64x overcount on decode)
+                in_b = out_b
+            elif op.opcode == "dynamic-update-slice":
+                # in-place read-modify-write of the update region
+                upd = (_shape_bytes(comp.symbols[operands[1]])
+                       if len(operands) > 1 else 0)
+                in_b = upd
+                out_b = upd
+            elif op.opcode in ("gather", "scatter"):
+                in_b = out_b
+            else:
+                in_b = sum(_scan_aware_bytes(comp.symbols[o], m, trip_count)
+                           for o in operands)
+            if op.opcode == "fusion":
+                # fused computation's ops are internal; count boundary only —
+                # but a fusion PARAMETER consumed solely by an internal
+                # dynamic-slice touches only the slice (stacked-cache reads)
+                callee = _CALL_ATTR_RE.search(op.rest)
+                fc = comps.get(callee.group(1)) if callee else None
+                if fc is not None:
+                    in_b = sum(_scan_aware_bytes(comp.symbols[o], m,
+                                                 trip_count)
+                               for o in operands)
+                    for fop in fc.ops:
+                        if fop.opcode == "dot":
+                            st.flops += m * _dot_flops(fc, fop)
+                        elif fop.opcode == "convolution":
+                            st.flops += m * _conv_flops(fc, fop)
+                st.bytes_accessed += m * (out_b + in_b)
+                continue
+            st.bytes_accessed += m * (out_b + in_b)
+            if op.opcode == "dot":
+                st.flops += m * _dot_flops(comp, op)
+            elif op.opcode == "convolution":
+                st.flops += m * _conv_flops(comp, op)
+            base = op.opcode.removesuffix("-start").removesuffix("-done")
+            if base in COLLECTIVES and not op.opcode.endswith("-done"):
+                b = max(out_b, in_b)
+                st.collective_bytes += m * b
+                st.collective_counts[base] = \
+                    st.collective_counts.get(base, 0) + m
+    # fused computations are counted via their fusion op; avoid double count:
+    # (we never iterate into callee comps for bytes — only entry + bodies are
+    # top-level; called comps still appear in `comps`, subtract their direct
+    # contributions)
+    return st
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes: float
+    collective_bytes: float
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+
+def roofline_from_stats(st: HLOStats, n_chips: int = 1) -> Roofline:
+    """Terms are already per-chip (SPMD program == one partition)."""
+    return Roofline(
+        compute_s=st.flops / PEAK_FLOPS,
+        memory_s=st.bytes_accessed / HBM_BW,
+        collective_s=st.collective_bytes / ICI_BW,
+        flops=st.flops, bytes=st.bytes_accessed,
+        collective_bytes=st.collective_bytes)

@@ -1,0 +1,65 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` returns (step_kind, arg-specs dict); together
+with ``abstract_params`` these are everything ``.lower()`` needs — the
+weak-type-correct, shardable pattern for compile-only dry-runs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeSpec
+from repro.train import steps
+
+
+def abstract_params(cfg: ModelConfig):
+    """Param ShapeDtypeStructs via eval_shape — no allocation."""
+    return jax.eval_shape(
+        lambda: steps.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        lambda: steps.init_cache(cfg, batch, max_len))
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Model-input ShapeDtypeStructs for one (arch x shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = cfg.jnp_dtype
+    if shape.kind == "train":
+        batch = {"tokens": _sds((b, s), jnp.int32),
+                 "targets": _sds((b, s), jnp.int32)}
+        if cfg.family == "vlm":
+            batch["image_embeds"] = _sds((b, cfg.n_image_tokens, cfg.d_model), dt)
+        if cfg.family == "audio":
+            batch["frames"] = _sds((b, cfg.n_audio_frames, cfg.d_model), dt)
+        return batch
+    if shape.kind == "prefill":
+        extras = {}
+        if cfg.family == "vlm":
+            extras["image_embeds"] = _sds((b, cfg.n_image_tokens, cfg.d_model), dt)
+        if cfg.family == "audio":
+            extras["enc_out"] = _sds((b, cfg.n_audio_frames, cfg.d_model), dt)
+        return {"tokens": _sds((b, s), jnp.int32),
+                "cache": abstract_cache(cfg, b, s),
+                "extras": extras}
+    if shape.kind == "decode":
+        extras = {}
+        if cfg.family == "vlm":
+            extras["image_embeds"] = _sds((b, cfg.n_image_tokens, cfg.d_model), dt)
+        if cfg.family == "audio":
+            extras["enc_out"] = _sds((b, cfg.n_audio_frames, cfg.d_model), dt)
+        return {"token": _sds((b, 1), jnp.int32),
+                "cache": abstract_cache(cfg, b, s),
+                "pos": _sds((), jnp.int32),
+                "extras": extras}
+    raise ValueError(shape.kind)

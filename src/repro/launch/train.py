@@ -1,0 +1,133 @@
+"""Training entrypoint.
+
+On the CPU container this drives a REDUCED config end-to-end (the smoke /
+example path); on real hardware the same code runs the full config on the
+production mesh. Integrates: deterministic sharded data pipeline, jitted
+train step with in/out shardings, async checkpointing, heartbeat/straggler
+monitoring, and crash recovery (restart-from-latest).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-32b --reduced \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt_lib
+from repro.checkpoint.fault_tolerance import HeartbeatMonitor
+from repro.configs.base import get_config
+from repro.data.pipeline import DataConfig, batch_for_step
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.optim import adamw
+from repro.parallel.sharding import make_rules, param_shardings, use_rules
+from repro.train import steps as steps_lib
+
+
+def build(cfg, opt_cfg, mesh, seed=0):
+    rules = make_rules(mesh)
+    with use_rules(rules):
+        params = steps_lib.init_params(jax.random.PRNGKey(seed), cfg)
+        opt_state = adamw.init(params)
+    p_shard = param_shardings(params, rules)
+    params = jax.device_put(params, p_shard)
+    step_fn = steps_lib.make_train_step(cfg, opt_cfg)
+
+    def wrapped(params, opt_state, batch):
+        with use_rules(rules):
+            return step_fn(params, opt_state, batch)
+
+    jitted = jax.jit(wrapped, donate_argnums=(0, 1))
+    return params, opt_state, jitted, rules
+
+
+def extras_for(cfg, batch_rows, rng):
+    out = {}
+    if cfg.family == "vlm":
+        out["image_embeds"] = rng.standard_normal(
+            (batch_rows, cfg.n_image_tokens, cfg.d_model), np.float32
+        ).astype(cfg.dtype)
+    if cfg.family == "audio":
+        out["frames"] = rng.standard_normal(
+            (batch_rows, cfg.n_audio_frames, cfg.d_model), np.float32
+        ).astype(cfg.dtype)
+    return out
+
+
+def train(arch: str, *, reduced: bool = True, steps: int = 20, batch: int = 8,
+          seq: int = 64, ckpt_dir: str | None = None, ckpt_every: int = 10,
+          lr: float = 1e-3, production_mesh: bool = False,
+          resume: bool = True, log_every: int = 5,
+          total_steps: int | None = None):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    mesh = (make_production_mesh() if production_mesh else make_host_mesh())
+    total_steps = total_steps or steps   # schedule horizon (stable across
+    # restarts: a resumed run must pass the ORIGINAL horizon or the cosine
+    # schedule, and therefore the training trajectory, changes)
+    opt_cfg = adamw.AdamWConfig(lr=lr, warmup_steps=max(2, total_steps // 10),
+                                total_steps=total_steps)
+    params, opt_state, jitted, rules = build(cfg, opt_cfg, mesh)
+
+    data_cfg = DataConfig(cfg.vocab_size, seq, batch)
+    rng = np.random.default_rng(0)
+    monitor = HeartbeatMonitor(n_workers=1)
+
+    start = 0
+    if ckpt_dir and resume and ckpt_lib.latest_step(ckpt_dir) is not None:
+        (params, opt_state), start = ckpt_lib.restore(
+            ckpt_dir, (params, opt_state))
+        print(f"resumed from step {start}")
+
+    losses = []
+    pending_ckpt = None
+    for step in range(start, steps):
+        t0 = time.monotonic()
+        b = batch_for_step(data_cfg, step)
+        b.update(extras_for(cfg, batch, rng))
+        params, opt_state, metrics = jitted(params, opt_state, b)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        monitor.report(0, time.monotonic() - t0)
+        if step % log_every == 0 or step == steps - 1:
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"dt {time.monotonic()-t0:.2f}s")
+        if ckpt_dir and (step + 1) % ckpt_every == 0:
+            if pending_ckpt is not None:
+                pending_ckpt.join()
+            pending_ckpt = ckpt_lib.save(
+                ckpt_dir, step + 1, (params, opt_state), blocking=False)
+    if pending_ckpt is not None:
+        pending_ckpt.join()
+    if ckpt_dir:
+        ckpt_lib.save(ckpt_dir, steps, (params, opt_state))
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    args = ap.parse_args()
+    losses = train(args.arch, reduced=args.reduced, steps=args.steps,
+                   batch=args.batch, seq=args.seq, ckpt_dir=args.ckpt_dir,
+                   ckpt_every=args.ckpt_every, lr=args.lr)
+    print(f"final loss {losses[-1]:.4f} (first {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

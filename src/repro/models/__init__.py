@@ -1,0 +1,1 @@
+"""Model zoo: pure-functional JAX models for all assigned architectures."""

@@ -1,0 +1,278 @@
+"""Mamba2 / SSD (state-space duality) blocks — arXiv:2405.21060.
+
+Chunked SSD: within-chunk attention-like quadratic form + inter-chunk state
+recurrence via ``lax.associative_scan``. All einsum/partitionable; heads shard
+over the model axis (SSM_HEADS), batch over data. Decode is a constant-time
+state update — the reason the ssm/hybrid archs run the ``long_500k`` cell.
+
+Layout: x (B, L, H, P) with H = d_inner/headdim heads, P = headdim;
+B/C (B, L, N) single state-group (G=1), broadcast across heads;
+dt (B, L, H) post-softplus; A (H,) negative.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, _init, remat_wrap, rms_norm
+from repro.parallel.sharding import BATCH, EMBED, MLP, SEQ, VOCAB, shard
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def ssd_reference(x, dt, a, b, c, initial_state=None):
+    """Sequential-recurrence oracle.
+
+    x: (B, L, H, P); dt: (B, L, H); a: (H,); b, c: (B, L, N).
+    Returns (y (B, L, H, P), final_state (B, H, N, P)).
+    """
+    bsz, l, h, p = x.shape
+    n = b.shape[-1]
+    s0 = (jnp.zeros((bsz, h, n, p), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(s, inp):
+        xt, dtt, bt, ct = inp        # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dtt * a)     # (B,H)
+        sbar = s * decay[..., None, None] + jnp.einsum(
+            "bh,bn,bhp->bhnp", dtt, bt, xt.astype(jnp.float32))
+        yt = jnp.einsum("bn,bhnp->bhp", ct, sbar)
+        return sbar, yt
+
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          b.transpose(1, 0, 2), c.transpose(1, 0, 2))
+    s_final, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), s_final
+
+
+def _segsum(a_blk):
+    """a_blk: (..., Q) -> (..., Q, Q) lower-triangular cumulative sums:
+    out[i, j] = sum_{k=j+1..i} a[k] for i >= j, -inf otherwise."""
+    q = a_blk.shape[-1]
+    cs = jnp.cumsum(a_blk, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]    # sum_{j+1..i} = cs[i]-cs[j]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, b, c, chunk: int = 64, initial_state=None):
+    """Chunked SSD (the paper-efficient algorithm). Same signature as ref."""
+    bsz, l, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, l)
+    pad = (-l) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    lp = l + pad
+    nc = lp // q
+
+    xc = x.reshape(bsz, nc, q, h, p).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, q, h).astype(jnp.float32)
+    bc = b.reshape(bsz, nc, q, n).astype(jnp.float32)
+    cc = c.reshape(bsz, nc, q, n).astype(jnp.float32)
+
+    adt = dtc * a                                  # (B, nc, Q, H) log-decay
+    adt_h = adt.transpose(0, 1, 3, 2)              # (B, nc, H, Q)
+
+    # 1) within-chunk (diagonal blocks): quadratic attention-like form.
+    # REASSOCIATED into 2-operand steps: a naive 4-operand einsum lets XLA
+    # materialize a (B, nc, H, Q, Q, P) 6-D intermediate (~7.5 GB/layer on
+    # the zamba2 train_4k cell); the weight matrix W below is (B,nc,H,Q,Q)
+    # and the contraction is a plain batched GEMM.
+    lmat = jnp.exp(_segsum(adt_h))                 # (B, nc, H, Q, Q)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)  # (B, nc, Q, Q)
+    w_diag = scores[:, :, None] * lmat * dtc.transpose(0, 1, 3, 2)[..., None, :]
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", w_diag, xc)
+
+    # 2) chunk-final states: contribution of step j decays by a_{j+1..Q-1}
+    cs = jnp.cumsum(adt_h, axis=-1)
+    decay_states = jnp.exp(cs[..., -1:] - cs)      # (B, nc, H, Q)
+    xw = xc * (decay_states.transpose(0, 1, 3, 2) * dtc)[..., None]
+    states = jnp.einsum("bcjn,bcjhp->bchnp", bc, xw)  # (B, nc, H, N, P)
+
+    # 3) inter-chunk recurrence (associative scan over chunks)
+    chunk_decay = jnp.exp(jnp.sum(adt_h, axis=-1))  # (B, nc, H)
+
+    def combine(e1, e2):
+        d1, s1 = e1
+        d2, s2 = e2
+        return d1 * d2, s2 + d2[..., None, None] * s1
+
+    if initial_state is not None:
+        states = jnp.concatenate(
+            [initial_state.astype(jnp.float32)[:, None], states], axis=1)
+        chunk_decay = jnp.concatenate(
+            [jnp.ones_like(chunk_decay[:, :1]), chunk_decay], axis=1)
+        _, states_cum = jax.lax.associative_scan(combine,
+                                                 (chunk_decay, states), axis=1)
+        prev_states = states_cum[:, :-1]           # state entering chunk c
+        final_state = states_cum[:, -1]
+    else:
+        _, states_cum = jax.lax.associative_scan(combine,
+                                                 (chunk_decay, states), axis=1)
+        prev_states = jnp.concatenate(
+            [jnp.zeros_like(states_cum[:, :1]), states_cum[:, :-1]], axis=1)
+        final_state = states_cum[:, -1]
+
+    # 4) off-diagonal contribution: C_i * decay(0..i) * S_prev
+    decay_out = jnp.exp(jnp.cumsum(adt_h, axis=-1))          # (B, nc, H, Q)
+    y_off = jnp.einsum("bcin,bchi,bchnp->bcihp", cc, decay_out, prev_states)
+
+    y = (y_diag + y_off).reshape(bsz, lp, h, p)[:, :l]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(state, xt, dtt, a, bt, ct):
+    """One-token state update: state (B,H,N,P) -> (y (B,H,P), new state)."""
+    decay = jnp.exp(dtt * a)
+    new_state = state * decay[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dtt, bt, xt.astype(jnp.float32))
+    y = jnp.einsum("bn,bhnp->bhp", ct, new_state)
+    return y.astype(xt.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def init_mamba_block(key, cfg: ModelConfig, dtype) -> Params:
+    d, di, n, h = cfg.d_model, cfg.d_ssm, cfg.ssm_state, cfg.n_ssm_heads
+    conv_dim = di + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": jnp.ones((d,), dtype),
+        "in_proj": _init(ks[0], (d, 2 * di + 2 * n + h), dtype=dtype),
+        "conv_w": _init(ks[1], (cfg.ssm_conv, conv_dim), scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm2": jnp.ones((di,), dtype),
+        "out_proj": _init(ks[2], (di, d), dtype=dtype),
+    }
+
+
+def _causal_conv(u, w, b, state=None):
+    """Depthwise causal conv1d. u: (B, L, C); w: (K, C); state: (B, K-1, C)."""
+    k = w.shape[0]
+    if state is None:
+        up = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        up = jnp.concatenate([state.astype(u.dtype), u], axis=1)
+    new_state = up[:, -(k - 1):] if k > 1 else None
+    # windowed sum: sum_t w[t] * u[i - (K-1) + t]
+    out = sum(w[t] * up[:, t:t + u.shape[1]] for t in range(k))
+    return out + b, new_state
+
+
+def mamba_block(p: Params, x, cfg: ModelConfig, *, ssm_cache=None,
+                chunk: int = 64):
+    """x: (B, L, D) -> (B, L, D). ssm_cache: {"conv": (B,K-1,C), "ssm":
+    (B,H,N,P)} for decode (L==1); None for training/prefill."""
+    bsz, l, d = x.shape
+    di, n, h = cfg.d_ssm, cfg.ssm_state, cfg.n_ssm_heads
+    pdim = cfg.ssm_head_dim
+
+    res = x
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    proj = shard(xn @ p["in_proj"], BATCH, None, MLP)
+    z, xin, b_, c_, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+
+    conv_in = jnp.concatenate([xin, b_, c_], axis=-1)
+    conv_state = ssm_cache["conv"] if ssm_cache else None
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                      conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xin, b_, c_ = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    a = -jnp.exp(p["A_log"])                                   # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    xh = xin.reshape(bsz, l, h, pdim)
+    xh = shard(xh, BATCH, None, "ssm_heads", None)
+
+    if ssm_cache is not None and l == 1:
+        y, new_ssm = ssd_decode_step(
+            ssm_cache["ssm"], xh[:, 0], dt[:, 0], a, b_[:, 0], c_[:, 0])
+        y = y[:, None]
+    else:
+        init_s = ssm_cache["ssm"] if ssm_cache else None
+        y, new_ssm = ssd_chunked(xh, dt, a, b_, c_, chunk=chunk,
+                                 initial_state=init_s)
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(bsz, l, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm2"], cfg.norm_eps)
+    out = shard(y @ p["out_proj"], BATCH, SEQ, EMBED)
+    new_cache = ({"conv": new_conv, "ssm": new_ssm}
+                 if ssm_cache is not None else None)
+    return res + out, new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int):
+    """Stacked per-layer decode cache."""
+    conv_dim = cfg.d_ssm + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm_conv - 1, conv_dim),
+                          cfg.jnp_dtype),
+        "ssm": jnp.zeros((cfg.n_layers, batch, cfg.n_ssm_heads,
+                          cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# full model (mamba2-130m: pure SSM stack)
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dtype = cfg.jnp_dtype
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    layers = [init_mamba_block(ks[i], cfg, dtype) for i in range(cfg.n_layers)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    return {
+        "embed": _init(ks[-2], (cfg.vocab_size, cfg.d_model), scale=1.0,
+                       dtype=dtype),
+        "layers": stacked,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": _init(ks[-1], (cfg.d_model, cfg.vocab_size), dtype=dtype),
+    }
+
+
+def forward(params: Params, tokens, cfg: ModelConfig) -> jax.Array:
+    x = shard(jnp.take(params["embed"], tokens, axis=0), BATCH, SEQ, EMBED)
+
+    def body(x, layer_p):
+        y, _ = mamba_block(layer_p, x, cfg)
+        return y, None
+
+    if cfg.remat:
+        body = remat_wrap(body, cfg)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    else:
+        for i in range(cfg.n_layers):
+            x, _ = body(x, jax.tree.map(lambda l: l[i], params["layers"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return shard(x @ params["lm_head"], BATCH, None, VOCAB)
+
+
+def decode_step(params: Params, token, cache, pos, cfg: ModelConfig):
+    """token (B, s); cache from init_ssm_cache. Returns (logits, cache)."""
+    x = shard(jnp.take(params["embed"], token, axis=0), BATCH, SEQ, EMBED)
+
+    def body(x, inp):
+        layer_p, layer_cache = inp
+        y, nc = mamba_block(layer_p, x, cfg, ssm_cache=layer_cache)
+        return y, nc
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = shard(x[:, -1] @ params["lm_head"], BATCH, VOCAB)
+    return logits, new_cache
+
+

@@ -1,0 +1,233 @@
+"""Decoder-only transformer LM covering the dense / MoE / VLM families.
+
+One implementation, configured by ``ModelConfig``:
+
+* dense GQA (minitron-8b, internlm2-20b, command-r-35b), qk-norm (qwen3-32b)
+* MoE FFN every ``moe_every`` layers with top-1 routing + shared expert
+  (llama4-scout: every layer, 16 experts; llama4-maverick: alternating,
+  128 experts)
+* cross-attention image layers every ``cross_attn_every`` layers
+  (llama-3.2-vision; patch embeddings arrive pre-computed — stub frontend)
+
+Layers are scan-stacked in repeating *groups* (the smallest period covering
+moe_every / cross_attn_every), with per-layer ``jax.checkpoint`` remat, so a
+48-layer model compiles one group body. KV caches are (L, B, Smax, KV, hd)
+and shard over (SEQ -> model) for decode.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (
+    remat_wrap,
+    Params, _init, attention, init_attention, init_moe, init_swiglu,
+    moe, rms_norm, swiglu,
+)
+from repro.parallel.sharding import BATCH, EMBED, SEQ, VOCAB, shard
+
+
+# ---------------------------------------------------------------------------
+# layer-group structure
+# ---------------------------------------------------------------------------
+
+def group_period(cfg: ModelConfig) -> int:
+    """Layers per scan group (lcm of the MoE and cross-attn periods)."""
+    p = 1
+    if cfg.n_experts and cfg.moe_every > 1:
+        p = math.lcm(p, cfg.moe_every)
+    if cfg.cross_attn_every:
+        p = math.lcm(p, cfg.cross_attn_every)
+    return p
+
+
+def _layer_kinds(cfg: ModelConfig) -> list[dict]:
+    """Description of each layer within one group."""
+    kinds = []
+    for i in range(group_period(cfg)):
+        layer_no = i  # position within group
+        is_moe = bool(cfg.n_experts) and (layer_no % cfg.moe_every
+                                          == cfg.moe_every - 1)
+        is_cross = bool(cfg.cross_attn_every) and (
+            layer_no % cfg.cross_attn_every == cfg.cross_attn_every - 1)
+        kinds.append({"moe": is_moe, "cross": is_cross})
+    return kinds
+
+
+def init_layer(key, cfg: ModelConfig, kind: dict, dtype) -> Params:
+    ks = jax.random.split(key, 6)
+    p: Params = {
+        "norm": jnp.ones((cfg.d_model,), dtype),
+        "attn": init_attention(ks[0], cfg, dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+    }
+    if kind["moe"]:
+        p["moe"] = init_moe(ks[1], cfg, dtype)
+    else:
+        p["ffn"] = init_swiglu(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    if kind["cross"]:
+        p["xattn"] = init_attention(ks[2], cfg, dtype)
+        p["norm3"] = jnp.ones((cfg.d_model,), dtype)
+        p["xattn_gate"] = jnp.zeros((1,), dtype)
+    return p
+
+
+def apply_layer(p: Params, x, cfg: ModelConfig, kind: dict, *,
+                positions=None, kv_cache=None, cache_pos=None,
+                image_embeds=None, causal=True):
+    h, new_cache = attention(
+        p["attn"], rms_norm(x, p["norm"], cfg.norm_eps), cfg,
+        positions=positions, causal=causal,
+        kv_cache=kv_cache, cache_pos=cache_pos)
+    x = x + h
+    if kind["cross"] and image_embeds is not None:
+        xh, _ = attention(
+            p["xattn"], rms_norm(x, p["norm3"], cfg.norm_eps), cfg,
+            xattn_kv=image_embeds, causal=False, use_rope=False)
+        x = x + jnp.tanh(p["xattn_gate"]) * xh
+    h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if kind["moe"]:
+        x = x + moe(p["moe"], h2, cfg)
+    else:
+        x = x + swiglu(p["ffn"], h2)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dtype = cfg.jnp_dtype
+    kinds = _layer_kinds(cfg)
+    period = len(kinds)
+    n_groups = cfg.n_layers // period
+    assert n_groups * period == cfg.n_layers, \
+        f"n_layers {cfg.n_layers} not divisible by group period {period}"
+    ks = jax.random.split(key, n_groups + 3)
+
+    def stack(leaves):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *leaves)
+
+    groups = []
+    for g in range(n_groups):
+        gks = jax.random.split(ks[g], period)
+        groups.append([init_layer(gks[i], cfg, kinds[i], dtype)
+                       for i in range(period)])
+    # params["layers"] is a list (len=period) of stacked (n_groups, ...) trees
+    layers = [stack([groups[g][i] for g in range(n_groups)])
+              for i in range(period)]
+
+    return {
+        "embed": _init(ks[-3], (cfg.vocab_size, cfg.d_model), scale=1.0,
+                       dtype=dtype),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": _init(ks[-2], (cfg.d_model, cfg.vocab_size), dtype=dtype),
+    }
+
+
+def _scan_groups(params, cfg: ModelConfig, x, body):
+    """Scan ``body`` over the stacked layer groups (optionally remat)."""
+    kinds = _layer_kinds(cfg)
+    period = len(kinds)
+
+    def group_body(carry, group_params):
+        x = carry
+        for i in range(period):
+            x = body(group_params[i], x, kinds[i])
+        return x, None
+
+    if cfg.remat:
+        group_body = remat_wrap(group_body, cfg)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(group_body, x, tuple(params["layers"]))
+    else:
+        n_groups = cfg.n_layers // period
+        for g in range(n_groups):
+            gp = [jax.tree.map(lambda l: l[g], params["layers"][i])
+                  for i in range(period)]
+            x, _ = group_body(x, tuple(gp))
+    return x
+
+
+def forward(params: Params, tokens, cfg: ModelConfig, *,
+            image_embeds=None, positions=None) -> jax.Array:
+    """Training/prefill forward: (B, S) -> logits (B, S, V)."""
+    x = shard(jnp.take(params["embed"], tokens, axis=0), BATCH, SEQ, EMBED)
+
+    def body(p, x, kind):
+        x, _ = apply_layer(p, x, cfg, kind, positions=positions,
+                           image_embeds=image_embeds)
+        return x
+
+    x = _scan_groups(params, cfg, x, body)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = shard(x @ params["lm_head"], BATCH, None, VOCAB)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# KV-cache serving path
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Per period-slot stacked cache: list of dicts with (G, B, S, KV, hd)."""
+    period = group_period(cfg)
+    n_groups = cfg.n_layers // period
+    shape = (n_groups, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return [{"k": jnp.zeros(shape, cfg.jnp_dtype),
+             "v": jnp.zeros(shape, cfg.jnp_dtype)} for _ in range(period)]
+
+
+def shard_kv_cache(cache, rules):
+    """Caches shard (SEQ -> model, BATCH -> data): flash-decode style."""
+    if rules is None:
+        return cache
+    spec = rules.sharding(None, BATCH, SEQ, None, None)
+    return jax.tree.map(lambda x: jax.lax.with_sharding_constraint(x, spec),
+                        cache)
+
+
+def decode_step(params: Params, token, cache, pos, cfg: ModelConfig, *,
+                image_embeds=None):
+    """One token for every sequence: token (B, 1) int32; pos scalar int32.
+
+    Returns (logits (B, V), new_cache). The cache covers ALL layers: layer
+    (g, i) lives at stacked index g of period-slot i. The same path serves
+    prefill: pass token (B, S_prompt) with pos=0 (causality is cache-relative).
+    """
+    x = shard(jnp.take(params["embed"], token, axis=0), BATCH, SEQ, EMBED)
+    kinds = _layer_kinds(cfg)
+    period = len(kinds)
+    s = token.shape[1]
+    positions = pos + jnp.arange(s, dtype=jnp.int32)[None, :]
+
+    def group_body(x, group_in):
+        group_params, group_cache = group_in
+        new_caches = []
+        for i in range(period):
+            x, nc = apply_layer(
+                group_params[i], x, cfg, kinds[i], positions=positions,
+                kv_cache=group_cache[i], cache_pos=pos,
+                image_embeds=image_embeds)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_cache = jax.lax.scan(
+        group_body, x, (tuple(params["layers"]), tuple(cache)))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = shard(x[:, -1] @ params["lm_head"], BATCH, VOCAB)
+    return logits, list(new_cache)
+
+
+def prefill(params: Params, tokens, cache, cfg: ModelConfig, *,
+            image_embeds=None):
+    """Fill the KV cache from a prompt; returns (last-token logits, cache)."""
+    return decode_step(params, tokens, cache, jnp.int32(0), cfg,
+                       image_embeds=image_embeds)

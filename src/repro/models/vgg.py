@@ -1,0 +1,98 @@
+"""VGG16 — the paper's case-study model (Sec. 6.1), on the hybrid engine.
+
+13 CONV layers + 3 FC layers. Every CONV routes through ``core.hybrid_conv``
+with a per-layer ``LayerPlan`` (mode/dataflow/m) — by default the plan the
+TPU DSE selects, or the FPGA DSE's plan for the paper-faithful benchmarks.
+Also exposes the ``ConvSpec`` list consumed by the DSE / compiler / runtime
+and the perf-model benchmarks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.compiler import LayerPlan
+from repro.core.hybrid_conv import ConvSpec, dense, hybrid_conv2d, max_pool2d
+from repro.models.layers import _init
+
+# (input hw, in_ch, out_ch); 'M' = 2x2 maxpool
+_VGG16 = [
+    (224, 3, 64), (224, 64, 64), "M",
+    (112, 64, 128), (112, 128, 128), "M",
+    (56, 128, 256), (56, 256, 256), (56, 256, 256), "M",
+    (28, 256, 512), (28, 512, 512), (28, 512, 512), "M",
+    (14, 512, 512), (14, 512, 512), (14, 512, 512), "M",
+]
+
+
+def conv_specs(img: int = 224, scale: int = 1) -> list[ConvSpec]:
+    """The 13 CONV ConvSpecs. ``scale`` divides channel counts (smoke tests);
+    ``img`` rescales the input resolution."""
+    specs = []
+    i = 0
+    for entry in _VGG16:
+        if entry == "M":
+            continue
+        h, c, k = entry
+        hh = h * img // 224
+        specs.append(ConvSpec(
+            f"conv{i}", hh, hh, max(3, c // scale) if c == 3 else c // scale,
+            k // scale, relu=True))
+        i += 1
+    return specs
+
+
+def default_plans(specs: list[ConvSpec] | None = None) -> list[LayerPlan]:
+    """DSE-selected plans (TPU target)."""
+    from repro.core.dse import run_tpu_dse
+    specs = specs or conv_specs()
+    return run_tpu_dse(specs).plans
+
+
+def init_params(key, cfg: ModelConfig | None = None, *, img: int = 224,
+                scale: int = 1, n_classes: int = 1000,
+                dtype=jnp.float32):
+    specs = conv_specs(img, scale)
+    ks = jax.random.split(key, len(specs) + 3)
+    convs = []
+    for i, s in enumerate(specs):
+        w = _init(ks[i], (s.r, s.s, s.c, s.k),
+                  scale=(s.r * s.s * s.c) ** -0.5, dtype=dtype)
+        b = jnp.zeros((s.k,), dtype)
+        convs.append({"w": w, "b": b})
+    feat = (img // 32) ** 2 * specs[-1].k
+    fc_dim = max(64, 4096 // scale)
+    return {
+        "convs": convs,
+        "fc1": {"w": _init(ks[-3], (feat, fc_dim), dtype=dtype),
+                "b": jnp.zeros((fc_dim,), dtype)},
+        "fc2": {"w": _init(ks[-2], (fc_dim, fc_dim), dtype=dtype),
+                "b": jnp.zeros((fc_dim,), dtype)},
+        "fc3": {"w": _init(ks[-1], (fc_dim, n_classes), dtype=dtype),
+                "b": jnp.zeros((n_classes,), dtype)},
+    }
+
+
+def forward(params, x_nhwc, plans: list[LayerPlan], *,
+            use_pallas: bool = False, interpret: bool | None = None):
+    """x: (N, img, img, C0) -> logits (N, n_classes)."""
+    x = x_nhwc
+    ci = 0
+    for entry in _VGG16:
+        if entry == "M":
+            x = max_pool2d(x)
+            continue
+        p, plan = params["convs"][ci], plans[ci]
+        x = hybrid_conv2d(
+            x, p["w"], p["b"], mode=plan.mode, m=plan.m,
+            dataflow=plan.dataflow, relu=True, use_pallas=use_pallas,
+            interpret=interpret)
+        ci += 1
+    n = x.shape[0]
+    x = x.reshape(n, -1)
+    x = dense(x, params["fc1"]["w"], params["fc1"]["b"], relu=True,
+              use_pallas=use_pallas, interpret=interpret)
+    x = dense(x, params["fc2"]["w"], params["fc2"]["b"], relu=True,
+              use_pallas=use_pallas, interpret=interpret)
+    return dense(x, params["fc3"]["w"], params["fc3"]["b"])

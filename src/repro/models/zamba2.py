@@ -1,0 +1,179 @@
+"""Zamba2: Mamba2 backbone + a single *shared* attention block
+(arXiv:2411.15242).
+
+One attention+FFN block's parameters are reused every ``shared_attn_every``
+mamba layers (the Zamba signature trick: attention quality at ~zero parameter
+cost). Layers scan in groups of ``shared_attn_every`` mamba blocks with the
+shared block applied between groups; a remainder tail (n_layers %
+shared_attn_every) runs unrolled without the shared block.
+
+Decode carries both cache kinds: per-mamba-layer SSM/conv states and one KV
+cache per shared-block application.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (
+    remat_wrap,
+    Params, _init, attention, init_attention, init_swiglu, rms_norm, swiglu,
+)
+from repro.models.mamba2 import init_mamba_block, mamba_block
+from repro.parallel.sharding import BATCH, EMBED, SEQ, VOCAB, shard
+
+
+def _geometry(cfg: ModelConfig) -> tuple[int, int, int]:
+    per = cfg.shared_attn_every
+    n_groups = cfg.n_layers // per
+    tail = cfg.n_layers - n_groups * per
+    return per, n_groups, tail
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dtype = cfg.jnp_dtype
+    per, n_groups, tail = _geometry(cfg)
+    ks = jax.random.split(key, 6)
+
+    def stack(trees):
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+    gks = jax.random.split(ks[0], n_groups * per)
+    groups = stack([
+        stack([init_mamba_block(gks[g * per + i], cfg, dtype)
+               for i in range(per)])
+        for g in range(n_groups)
+    ]) if n_groups else None  # leaves: (n_groups, per, ...)
+    tks = jax.random.split(ks[1], max(tail, 1))
+    tail_layers = (stack([init_mamba_block(tks[i], cfg, dtype)
+                          for i in range(tail)]) if tail else None)
+
+    shared = {
+        "norm": jnp.ones((cfg.d_model,), dtype),
+        "attn": init_attention(ks[2], cfg, dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+        "ffn": init_swiglu(ks[3], cfg.d_model, cfg.d_ff, dtype),
+    }
+    p = {
+        "embed": _init(ks[4], (cfg.vocab_size, cfg.d_model), scale=1.0,
+                       dtype=dtype),
+        "shared": shared,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": _init(ks[5], (cfg.d_model, cfg.vocab_size), dtype=dtype),
+    }
+    if groups is not None:
+        p["groups"] = groups
+    if tail_layers is not None:
+        p["tail"] = tail_layers
+    return p
+
+
+def _shared_block(shared: Params, x, cfg: ModelConfig, *, positions=None,
+                  kv_cache=None, cache_pos=None):
+    h, nc = attention(shared["attn"],
+                      rms_norm(x, shared["norm"], cfg.norm_eps), cfg,
+                      positions=positions, kv_cache=kv_cache,
+                      cache_pos=cache_pos)
+    x = x + h
+    x = x + swiglu(shared["ffn"], rms_norm(x, shared["norm2"], cfg.norm_eps))
+    return x, nc
+
+
+def forward(params: Params, tokens, cfg: ModelConfig) -> jax.Array:
+    per, n_groups, tail = _geometry(cfg)
+    x = shard(jnp.take(params["embed"], tokens, axis=0), BATCH, SEQ, EMBED)
+    shared = params["shared"]
+
+    def group_body(x, group_p):
+        for i in range(per):
+            lp = jax.tree.map(lambda l: l[i], group_p)
+            x, _ = mamba_block(lp, x, cfg)
+        x, _ = _shared_block(shared, x, cfg)
+        return x, None
+
+    if cfg.remat:
+        group_body = remat_wrap(group_body, cfg)
+    if n_groups:
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(group_body, x, params["groups"])
+        else:
+            for g in range(n_groups):
+                x, _ = group_body(
+                    x, jax.tree.map(lambda l: l[g], params["groups"]))
+    for i in range(tail):
+        lp = jax.tree.map(lambda l: l[i], params["tail"])
+        x, _ = mamba_block(lp, x, cfg)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return shard(x @ params["lm_head"], BATCH, None, VOCAB)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    per, n_groups, tail = _geometry(cfg)
+    conv_dim = cfg.d_ssm + 2 * cfg.ssm_state
+    mk = lambda *shape: jnp.zeros(shape, cfg.jnp_dtype)
+    cache = {
+        "groups_conv": mk(n_groups, per, batch, cfg.ssm_conv - 1, conv_dim),
+        "groups_ssm": jnp.zeros((n_groups, per, batch, cfg.n_ssm_heads,
+                                 cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+        "attn_k": mk(n_groups, batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+        "attn_v": mk(n_groups, batch, max_len, cfg.n_kv_heads, cfg.head_dim),
+    }
+    if tail:
+        cache["tail_conv"] = mk(tail, batch, cfg.ssm_conv - 1, conv_dim)
+        cache["tail_ssm"] = jnp.zeros((tail, batch, cfg.n_ssm_heads,
+                                       cfg.ssm_state, cfg.ssm_head_dim),
+                                      jnp.float32)
+    return cache
+
+
+def decode_step(params: Params, token, cache, pos, cfg: ModelConfig):
+    """token (B, s) — s=1 decode or s=prompt prefill-into-cache (pos=0)."""
+    per, n_groups, tail = _geometry(cfg)
+    x = shard(jnp.take(params["embed"], token, axis=0), BATCH, SEQ, EMBED)
+    shared = params["shared"]
+    s = token.shape[1]
+    positions = pos + jnp.arange(s, dtype=jnp.int32)[None, :]
+
+    def group_body(x, inp):
+        group_p, conv_c, ssm_c, k_c, v_c = inp
+        new_conv, new_ssm = [], []
+        for i in range(per):
+            lp = jax.tree.map(lambda l: l[i], group_p)
+            if s == 1:
+                x, nc = mamba_block(lp, x, cfg,
+                                    ssm_cache={"conv": conv_c[i],
+                                               "ssm": ssm_c[i]})
+            else:  # prefill: run chunked SSD, then carry the final state
+                x, nc = mamba_block(lp, x, cfg,
+                                    ssm_cache={"conv": conv_c[i] * 0,
+                                               "ssm": ssm_c[i] * 0})
+            new_conv.append(nc["conv"])
+            new_ssm.append(nc["ssm"])
+        x, akv = _shared_block(shared, x, cfg, positions=positions,
+                               kv_cache={"k": k_c, "v": v_c}, cache_pos=pos)
+        return x, (jnp.stack(new_conv), jnp.stack(new_ssm),
+                   akv["k"], akv["v"])
+
+    if n_groups:
+        x, (gc, gs, ak, av) = jax.lax.scan(
+            group_body, x,
+            (params["groups"], cache["groups_conv"], cache["groups_ssm"],
+             cache["attn_k"], cache["attn_v"]))
+        new_cache = dict(cache, groups_conv=gc, groups_ssm=gs,
+                         attn_k=ak, attn_v=av)
+    else:
+        new_cache = dict(cache)
+    for i in range(tail):
+        lp = jax.tree.map(lambda l: l[i], params["tail"])
+        x, nc = mamba_block(
+            lp, x, cfg,
+            ssm_cache={"conv": cache["tail_conv"][i] if s == 1
+                       else cache["tail_conv"][i] * 0,
+                       "ssm": cache["tail_ssm"][i] if s == 1
+                       else cache["tail_ssm"][i] * 0})
+        new_cache["tail_conv"] = new_cache["tail_conv"].at[i].set(nc["conv"])
+        new_cache["tail_ssm"] = new_cache["tail_ssm"].at[i].set(nc["ssm"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = shard(x[:, -1] @ params["lm_head"], BATCH, VOCAB)
+    return logits, new_cache

@@ -1,0 +1,241 @@
+"""Mesh axes, partition rules, and sharding helpers (DP/TP/EP/SP).
+
+Logical-axis scheme (MaxText-style): every tensor dimension is tagged with a
+logical name; ``Rules`` maps logical names to mesh axes. The production mesh
+is ``("pod", "data", "model")`` multi-pod or ``("data", "model")`` single-pod:
+``pod``+``data`` carry data parallelism (the paper's NI-instances analog),
+``model`` carries TP / EP / SP.
+
+``logical_to_mesh``/``shard`` are no-ops when no rules are active, so the same
+model code runs on one CPU device and on the 512-chip dry-run mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis names
+BATCH = "batch"        # -> (pod, data)
+SEQ = "seq"            # -> model (sequence parallelism for caches/long ctx)
+EMBED = "embed"        # -> None (replicated d_model)
+HEADS = "heads"        # -> model (TP over attention heads)
+KV_HEADS = "kv_heads"  # -> model
+MLP = "mlp"            # -> model (TP over FFN hidden)
+VOCAB = "vocab"        # -> model (TP over vocab/logits)
+EXPERT = "expert"      # -> model (EP)
+STACK = "stack"        # -> None (scan-stacked layer dim)
+SSM_HEADS = "ssm_heads"
+CONV = "conv"
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    mesh: Mesh
+    dp_axes: tuple[str, ...] = ("data",)
+    tp_axis: str = "model"
+
+    def spec(self, *logical: str | None) -> P:
+        parts = []
+        for name in logical:
+            if name is None:
+                parts.append(None)
+            elif name == BATCH:
+                parts.append(self.dp_axes if len(self.dp_axes) > 1
+                             else self.dp_axes[0])
+            elif name in (SEQ, HEADS, KV_HEADS, MLP, VOCAB, EXPERT, SSM_HEADS):
+                parts.append(self.tp_axis)
+            elif name in (EMBED, STACK, CONV):
+                parts.append(None)
+            else:
+                raise ValueError(f"unknown logical axis {name!r}")
+        return P(*parts)
+
+    def sharding(self, *logical: str | None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+
+def make_rules(mesh: Mesh) -> Rules:
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return Rules(mesh=mesh, dp_axes=dp or (mesh.axis_names[0],))
+
+
+# --------------------------------------------------------------------------
+# active-rules context (thread-local so model code stays pure-looking)
+# --------------------------------------------------------------------------
+
+_state = threading.local()
+
+
+def current_rules() -> Rules | None:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Rules | None):
+    prev = current_rules()
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def shard(x: jax.Array, *logical: str | None) -> jax.Array:
+    """Apply a sharding constraint if rules are active; else identity.
+
+    Divisibility-aware: a dimension whose size does not divide by its mapped
+    mesh axes is left unconstrained (GSPMD's uneven-shard padding causes
+    involuntary full rematerialization copies — e.g. 8 KV heads or 40 query
+    heads on a 16-way model axis)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.spec(*logical)
+    sizes = dict(zip(rules.mesh.axis_names, rules.mesh.devices.shape))
+    parts = []
+    for dim, entry in enumerate(spec):
+        if entry is None:
+            parts.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        parts.append(entry if x.shape[dim] % total == 0 else None)
+    parts += [None] * (x.ndim - len(parts))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, P(*parts)))
+
+
+# --------------------------------------------------------------------------
+# parameter partition specs (path-based rules over the params pytree)
+# --------------------------------------------------------------------------
+
+# leaf-name -> logical axes per dimension, EXCLUDING the leading scan-stack
+# dim which is added automatically for stacked leaves.
+_PARAM_RULES: dict[str, tuple[str | None, ...]] = {
+    "embed": (None, MLP),   # d-sharded: token take() stays local; a
+                         # vocab-sharded table all-gathers 2-4GB/step
+    "lm_head": (None, VOCAB),
+    "pos_embed": (None, None),
+    "wq": (None, HEADS),
+    "wk": (None, KV_HEADS),
+    "wv": (None, KV_HEADS),
+    "wo": (HEADS, None),
+    "bq": (HEADS,), "bk": (KV_HEADS,), "bv": (KV_HEADS,), "bo": (None,),
+    "q_norm": (None,),
+    "k_norm": (None,),
+    "w_gate": (None, MLP),
+    "w_up": (None, MLP),
+    "w_down": (MLP, None),
+    "w_in": (None, MLP),
+    "w_out": (MLP, None),
+    "b_in": (MLP,), "b_out": (None,),
+    # MoE: leading expert dim
+    "we_gate": (EXPERT, None, None),
+    "we_up": (EXPERT, None, None),
+    "we_down": (EXPERT, None, None),
+    "router": (None, EXPERT),
+    # mamba2 / SSD
+    "in_proj": (None, MLP),
+    "out_proj": (MLP, None),
+    "conv_w": (None, MLP),
+    "conv_b": (MLP,),
+    "A_log": (SSM_HEADS,),
+    "D": (SSM_HEADS,),
+    "dt_bias": (SSM_HEADS,),
+    "norm": (None,),
+    "norm2": (None,),
+    "norm3": (None,),
+    "final_norm": (None,),
+    "enc_norm": (None,),
+    "scale": (None,),
+}
+
+
+def _axes_size(rules: Rules, entry) -> int:
+    sizes = dict(zip(rules.mesh.axis_names, rules.mesh.devices.shape))
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    total = 1
+    for a in axes:
+        total *= sizes[a]
+    return total
+
+
+def _drop_indivisible(spec: P, shape, rules: Rules) -> P:
+    """jit in_shardings require exact divisibility — drop axes that don't."""
+    parts = []
+    for dim, entry in enumerate(spec):
+        if entry is None or shape[dim] % _axes_size(rules, entry) == 0:
+            parts.append(entry)
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def _spec_for_path(path, leaf, rules: Rules, stacked_depth: int) -> P:
+    name = None
+    for entry in reversed(path):
+        key = getattr(entry, "key", getattr(entry, "name", None))
+        if isinstance(key, str):
+            name = key
+            break
+    if name is None or name not in _PARAM_RULES:
+        return P()
+    logical = _PARAM_RULES[name]
+    ndim = leaf.ndim if hasattr(leaf, "ndim") else len(leaf.shape)
+    if ndim == len(logical) + 1:      # scan-stacked leaf: leading L dim
+        logical = (None,) + logical
+    elif ndim == len(logical) + 2:    # stacked + grouped (e.g. vlm groups)
+        logical = (None, None) + logical
+    elif ndim != len(logical):
+        return P()
+    return _drop_indivisible(rules.spec(*logical), leaf.shape, rules)
+
+
+def param_specs(params, rules: Rules):
+    """PartitionSpec pytree matching ``params``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for_path(path, leaf, rules, 1), params)
+
+
+def param_shardings(params, rules: Rules):
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(rules.mesh, spec),
+        param_specs(params, rules),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def zero1_specs(params, rules: Rules):
+    """ZeRO-1 optimizer-state specs: param spec + DP sharding on dim 0.
+
+    The AdamW m/v tensors are additionally sharded over the data axes along
+    their first dimension (GSPMD pads uneven shards), so optimizer state
+    scales with 1/(pod*data) — the ZeRO-1 memory win without changing the
+    parameter layout.
+    """
+    dp = rules.dp_axes
+
+    def widen(spec: P, leaf) -> P:
+        ndim = getattr(leaf, "ndim", len(getattr(leaf, "shape", ())))
+        if ndim == 0:
+            return P()
+        parts = list(spec) + [None] * (ndim - len(spec))
+        d0 = parts[0]
+        if d0 is None:
+            cand = dp if len(dp) > 1 else dp[0]
+        elif isinstance(d0, str):
+            cand = (d0,) + dp
+        else:
+            cand = tuple(d0) + dp
+        if leaf.shape[0] % _axes_size(rules, cand) == 0:
+            parts[0] = cand
+        return _drop_indivisible(P(*parts), leaf.shape, rules)
+
+    specs = param_specs(params, rules)
+    return jax.tree_util.tree_map(widen, specs, params,
+                                  is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,128 @@
+"""Model-family dispatch: train_step / prefill / decode_step builders.
+
+``make_train_step(cfg, opt)`` returns a pure step function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` for any
+architecture family; ``make_serve_steps(cfg)`` returns (prefill, decode).
+These are what the launcher jits with in/out shardings and what the dry-run
+lowers on the production mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import mamba2, transformer, whisper, zamba2
+from repro.optim import adamw
+from repro.parallel.sharding import BATCH, SEQ, VOCAB, shard
+
+
+# ---------------------------------------------------------------------------
+# init / forward dispatch
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer.init_params(key, cfg)
+    if cfg.family == "ssm":
+        return mamba2.init_params(key, cfg)
+    if cfg.family == "hybrid":
+        return zamba2.init_params(key, cfg)
+    if cfg.family == "audio":
+        return whisper.init_params(key, cfg)
+    raise ValueError(cfg.family)
+
+
+def forward_logits(params, batch: dict[str, Any], cfg: ModelConfig):
+    tokens = batch["tokens"]
+    if cfg.family in ("dense", "moe"):
+        return transformer.forward(params, tokens, cfg)
+    if cfg.family == "vlm":
+        return transformer.forward(params, tokens, cfg,
+                                   image_embeds=batch["image_embeds"])
+    if cfg.family == "ssm":
+        return mamba2.forward(params, tokens, cfg)
+    if cfg.family == "hybrid":
+        return zamba2.forward(params, tokens, cfg)
+    if cfg.family == "audio":
+        return whisper.forward(params, tokens, batch["frames"], cfg)
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# loss / train step
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, targets):
+    """Mean next-token CE. fp32 accumulation WITHOUT materializing an fp32
+    copy of the (B, S, V) logits (the exp/sum runs inside a fused reduction;
+    an fp32 logits copy alone is ~4 GB/chip at vocab 202k), and WITHOUT
+    take_along_axis over the vocab-sharded axis (which would all-gather the
+    logits) — the gold logit comes from a one-hot masked reduction that GSPMD
+    keeps local + a tiny all-reduce."""
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = (logits - m).astype(jnp.float32)
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) \
+        + m[..., 0].astype(jnp.float32)
+    v = logits.shape[-1]
+    onehot = (targets[..., None] ==
+              jnp.arange(v, dtype=targets.dtype)[None, None, :])
+    gold = jnp.sum(jnp.where(onehot, logits.astype(jnp.float32), 0.0), axis=-1)
+    return jnp.mean(lse - gold)
+
+
+def make_train_step(cfg: ModelConfig, opt: adamw.AdamWConfig) -> Callable:
+    def loss_fn(params, batch):
+        logits = forward_logits(params, batch, cfg)
+        return cross_entropy(logits, batch["targets"])
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, om = adamw.update(opt, grads, opt_state, params)
+        metrics = {"loss": loss, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer.init_kv_cache(cfg, batch, max_len)
+    if cfg.family == "ssm":
+        return mamba2.init_ssm_cache(cfg, batch)
+    if cfg.family == "hybrid":
+        return zamba2.init_cache(cfg, batch, max_len)
+    if cfg.family == "audio":
+        return whisper.init_cache(cfg, batch, max_len)
+    raise ValueError(cfg.family)
+
+
+def make_serve_steps(cfg: ModelConfig):
+    """Returns (prefill, decode). decode(params, token, cache, pos, extras)."""
+
+    def decode(params, token, cache, pos, extras=None):
+        extras = extras or {}
+        if cfg.family in ("dense", "moe", "vlm"):
+            return transformer.decode_step(
+                params, token, cache, pos, cfg,
+                image_embeds=extras.get("image_embeds"))
+        if cfg.family == "ssm":
+            return mamba2.decode_step(params, token, cache, pos, cfg)
+        if cfg.family == "hybrid":
+            return zamba2.decode_step(params, token, cache, pos, cfg)
+        if cfg.family == "audio":
+            return whisper.decode_step(params, token, cache, pos,
+                                       extras["enc_out"], cfg)
+        raise ValueError(cfg.family)
+
+    def prefill(params, tokens, cache, extras=None):
+        return decode(params, tokens, cache, jnp.int32(0), extras)
+
+    return prefill, decode

@@ -1,0 +1,80 @@
+"""DSE reproduces the paper's configurations and respects constraints."""
+import dataclasses
+
+from repro.core import perf_model as pm
+from repro.core.dse import (
+    enumerate_fpga_candidates, run_fpga_dse, run_tpu_dse,
+)
+from repro.core.hybrid_conv import ConvSpec
+from repro.models.vgg import conv_specs
+
+
+def test_vu9p_reproduces_paper_config():
+    """Paper Sec 6.1: VU9P -> PI=4, PO=4, PT=6, NI=6, all-Winograd VGG16."""
+    r = run_fpga_dse(pm.VU9P, conv_specs())
+    assert (r.hw.pi, r.hw.po, r.hw.pt, r.hw.ni) == (4, 4, 6, 6)
+    assert all(p.mode == "wino" for p in r.plans)
+
+
+def test_vu9p_gops_matches_table4():
+    """Paper Table 4: 3375.7 GOPS on VU9P. Model within 5%."""
+    specs = conv_specs()
+    r = run_fpga_dse(pm.VU9P, specs)
+    gops = sum(2 * s.macs for s in specs) / 1e9 / r.total_latency
+    assert abs(gops - 3375.7) / 3375.7 < 0.05
+
+
+def test_pynq_reproduces_paper_config():
+    """Paper Sec 6.1: PYNQ-Z1 -> PI=4, PO=4, PT=4, one instance."""
+    r = run_fpga_dse(pm.PYNQ_Z1, conv_specs())
+    assert (r.hw.pi, r.hw.po, r.hw.pt, r.hw.ni) == (4, 4, 4, 1)
+
+
+def test_pynq_gops_near_table4():
+    """Paper Table 4: 83.3 GOPS on PYNQ-Z1 (within 10%)."""
+    specs = conv_specs()
+    r = run_fpga_dse(pm.PYNQ_Z1, specs)
+    gops = sum(2 * s.macs for s in specs) / 1e9 / r.total_latency
+    assert abs(gops - 83.3) / 83.3 < 0.10
+
+
+def test_candidates_respect_resources():
+    for t in (pm.VU9P, pm.PYNQ_Z1):
+        for c in enumerate_fpga_candidates(t):
+            assert pm.fpga_fits(t, c.pi, c.po, c.pt, c.m, c.ni)
+            assert c.pi >= c.po >= 1 and c.pt in (4, 6)
+
+
+def test_bandwidth_starved_prefers_spatial():
+    """Paper Sec 6.2: when memory-bound, Spatial outperforms Winograd."""
+    starved = dataclasses.replace(pm.PYNQ_Z1, bw=0.05e9)
+    r = run_fpga_dse(starved, conv_specs())
+    n_spat = sum(p.mode == "spat" for p in r.plans)
+    assert n_spat > len(r.plans) // 2
+
+
+def test_wino_stride_ineligible():
+    spec = ConvSpec("s2", 16, 16, 4, 8, stride=2)
+    r = run_fpga_dse(pm.VU9P, [spec])
+    assert r.plans[0].mode == "spat"
+
+
+def test_tpu_dse_vmem_constraint():
+    r = run_tpu_dse(conv_specs(), batch=8)
+    from repro.core.dse import enumerate_tpu_candidates
+    cands = enumerate_tpu_candidates()
+    assert r.hw in cands
+    assert r.total_latency > 0
+    # VMEM working-set bound (Eq. 4 analog) holds for the winner
+    working = 4 * 2 * (r.hw.bm * r.hw.bk + r.hw.bk * r.hw.bn
+                       + r.hw.bm * r.hw.bn)
+    assert working <= pm.V5E.vmem_bytes // 2
+
+
+def test_estimated_latency_monotone_in_bandwidth():
+    specs = conv_specs()
+    lats = []
+    for bw in (5e9, 20e9, 80e9):
+        t = dataclasses.replace(pm.VU9P, bw=bw)
+        lats.append(run_fpga_dse(t, specs).total_latency)
+    assert lats[0] >= lats[1] >= lats[2]

@@ -1,0 +1,100 @@
+"""Instruction-stream compiler + runtime: end-to-end equivalence and
+hazard discipline (the paper's Sec. 4.1/4.2 contract)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compiler import LayerPlan, Program, compile_network
+from repro.core.hybrid_conv import ConvSpec, hybrid_conv2d
+from repro.core.isa import Opcode
+from repro.core.runtime import HazardError, HybridRuntime, run_program
+
+
+def _net():
+    specs = [
+        ConvSpec("c1", 16, 16, 3, 8, relu=True),
+        ConvSpec("c2", 16, 16, 8, 12, relu=True),
+        ConvSpec("c3", 16, 16, 12, 8, relu=False),
+    ]
+    params = []
+    for i, s in enumerate(specs):
+        kw, kb = jax.random.split(jax.random.PRNGKey(i), 2)
+        params.append((
+            jax.random.normal(kw, (s.r, s.s, s.c, s.k), jnp.float32) * 0.2,
+            jax.random.normal(kb, (s.k,), jnp.float32) * 0.1))
+    x = jax.random.normal(jax.random.PRNGKey(99), (2, 16, 16, 3), jnp.float32)
+    return specs, params, x
+
+
+def _direct(specs, params, plans, x):
+    y = x
+    for s, (w, b), p in zip(specs, params, plans):
+        y = hybrid_conv2d(y, w, b, mode=p.mode, m=p.m, relu=s.relu,
+                          use_pallas=False)
+    return y
+
+
+PLAN_SETS = [
+    [LayerPlan("wino", "is", 4, 2, 2), LayerPlan("spat", "ws", 4, 3, 2),
+     LayerPlan("wino", "is", 2, 1, 4)],
+    [LayerPlan("spat", "is", 4, 1, 1), LayerPlan("spat", "is", 4, 1, 1),
+     LayerPlan("spat", "is", 4, 1, 1)],
+    [LayerPlan("wino", "ws", 4, 2, 1), LayerPlan("wino", "is", 4, 1, 2),
+     LayerPlan("spat", "ws", 4, 2, 3)],
+]
+
+
+@pytest.mark.parametrize("plans", PLAN_SETS)
+def test_runtime_equals_direct(plans):
+    """Mixed modes/dataflows/groups through the ISA == direct execution,
+    including the WINO<->SPAT layout reorders between layers."""
+    specs, params, x = _net()
+    prog = compile_network(specs, plans)
+    y = run_program(prog, params, x)
+    ref = _direct(specs, params, plans, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_wino_weight_traffic_matches_eq9():
+    """LOAD_WGT sizes: Winograd asks PT^2/(R*S) more words (Eq. 8 vs 9)."""
+    specs = [ConvSpec("c", 16, 16, 8, 8)]
+    spat = compile_network(specs, [LayerPlan("spat", "is")])
+    wino = compile_network(specs, [LayerPlan("wino", "is", m=4)])
+
+    def wgt_words(prog):
+        return sum(i.size for i in prog.instructions
+                   if i.opcode == Opcode.LOAD_WGT)
+    assert wgt_words(wino) == wgt_words(spat) * 36 // 9
+
+
+def test_hazard_missing_load():
+    specs, params, x = _net()
+    prog = compile_network(specs, PLAN_SETS[0])
+    bad = [i for i in prog.instructions if i.opcode != Opcode.LOAD_WGT]
+    rt = HybridRuntime(Program(bad, prog.layers, prog.dram_size_words))
+    rt.load_params(params)
+    with pytest.raises(HazardError):
+        rt.run(x)
+
+
+def test_hazard_save_before_comp():
+    specs, params, x = _net()
+    prog = compile_network(specs, PLAN_SETS[0])
+    bad = [i for i in prog.instructions if i.opcode != Opcode.COMP]
+    rt = HybridRuntime(Program(bad, prog.layers, prog.dram_size_words))
+    rt.load_params(params)
+    with pytest.raises(HazardError):
+        rt.run(x)
+
+
+def test_pipeline_stats():
+    specs, params, x = _net()
+    prog = compile_network(specs, PLAN_SETS[0])
+    rt = HybridRuntime(prog)
+    rt.load_params(params)
+    rt.run(x)
+    assert rt.stats["comp"] == sum(
+        len(cl.row_groups) * len(cl.k_groups) for cl in prog.layers)
+    assert rt.stats["load_inp"] > 0 and rt.stats["save"] > 0

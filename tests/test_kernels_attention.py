@@ -1,0 +1,57 @@
+"""Flash-attention Pallas kernel + the pjit scan-flash vs oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.models.layers import _flash_attention_scan
+
+CASES = [(1, 2, 2, 64, 32), (2, 4, 2, 128, 64), (1, 8, 1, 100, 32)]
+
+
+@pytest.mark.parametrize("b,h,hkv,s,d", CASES)
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_kernel(b, h, hkv, s, d, causal):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(kq, (b, h, s, d), jnp.float32)
+    k = jax.random.normal(kk, (b, hkv, s, d), jnp.float32)
+    v = jax.random.normal(kv, (b, hkv, s, d), jnp.float32)
+    o = flash_attention(q, k, v, causal=causal, bq=32, bk=32)
+    kk_ = jnp.repeat(k, h // hkv, axis=1).reshape(b * h, s, d)
+    vv_ = jnp.repeat(v, h // hkv, axis=1).reshape(b * h, s, d)
+    ref = attention_ref(q.reshape(b * h, s, d), kk_, vv_,
+                        causal=causal).reshape(b, h, s, d)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_kernel_bf16():
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(kq, (1, 2, 128, 64), jnp.bfloat16)
+    k = jax.random.normal(kk, (1, 2, 128, 64), jnp.bfloat16)
+    v = jax.random.normal(kv, (1, 2, 128, 64), jnp.bfloat16)
+    o = np.asarray(flash_attention(q, k, v, bq=64, bk=64), np.float32)
+    ref = np.asarray(attention_ref(
+        q.reshape(2, 128, 64), k.reshape(2, 128, 64),
+        v.reshape(2, 128, 64)).reshape(1, 2, 128, 64), np.float32)
+    np.testing.assert_allclose(o, ref, rtol=3e-2, atol=3e-2)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_scan_flash_matches_direct(causal):
+    """The pjit-internal scan-flash == direct softmax attention."""
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(2), 3)
+    b, s, g, r, d = 1, 64, 2, 2, 16
+    q = jax.random.normal(kq, (b, s, g, r, d), jnp.float32)
+    k = jax.random.normal(kk, (b, s, g, d), jnp.float32)
+    v = jax.random.normal(kv, (b, s, g, d), jnp.float32)
+    o = _flash_attention_scan(q, k, v, causal=causal, block=16)
+    sc = jnp.einsum("bqgrd,bkgd->bgrqk", q, k) * d ** -0.5
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        sc = jnp.where(mask[None, None, None], sc, -1e30)
+    ref = jnp.einsum("bgrqk,bkgd->bqgrd", jax.nn.softmax(sc, -1), v)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(ref),
+                               rtol=3e-4, atol=3e-4)

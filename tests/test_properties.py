@@ -1,0 +1,148 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import layouts
+from repro.core.compiler import LayerPlan, compile_network
+from repro.core.hybrid_conv import ConvSpec
+from repro.core.isa import Instruction, Opcode, decode, decode_stream, encode_stream
+from repro.core.winograd import winograd_conv2d_reference
+from repro.kernels.winograd.ref import conv2d_ref
+from repro.optim.compression import compress_grad, dequantize_int8
+
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# --------------------------------------------------------------------------
+# Winograd == Spatial for arbitrary shapes (the hybrid-PE core invariant)
+# --------------------------------------------------------------------------
+
+@settings(**_SETTINGS)
+@given(
+    h=st.integers(4, 20), w=st.integers(4, 20),
+    c=st.integers(1, 6), k=st.integers(1, 6),
+    m=st.sampled_from([2, 4]), r=st.sampled_from([1, 3, 5]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_winograd_equals_direct(h, w, c, k, m, r, seed):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (1, h, w, c), jnp.float32)
+    g = jax.random.normal(kw, (r, r, c, k), jnp.float32) * 0.3
+    y = winograd_conv2d_reference(x, g, m=m)
+    yref = conv2d_ref(x, g)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
+                               rtol=5e-3, atol=5e-3)
+
+
+# --------------------------------------------------------------------------
+# ISA encode/decode round-trip is bit-exact
+# --------------------------------------------------------------------------
+
+@settings(**_SETTINGS)
+@given(
+    opcode=st.sampled_from(list(Opcode)),
+    wino=st.booleans(), ws=st.booleans(), lw=st.booleans(),
+    relu=st.booleans(),
+    m=st.integers(0, 255), layer=st.integers(0, 2 ** 16 - 1),
+    buff=st.integers(0, 2 ** 32 - 1), dram=st.integers(0, 2 ** 32 - 1),
+    size=st.integers(0, 2 ** 32 - 1),
+)
+def test_isa_roundtrip(opcode, wino, ws, lw, relu, m, layer, buff, dram, size):
+    ins = Instruction(opcode, wino_flag=wino, dataflow_ws=ws,
+                      layout_out_wino=lw, relu_flag=relu, m_tile=m,
+                      layer_id=layer, buff_base=buff, dram_base=dram,
+                      size=size)
+    assert decode(ins.encode()) == ins
+
+
+@settings(**_SETTINGS)
+@given(n=st.integers(0, 12), seed=st.integers(0, 999))
+def test_isa_stream_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    instrs = [
+        Instruction(Opcode(int(rng.integers(1, 6))),
+                    wino_flag=bool(rng.integers(2)),
+                    m_tile=int(rng.integers(0, 8)),
+                    layer_id=int(rng.integers(0, 100)),
+                    buff_base=int(rng.integers(0, 2 ** 32)),
+                    dram_base=int(rng.integers(0, 2 ** 32)),
+                    size=int(rng.integers(0, 2 ** 32)))
+        for _ in range(n)
+    ]
+    assert decode_stream(encode_stream(instrs)) == instrs
+
+
+# --------------------------------------------------------------------------
+# Layout transforms invert (Sec. 4.3)
+# --------------------------------------------------------------------------
+
+@settings(**_SETTINGS)
+@given(h=st.integers(1, 6), w=st.integers(1, 6), c=st.integers(1, 5),
+       m=st.sampled_from([2, 4]), seed=st.integers(0, 99))
+def test_layout_roundtrip(h, w, c, m, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, h * m, w * m, c))
+    tiled = layouts.spat_to_wino(x, m)
+    assert tiled.shape == (2, h, w, m, m, c)
+    np.testing.assert_array_equal(np.asarray(layouts.wino_to_spat(tiled)),
+                                  np.asarray(x))
+
+
+@settings(**_SETTINGS)
+@given(h=st.integers(3, 17), w=st.integers(3, 17), m=st.sampled_from([2, 4]),
+       seed=st.integers(0, 99))
+def test_save_load_roundtrip_nondivisible(h, w, m, seed):
+    """SAVE pads to tile multiples; LOAD's view crops exactly."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, h, w, 3))
+    stored = layouts.save_transform(x, layouts.WINO, m)
+    back = layouts.load_view(stored, layouts.WINO, hw=(h, w))
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+# --------------------------------------------------------------------------
+# Compiler invariants
+# --------------------------------------------------------------------------
+
+@settings(**_SETTINGS)
+@given(
+    n_layers=st.integers(1, 4),
+    gk=st.integers(1, 3), gh=st.integers(1, 3),
+    modes=st.lists(st.sampled_from(["spat", "wino"]), min_size=4, max_size=4),
+    flows=st.lists(st.sampled_from(["is", "ws"]), min_size=4, max_size=4),
+)
+def test_compiler_group_coverage(n_layers, gk, gh, modes, flows):
+    """Every layer's COMP instructions cover all (row, k) group pairs."""
+    specs = [ConvSpec(f"c{i}", 16, 16, 4, 8) for i in range(n_layers)]
+    plans = [LayerPlan(modes[i], flows[i], m=4, g_k=gk, g_h=gh)
+             for i in range(n_layers)]
+    prog = compile_network(specs, plans)
+    for lid, cl in enumerate(prog.layers):
+        comps = set()
+        for ins in prog.instructions:
+            if ins.layer_id == lid and ins.opcode == Opcode.COMP:
+                comps.add((ins.size & 0xFFF, (ins.size >> 12) & 0xFFF))
+        expect = {(i, j) for i in range(len(cl.row_groups))
+                  for j in range(len(cl.k_groups))}
+        assert comps == expect
+
+
+# --------------------------------------------------------------------------
+# Gradient compression: error feedback telescopes (convergence invariant)
+# --------------------------------------------------------------------------
+
+@settings(**_SETTINGS)
+@given(seed=st.integers(0, 999), steps=st.integers(1, 8))
+def test_error_feedback_telescopes(seed, steps):
+    """sum(decoded_t) + err_T == sum(g_t): no information is lost."""
+    rng = np.random.default_rng(seed)
+    err = jnp.zeros((32,), jnp.float32)
+    total_g = jnp.zeros((32,), jnp.float32)
+    total_dec = jnp.zeros((32,), jnp.float32)
+    for t in range(steps):
+        g = jnp.asarray(rng.standard_normal(32), jnp.float32)
+        q, scale, err = compress_grad(g, err)
+        total_g = total_g + g
+        total_dec = total_dec + dequantize_int8(q, scale)
+    np.testing.assert_allclose(np.asarray(total_dec + err),
+                               np.asarray(total_g), rtol=1e-4, atol=1e-4)
