@@ -10,10 +10,11 @@
 from __future__ import annotations
 
 import dataclasses
+import time
 
 from repro.core import perf_model as pm
 from repro.core.dse import DSEResult, run_fpga_dse, run_tpu_dse
-from repro.models.vgg import conv_specs
+from repro.models.vgg import conv_specs, conv_segments
 
 PAPER_GOPS = {"VU9P": 3375.7, "PYNQ-Z1": 83.3}
 
@@ -62,4 +63,69 @@ def run() -> list[dict]:
         "gops": round(8 * _gops(specs, rt.total_latency), 1),
         "wino_layers": sum(p.mode == "wino" for p in rt.plans),
     })
+    rows += run_runtime_comparison()
     return rows
+
+
+def run_runtime_comparison(*, img: int = 32, scale: int = 16, batch: int = 2,
+                           iters: int = 10) -> list[dict]:
+    """Interpreter vs cached-jitted-executor wall clock on the reduced VGG16
+    stack — the validate-once/trace-many payoff measured end-to-end.
+
+    Plans alternate Winograd/Spatial so the comparison exercises both CONV
+    modes, the U-space weight path, and the WINO<->SPAT layout reorders.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.compiler import LayerPlan, compile_network
+    from repro.core.hybrid_conv import max_pool2d
+    from repro.core.runtime import HybridRuntime
+
+    specs = conv_specs(img=img, scale=scale)
+    plans = [LayerPlan("wino" if i % 2 == 0 else "spat", "is" if i % 2 else "ws",
+                       m=2, g_k=2, g_h=2) for i, _ in enumerate(specs)]
+    rng = np.random.default_rng(0)
+    params = [(jnp.asarray(rng.standard_normal((s.r, s.s, s.c, s.k)),
+                           jnp.float32) * (s.r * s.s * s.c) ** -0.5,
+               jnp.zeros((s.k,), jnp.float32)) for s in specs]
+    x = jnp.asarray(rng.standard_normal((batch, img, img, specs[0].c)),
+                    jnp.float32)
+
+    jit_rts, strict_rts, idx = [], [], 0
+    for n in conv_segments():
+        program = compile_network(specs[idx:idx + n], plans[idx:idx + n])
+        for strict, dst in ((False, jit_rts), (True, strict_rts)):
+            r = HybridRuntime(program, strict=strict)
+            r.load_params(params[idx:idx + n])
+            dst.append(r)
+        idx += n
+
+    def request(rts, x):
+        for r in rts:
+            x = max_pool2d(r.run(x))
+        return x
+
+    # warm BOTH paths before timing so neither side pays first-use XLA op
+    # compilation inside the measured region
+    y_jit = jax.block_until_ready(request(jit_rts, x))   # validate + compile
+    jax.block_until_ready(request(strict_rts, x))
+    t0 = time.monotonic()
+    for _ in range(iters):
+        y_jit = jax.block_until_ready(request(jit_rts, x))
+    t_jit = (time.monotonic() - t0) / iters
+
+    t0 = time.monotonic()
+    y_int = jax.block_until_ready(request(strict_rts, x))
+    t_int = time.monotonic() - t0
+    err = float(jnp.max(jnp.abs(y_jit - y_int)))
+
+    return [{
+        "bench": "table4_vgg16", "name": "runtime/jit_vs_interpreter",
+        "config": f"img{img}_scale{scale}_batch{batch}",
+        "interp_ms": round(t_int * 1e3, 1),
+        "jit_ms": round(t_jit * 1e3, 2),
+        "speedup": round(t_int / t_jit, 1),
+        "max_abs_diff": err,
+    }]

@@ -55,8 +55,8 @@ def main():
         print(f"restarts: {log['restarts']} (recovered and finished 20 steps)")
 
         print("\n== elastic re-mesh: restore onto a different mesh ==")
-        mesh = jax.make_mesh((1,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import make_mesh
+        mesh = make_mesh((1,), ("model",))
         # a different (here trivial) mesh: every leaf re-placed by device_put
         restored, step = ckpt_lib.restore(ckpt_dir, (params, opt_state))
         print(f"restored step {step}; continuing 5 more steps on new mesh")

@@ -1,0 +1,72 @@
+"""Version-compat shims over JAX APIs that moved between releases.
+
+The repo is written against current JAX, but CI and the dev container pin
+older releases; every renamed/moved symbol we depend on funnels through this
+module so the rest of the codebase can use one spelling:
+
+* ``pltpu.CompilerParams``      (new)  vs ``pltpu.TPUCompilerParams`` (old)
+* ``jax.sharding.AxisType``     (new)  — ``jax.make_mesh(axis_types=...)``
+                                         simply isn't available on old JAX
+* ``jax.shard_map(check_vma=)`` (new)  vs ``jax.experimental.shard_map``'s
+                                         ``shard_map(check_rep=)``   (old)
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Sequence
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+# -- Pallas TPU compiler params --------------------------------------------
+
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs: Any):
+    """``pltpu.CompilerParams`` under whichever name this JAX exports."""
+    return _COMPILER_PARAMS_CLS(**kwargs)
+
+
+# -- Mesh construction ------------------------------------------------------
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              **kwargs: Any):
+    """``jax.make_mesh`` with Auto axis_types where supported.
+
+    New JAX wants explicit axis_types to silence the sharding-in-types
+    migration; old JAX has no ``AxisType`` and no such parameter.
+    """
+    axis_type = getattr(getattr(jax.sharding, "AxisType", None), "Auto", None)
+    if axis_type is not None:
+        kwargs.setdefault("axis_types", (axis_type,) * len(axis_names))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+# -- collective axis size ---------------------------------------------------
+
+def axis_size(axis_name) -> int:
+    """``jax.lax.axis_size`` (new) / ``psum(1, axis)`` fallback (old)."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+# -- shard_map --------------------------------------------------------------
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` (new) / ``jax.experimental.shard_map`` (old).
+
+    ``check_vma`` maps onto the pre-rename ``check_rep``. The kwarg is
+    chosen by inspecting the actual signature — mid-range JAX exposes
+    ``jax.shard_map`` but still spells the argument ``check_rep``.
+    """
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+    kw = "check_vma" if "check_vma" in inspect.signature(sm).parameters \
+        else "check_rep"
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              **{kw: check_vma})

@@ -22,12 +22,13 @@ asymmetry exactly.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
 
 import numpy as np
 
 from repro.core.hybrid_conv import ConvSpec
-from repro.core.isa import Instruction, Opcode
+from repro.core.isa import Instruction, Opcode, encode_stream
 from repro.core.layouts import layout_for_mode
 from repro.core.winograd import R_WINO, pt_for
 
@@ -64,6 +65,26 @@ class Program:
     instructions: list[Instruction]
     layers: list[CompiledLayer]
     dram_size_words: int
+    _schedule_key: str | None = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def schedule_key(self) -> str:
+        """Content hash of the schedule — the program-cache identity.
+
+        Covers the encoded 128-bit instruction image plus every static
+        field the executor lowers against (spec, plan, group geometry,
+        layouts); DRAM addresses are deliberately included via the encoded
+        stream so two programs only alias if their streams are bit-equal.
+        """
+        if self._schedule_key is None:
+            h = hashlib.sha256()
+            h.update(encode_stream(self.instructions).tobytes())
+            for cl in self.layers:
+                h.update(repr((cl.spec, cl.plan, cl.row_groups, cl.k_groups,
+                               cl.inp_layout, cl.out_layout, cl.out_m)
+                              ).encode())
+            self._schedule_key = h.hexdigest()
+        return self._schedule_key
 
 
 def _split(total: int, groups: int, align: int = 1) -> list[tuple[int, int]]:

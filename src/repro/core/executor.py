@@ -1,0 +1,317 @@
+"""Two-phase program execution: validate once, trace many.
+
+The ``HybridRuntime`` interpreter replays the 128-bit ISA stream one Python
+dispatch at a time — one hazard check and one ``staging.at[].set()`` per
+instruction — which is faithful to the hardware handshake FIFOs (Sec. 4.1)
+but caps end-to-end inference at Python speed. This module splits that job
+into the two phases the paper's accelerator actually has:
+
+* **Phase 1 — schedule validation** (:func:`validate_schedule`): replay the
+  instruction stream against *symbolic* buffer state only (slot tags, block
+  sets — no tensors). This enforces the identical handshake-FIFO discipline
+  as the interpreter — LOAD over a live slot, COMP before its LOADs, SAVE
+  before COMP, a missing final SAVE all raise :class:`HazardError` — and
+  produces the same pipeline-statistics counters. It runs once per
+  ``Program``; the hardware analog is the one-time bitstream/schedule check
+  before the stream is burned into instruction memory.
+
+* **Phase 2 — lowering** (:func:`lower_program`): turn the validated
+  schedule into a pure function ``execute(params, x) -> y`` made only of
+  ``lax``/``jnp`` ops with static Python control flow — per-layer blocked
+  compute (the same row-group/k-group blocks the COMP instructions name)
+  assembled with ``concatenate`` instead of per-instruction dict staging.
+  The result is ``jax.jit``-compatible and is cached per
+  ``(Program, batch, dtype)`` by :mod:`repro.core.program_cache`.
+
+Numerical contract: for a stream that passes validation, the lowered
+function computes block-for-block the same math as the interpreter (same
+halo slicing, same horizontal padding, same U-space weight pre-transform,
+same dtype casts), so outputs agree to float-associativity tolerance.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import layouts
+from repro.core.compiler import CompiledLayer, Program
+from repro.core.hybrid_conv import hybrid_conv2d
+from repro.core.isa import Opcode
+from repro.core.winograd import transform_weights, winograd_apply_pretransformed
+
+
+class HazardError(RuntimeError):
+    """Instruction-stream hazard: the handshake FIFO discipline was violated.
+
+    Shared by the interpreter and the validation pass (``runtime.py``
+    re-exports this class so existing ``except HazardError`` sites keep
+    working).
+    """
+
+
+def _fresh_stats() -> dict[str, int]:
+    return {"load_inp": 0, "load_wgt": 0, "load_bias": 0,
+            "comp": 0, "save": 0, "inp_words": 0, "wgt_words": 0}
+
+
+# ---------------------------------------------------------------------------
+# Phase 1: schedule validation (symbolic replay, no tensors)
+# ---------------------------------------------------------------------------
+
+def validate_schedule(program: Program) -> dict[str, int]:
+    """Replay the hazard/FIFO discipline once, without any compute.
+
+    Mirrors ``HybridRuntime``'s checks exactly — the tags that the
+    interpreter attaches to tensor payloads are tracked here on their own.
+    Returns the pipeline statistics counters (same keys as
+    ``HybridRuntime.stats``); raises :class:`HazardError` on the first
+    violation.
+    """
+    stats = _fresh_stats()
+    inp_tags: list[tuple | None] = [None, None]
+    wgt_tags: list[tuple | None] = [None, None]
+    bias_tag: tuple | None = None
+    out_blocks: set[tuple[int, int]] = set()
+    saved_any = False
+    cur_layer = -1
+
+    def flush(layer_id: int):
+        if out_blocks:
+            raise HazardError(
+                f"layer {layer_id}: {len(out_blocks)} COMP blocks never SAVEd")
+        if not saved_any:
+            raise HazardError(f"layer {layer_id}: no SAVE executed")
+
+    for ins in program.instructions:
+        cl = program.layers[ins.layer_id]
+        if ins.layer_id != cur_layer:
+            if cur_layer >= 0:
+                flush(cur_layer)
+            cur_layer = ins.layer_id
+            out_blocks = set()
+            saved_any = False
+
+        op = ins.opcode
+        if op == Opcode.LOAD_BIAS:
+            bias_tag = (ins.layer_id,)
+            stats["load_bias"] += 1
+        elif op == Opcode.LOAD_INP:
+            ih, slot = ins.buff_base >> 1, ins.buff_base & 1
+            inp_tags[slot] = (ins.layer_id, ih)
+            stats["load_inp"] += 1
+            stats["inp_words"] += ins.size
+        elif op == Opcode.LOAD_WGT:
+            kg, slot = ins.buff_base >> 1, ins.buff_base & 1
+            wgt_tags[slot] = (ins.layer_id, kg)
+            stats["load_wgt"] += 1
+            stats["wgt_words"] += ins.size
+        elif op == Opcode.COMP:
+            ih = ins.size & 0xFFF
+            kg = (ins.size >> 12) & 0xFFF
+            islot = (ins.size >> 24) & 1
+            wslot = (ins.size >> 25) & 1
+            if inp_tags[islot] != (ins.layer_id, ih):
+                raise HazardError(
+                    f"COMP L{ins.layer_id} row-group {ih}: input slot "
+                    f"{islot} holds {inp_tags[islot]}")
+            if wgt_tags[wslot] != (ins.layer_id, kg):
+                raise HazardError(
+                    f"COMP L{ins.layer_id} k-group {kg}: weight slot "
+                    f"{wslot} holds {wgt_tags[wslot]}")
+            if bias_tag != (ins.layer_id,):
+                raise HazardError(f"COMP L{ins.layer_id}: stale bias buffer")
+            out_blocks.add((ih, kg))
+            stats["comp"] += 1
+        elif op == Opcode.SAVE:
+            ih = ins.size & 0xFFF
+            kg = (ins.size >> 12) & 0xFFF
+            if cl.plan.dataflow == "is":
+                need = [(ih, g) for g in range(len(cl.k_groups))]
+            else:
+                need = [(ih, kg)]
+            for key in need:
+                if key not in out_blocks:
+                    raise HazardError(
+                        f"SAVE L{ins.layer_id} block {key} not computed")
+                out_blocks.discard(key)
+            saved_any = True
+            stats["save"] += 1
+        else:
+            raise ValueError(op)
+
+    if cur_layer >= 0:
+        flush(cur_layer)
+    else:
+        raise HazardError("empty instruction stream")
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Phase 2: lowering to a pure, traceable function
+# ---------------------------------------------------------------------------
+
+def slice_input_rows(cl: CompiledLayer, x_nhwc: jax.Array, ih: int) -> jax.Array:
+    """Static-slice the input rows (plus halo) for output row group ``ih``.
+
+    Shared with the interpreter (``HybridRuntime._load_input_group``
+    delegates here) so the two paths can never drift. Everything is
+    Python-int static, so the slice lowers to a plain XLA slice.
+    """
+    spec = cl.spec
+    r0, r1 = cl.row_groups[ih]
+    pad = (spec.r - 1) // 2 if spec.padding.upper() == "SAME" else 0
+    in_lo = r0 * spec.stride - pad
+    in_hi = (r1 - 1) * spec.stride + spec.r - pad
+    pad_top = max(0, -in_lo)
+    pad_bot = max(0, in_hi - spec.h)
+    sl = x_nhwc[:, max(0, in_lo):min(spec.h, in_hi)]
+    if pad_top or pad_bot:
+        sl = jnp.pad(sl, ((0, 0), (pad_top, pad_bot), (0, 0), (0, 0)))
+    return sl
+
+
+def width_pad(cl: CompiledLayer) -> tuple[int, int]:
+    """Horizontal conv padding (vertical halo is materialized by the slice)."""
+    if cl.spec.padding.upper() == "SAME":
+        pad_w = (cl.spec.s - 1) // 2
+        return (pad_w, cl.spec.s - 1 - pad_w)
+    return (0, 0)
+
+
+def _layer_forward(cl: CompiledLayer, w_eff: jax.Array, bias: jax.Array,
+                   x_stored: jax.Array, relu_of) -> jax.Array:
+    """One layer as blocked compute over the compiled (row, k) groups.
+
+    ``w_eff`` is the DRAM-resident weight image: U-space ``(PT, PT, C, K)``
+    for Winograd layers, raw ``(R, S, C, K)`` for Spatial — exactly what
+    ``HybridRuntime.load_params`` stores. ``relu_of(ih, kg)`` is the COMP
+    instruction's RELU bit for that block (the stream is authoritative, not
+    the spec — the interpreter obeys ``ins.relu_flag`` and so must we).
+    """
+    spec, plan = cl.spec, cl.plan
+    x = layouts.load_view(x_stored, cl.inp_layout, hw=(spec.h, spec.w))
+    dtype = x_stored.dtype
+    wpad = width_pad(cl)
+
+    row_slabs = []
+    for ih, (r0, r1) in enumerate(cl.row_groups):
+        x_slab = slice_input_rows(cl, x, ih)
+        k_blocks = []
+        for kg, (lo, hi) in enumerate(cl.k_groups):
+            w_grp = w_eff[..., lo:hi]
+            b_grp = bias[lo:hi]
+            relu = relu_of(ih, kg)
+            if plan.mode == "wino":
+                x_p = jnp.pad(x_slab, ((0, 0), (0, 0), wpad, (0, 0)))
+                blk = winograd_apply_pretransformed(
+                    x_p, w_grp, b_grp, plan.m, relu=relu,
+                    padding="VALID", out_dtype=dtype)
+            else:
+                blk = hybrid_conv2d(
+                    x_slab, w_grp, b_grp, mode="spat",
+                    dataflow=plan.dataflow, stride=spec.stride,
+                    relu=relu, padding=[(0, 0), wpad],
+                    use_pallas=False, out_dtype=dtype)
+            k_blocks.append(blk[:, :r1 - r0].astype(dtype))
+        row_slabs.append(k_blocks[0] if len(k_blocks) == 1
+                         else jnp.concatenate(k_blocks, axis=-1))
+    y = row_slabs[0] if len(row_slabs) == 1 else jnp.concatenate(row_slabs, 1)
+    if cl.out_layout == "wino":
+        y = layouts.save_transform(y, "wino", cl.out_m)
+    return y
+
+
+def to_dram_params(program: Program, params: list) -> list:
+    """Raw ``[(w_rsck, bias), ...]`` -> the DRAM weight image the executor
+    consumes: U-space ``(PT, PT, C, K)`` for Winograd layers, raw for
+    Spatial — identical to what ``HybridRuntime.load_params`` stores. Pure
+    jax, so it is differentiable and may run host-side (once, the paper's
+    offline transform) or inside a caller's own trace.
+    """
+    out = []
+    for cl, (w, b) in zip(program.layers, params):
+        if cl.plan.mode == "wino":
+            assert cl.spec.r == 3 and cl.spec.s == 3, \
+                "runtime pre-transform supports r=s=3 (VGG family)"
+            w = transform_weights(w, cl.plan.m)
+        out.append((w, b))
+    return out
+
+
+def lower_program(program: Program) -> Callable[[list, jax.Array], jax.Array]:
+    """Lower a validated schedule to ``execute(params, x_nhwc) -> y_nhwc``.
+
+    ``params`` is the per-layer **DRAM weight image** — pre-transformed to
+    U-space for Winograd layers (see :func:`to_dram_params`). Keeping the
+    transform out of the traced function means steady-state calls never
+    redo weight work: jit treats params as arguments, so anything computed
+    from them inside the trace would re-execute every call.
+    """
+    for cl in program.layers:
+        if cl.plan.mode == "wino":
+            assert cl.spec.r == 3 and cl.spec.s == 3, \
+                "runtime pre-transform supports r=s=3 (VGG family)"
+
+    # the stream's COMP RELU bits are the authority (compiler sets them to
+    # spec.relu, but hand-built/decoded streams may differ per block)
+    relu_bits: dict[tuple[int, int, int], bool] = {}
+    for ins in program.instructions:
+        if ins.opcode == Opcode.COMP:
+            ih = ins.size & 0xFFF
+            kg = (ins.size >> 12) & 0xFFF
+            relu_bits[(ins.layer_id, ih, kg)] = ins.relu_flag
+
+    def execute(params: list, x_nhwc: jax.Array) -> jax.Array:
+        cl0 = program.layers[0]
+        x = x_nhwc
+        if cl0.inp_layout == "wino":
+            x = layouts.save_transform(x, "wino", cl0.plan.m)
+        for cl, (w_eff, b) in zip(program.layers, params):
+            x = _layer_forward(
+                cl, w_eff, b, x,
+                lambda ih, kg, cl=cl: relu_bits.get((cl.layer_id, ih, kg),
+                                                    cl.spec.relu))
+        return x
+
+    return execute
+
+
+# ---------------------------------------------------------------------------
+# Compiled executor: validation + lowering + jit, with trace accounting
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CompiledExecutor:
+    """A jitted executor for one ``(Program, batch, dtype)`` cache entry."""
+    program: Program
+    stats: dict[str, int]          # schedule-validation pipeline counters
+    fn: Callable                   # jitted execute(params, x)
+    _trace_count: list
+
+    @property
+    def trace_count(self) -> int:
+        """How many times the underlying function was traced (retrace probe)."""
+        return self._trace_count[0]
+
+    def __call__(self, params: list, x_nhwc: jax.Array) -> jax.Array:
+        """``params`` is the DRAM weight image (see :func:`to_dram_params`)."""
+        return self.fn(params, x_nhwc)
+
+
+def compile_executor(program: Program,
+                     stats: dict[str, int] | None = None) -> CompiledExecutor:
+    """Validate (unless pre-validated stats are supplied), lower, and jit."""
+    if stats is None:
+        stats = validate_schedule(program)
+    execute = lower_program(program)
+    trace_count = [0]
+
+    def traced(params, x):
+        trace_count[0] += 1     # Python side effect: fires at trace time only
+        return execute(params, x)
+
+    return CompiledExecutor(program=program, stats=dict(stats),
+                            fn=jax.jit(traced), _trace_count=trace_count)

@@ -1,0 +1,109 @@
+"""Compiled-program cache: one jitted executor per ``(Program, batch, dtype)``.
+
+Keying rules
+------------
+The cache key is ``(program.schedule_key(), batch, dtype)``:
+
+* ``schedule_key()`` (see ``core/compiler.py``) is a content hash over the
+  encoded 128-bit instruction stream plus the per-layer geometry (spec, plan,
+  row/k groups, layouts). Two ``Program`` objects with identical schedules —
+  e.g. recompiled from the same specs/plans — share one cache entry; any
+  change to an instruction or a group boundary produces a new key.
+* ``batch``, ``dtype`` and (when supplied) the per-layer weight dtypes pin
+  the trace: jit would silently retrace on a new input shape/dtype or a
+  changed param dtype, so they are part of the key to make (re)compilation
+  an observable, counted event rather than a hidden stall.
+
+Schedule validation runs **once per schedule key** (not per entry): executors
+for new batch sizes of an already-validated program reuse the cached
+validation stats. Entries are LRU-evicted beyond ``maxsize``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+
+import jax.numpy as jnp
+
+from repro.core.compiler import Program
+from repro.core.executor import CompiledExecutor, compile_executor, validate_schedule
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+
+class ProgramCache:
+    """LRU cache of :class:`CompiledExecutor` keyed by (schedule, batch, dtype)."""
+
+    def __init__(self, maxsize: int = 64):
+        self.maxsize = maxsize
+        self.stats = CacheStats()
+        self._entries: OrderedDict[tuple, CompiledExecutor] = OrderedDict()
+        self._validated: dict[str, dict[str, int]] = {}
+        self._lock = threading.Lock()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def validate(self, program: Program) -> dict[str, int]:
+        """Hazard-check ``program`` once per schedule key; return counters."""
+        key = program.schedule_key()
+        with self._lock:
+            stats = self._validated.get(key)
+        if stats is None:
+            stats = validate_schedule(program)   # raises HazardError
+            with self._lock:
+                self._validated[key] = stats
+        return dict(stats)
+
+    def get(self, program: Program, *, batch: int, dtype,
+            param_dtypes: tuple = ()) -> CompiledExecutor:
+        """The jitted executor for ``program`` at this batch/dtype (compile on miss).
+
+        ``param_dtypes`` (one name per layer's weight) joins the key when
+        weights may not share the input dtype — otherwise jit would silently
+        retrace on the changed param dtypes behind a counted "hit".
+        """
+        key = (program.schedule_key(), int(batch), jnp.dtype(dtype).name,
+               tuple(param_dtypes))
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is not None:
+                self._entries.move_to_end(key)
+                self.stats.hits += 1
+                return entry
+        stats = self.validate(program)
+        entry = compile_executor(program, stats=stats)
+        with self._lock:
+            # re-check: a racing thread may have compiled the same key while
+            # we were outside the lock — first insert wins so every caller
+            # holds the same CompiledExecutor identity
+            existing = self._entries.get(key)
+            if existing is not None:
+                self.stats.hits += 1
+                return existing
+            self._entries[key] = entry
+            self.stats.misses += 1
+            while len(self._entries) > self.maxsize:
+                self._entries.popitem(last=False)
+                self.stats.evictions += 1
+        return entry
+
+    def clear(self):
+        with self._lock:
+            self._entries.clear()
+            self._validated.clear()
+            self.stats = CacheStats()
+
+
+_default = ProgramCache()
+
+
+def default_cache() -> ProgramCache:
+    """The process-wide cache used by ``HybridRuntime`` unless one is passed."""
+    return _default

@@ -1,14 +1,25 @@
 """Light-weight runtime: executes a HybridDNN instruction stream (Sec. 3 (4)).
 
-A functional interpreter of the 128-bit ISA. It models the accelerator's
-on-chip state — ping-pong input/weight buffers, a bias buffer and the
-accumulating output buffer — and enforces the handshake-FIFO hazard
-discipline of Sec. 4.1: COMP validates that the buffer slots it addresses
-hold the (layer, group) data its operands require (the "wait for the
-producer's token"), and SAVE validates that every block it flushes was
-produced (the "consumer token" on the COMP->SAVE FIFO). A mis-scheduled
-stream — LOAD overwriting a live slot, COMP before its LOADs, SAVE before
-COMP — raises ``HazardError`` rather than silently computing garbage.
+Two execution paths share one hazard contract:
+
+* ``strict=True`` — the original functional interpreter of the 128-bit ISA.
+  It models the accelerator's on-chip state — ping-pong input/weight buffers,
+  a bias buffer and the accumulating output buffer — and enforces the
+  handshake-FIFO hazard discipline of Sec. 4.1 *per instruction*: COMP
+  validates that the buffer slots it addresses hold the (layer, group) data
+  its operands require, and SAVE validates that every block it flushes was
+  produced. A mis-scheduled stream — LOAD overwriting a live slot, COMP
+  before its LOADs, SAVE before COMP — raises ``HazardError`` rather than
+  silently computing garbage.
+
+* default — the **validate-once, trace-many** path (``core/executor.py``):
+  the same hazard discipline runs once per ``Program`` as a symbolic
+  schedule-validation pass (same ``HazardError``s, same ``stats`` counters),
+  then a pure jitted ``execute(params, x)`` — cached per
+  ``(Program, batch, dtype)`` in ``core/program_cache.py`` — does the math
+  as a static dataflow with no Python-level dispatch. This is how the
+  hardware runs: the stream is checked when it is written, not re-checked
+  every inference.
 
 DRAM is a word-addressed store (dict base-address -> tensor). Winograd-mode
 weights live in DRAM pre-transformed to U-space (Sec. 4.2.3), so LOAD_WGT
@@ -25,6 +36,11 @@ import numpy as np
 
 from repro.core import layouts
 from repro.core.compiler import CompiledLayer, Program
+from repro.core.executor import (  # noqa: F401  (HazardError re-export)
+    HazardError,
+    slice_input_rows,
+    width_pad,
+)
 from repro.core.hybrid_conv import hybrid_conv2d
 from repro.core.isa import Instruction, Opcode
 from repro.core.winograd import (
@@ -32,10 +48,6 @@ from repro.core.winograd import (
     transform_weights,
     winograd_apply_pretransformed,
 )
-
-
-class HazardError(RuntimeError):
-    """Instruction-stream hazard: the handshake FIFO discipline was violated."""
 
 
 @dataclasses.dataclass
@@ -48,19 +60,31 @@ class HybridRuntime:
     """Executes a compiled Program against DRAM-resident params and input."""
 
     def __init__(self, program: Program, use_pallas: bool = False,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None, strict: bool = False,
+                 cache=None):
         self.program = program
         self.use_pallas = use_pallas
         self.interpret = interpret
+        self.strict = strict
+        self._cache = cache
         self.dram: dict[int, Any] = {}
+        self._raw_params: list[tuple[Any, Any]] | None = None
         # pipeline statistics (4-stage pipeline occupancy model)
         self.stats = {"load_inp": 0, "load_wgt": 0, "load_bias": 0,
                       "comp": 0, "save": 0,
                       "inp_words": 0, "wgt_words": 0}
 
+    @property
+    def cache(self):
+        if self._cache is None:
+            from repro.core.program_cache import default_cache
+            self._cache = default_cache()
+        return self._cache
+
     # -- DRAM management ----------------------------------------------------
     def load_params(self, params: list[tuple[Any, Any]]):
         """params: [(w_rsck, bias), ...] per layer. Winograd layers store U."""
+        self._raw_params = [tuple(p) for p in params]
         for cl, (w, b) in zip(self.program.layers, params):
             if cl.plan.mode == "wino":
                 assert cl.spec.r == 3 and cl.spec.s == 3, \
@@ -78,6 +102,35 @@ class HybridRuntime:
 
     # -- execution ----------------------------------------------------------
     def run(self, x_nhwc=None):
+        """Validate + execute the program; returns the last layer's output.
+
+        Default: one-time schedule validation (cached per Program) + the
+        jitted executor. ``strict=True``: the per-instruction interpreter.
+        """
+        if self.strict:
+            return self._run_interpreter(x_nhwc)
+        if self._raw_params is None:
+            raise RuntimeError("load_params must be called before run()")
+        if x_nhwc is not None:
+            self.write_input(x_nhwc)       # same DRAM contract as strict mode
+        else:
+            cl0 = self.program.layers[0]
+            x_nhwc = layouts.load_view(self.dram[cl0.inp_addr],
+                                       cl0.inp_layout,
+                                       hw=(cl0.spec.h, cl0.spec.w))
+        # the executor consumes the DRAM weight image load_params already
+        # built (U-space for wino) — no per-request weight work
+        params = [(self.dram[cl.wgt_addr], self.dram[cl.bias_addr])
+                  for cl in self.program.layers]
+        self.stats = self.cache.validate(self.program)   # HazardError on bad streams
+        entry = self.cache.get(
+            self.program, batch=x_nhwc.shape[0], dtype=x_nhwc.dtype,
+            param_dtypes=tuple(jnp.dtype(w.dtype).name for w, _ in params))
+        y = entry(params, x_nhwc)
+        self.dram[self.program.layers[-1].out_addr] = y
+        return y
+
+    def _run_interpreter(self, x_nhwc=None):
         if x_nhwc is not None:
             self.write_input(x_nhwc)
         inp_slots = [_Slot(), _Slot()]
@@ -184,29 +237,21 @@ class HybridRuntime:
         return layouts.load_view(x, cl.inp_layout, hw=(cl.spec.h, cl.spec.w))
 
     def _load_input_group(self, cl: CompiledLayer, ih: int):
-        """Slice the input rows (plus halo) needed for output rows group ih."""
-        spec = cl.spec
-        x = self._input_nhwc(cl)
-        r0, r1 = cl.row_groups[ih]
-        pad = (spec.r - 1) // 2 if spec.padding.upper() == "SAME" else 0
-        in_lo = r0 * spec.stride - pad
-        in_hi = (r1 - 1) * spec.stride + spec.r - pad
-        pad_top = max(0, -in_lo)
-        pad_bot = max(0, in_hi - spec.h)
-        sl = x[:, max(0, in_lo):min(spec.h, in_hi)]
-        if pad_top or pad_bot:
-            sl = jnp.pad(sl, ((0, 0), (pad_top, pad_bot), (0, 0), (0, 0)))
-        return sl
+        """Slice the input rows (plus halo) needed for output rows group ih.
+
+        Delegates to the executor's helper so the interpreter and the jitted
+        path share one copy of the halo arithmetic."""
+        return slice_input_rows(cl, self._input_nhwc(cl), ih)
 
     def _compute(self, cl: CompiledLayer, x_slab, w_grp, bias, ih, kg, ins):
         spec, plan = cl.spec, cl.plan
         lo, hi = cl.k_groups[kg]
         b_grp = bias[lo:hi]
         # horizontal padding only: vertical halo is already materialized
-        pad_w = (spec.s - 1) // 2 if spec.padding.upper() == "SAME" else 0
-        padding = ((0, 0), (pad_w, spec.s - 1 - pad_w))
+        # (VALID convs get no width padding at all); shared with the executor
+        wpad = width_pad(cl)
         if plan.mode == "wino":
-            x_p = jnp.pad(x_slab, ((0, 0), (0, 0), padding[1], (0, 0)))
+            x_p = jnp.pad(x_slab, ((0, 0), (0, 0), wpad, (0, 0)))
             blk = winograd_apply_pretransformed(
                 x_p, w_grp, b_grp, plan.m, relu=ins.relu_flag,
                 padding="VALID", out_dtype=x_slab.dtype)
@@ -214,8 +259,7 @@ class HybridRuntime:
             blk = hybrid_conv2d(
                 x_slab, w_grp, b_grp, mode="spat", dataflow=plan.dataflow,
                 stride=spec.stride, relu=ins.relu_flag,
-                padding=[(0, 0), padding[1]] if spec.padding.upper() == "SAME"
-                else "VALID",
+                padding=[(0, 0), wpad],
                 use_pallas=False)
         r0, r1 = cl.row_groups[ih]
         return blk[:, :r1 - r0]

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
 from repro.kernels.common import INTERPRET
 
 
@@ -101,7 +102,7 @@ def batched_matmul_kernel(
     else:
         raise ValueError(f"unknown dataflow {dataflow!r}")
 
-    compiler_params = pltpu.CompilerParams(
+    compiler_params = tpu_compiler_params(
         dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
     )
     in_specs = [

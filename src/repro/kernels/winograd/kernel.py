@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import tpu_compiler_params
 from repro.core.winograd import pt_for, transform_matrices
 from repro.kernels.common import INTERPRET, round_up
 
@@ -72,7 +73,7 @@ def input_transform_kernel(
         ],
         out_specs=pl.BlockSpec((pt * pt, bt, bc), lambda ti, ci: (0, ti, ci)),
         out_shape=jax.ShapeDtypeStruct((pt * pt, t, c), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(btm, tiles)
@@ -107,7 +108,7 @@ def output_transform_kernel(
         ],
         out_specs=pl.BlockSpec((bt, m, m, bk), lambda ti, ki: (ti, 0, 0, ki)),
         out_shape=jax.ShapeDtypeStruct((t, m, m, k), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(atm, m_arr, bias4)

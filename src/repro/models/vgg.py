@@ -43,6 +43,27 @@ def conv_specs(img: int = 224, scale: int = 1) -> list[ConvSpec]:
     return specs
 
 
+def conv_segments() -> list[int]:
+    """Consecutive-CONV run lengths between maxpools: [2, 2, 3, 3, 3].
+
+    The 128-bit ISA encodes CONV layers only; a pooled network is served as
+    one compiled ``Program`` per segment with the 2x2 maxpool applied
+    between segments (the paper's accelerator does the same — POOL lives
+    outside the CONV instruction stream).
+    """
+    sizes, run = [], 0
+    for entry in _VGG16:
+        if entry == "M":
+            if run:
+                sizes.append(run)
+            run = 0
+        else:
+            run += 1
+    if run:
+        sizes.append(run)
+    return sizes
+
+
 def default_plans(specs: list[ConvSpec] | None = None) -> list[LayerPlan]:
     """DSE-selected plans (TPU target)."""
     from repro.core.dse import run_tpu_dse

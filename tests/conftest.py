@@ -2,6 +2,17 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    # Registered here as well as in pytest.ini so bare `python -m pytest
+    # tests/...` invocations from another rootdir still know the tiers.
+    config.addinivalue_line(
+        "markers", "slow: heavy integration / per-architecture cases "
+        "(full tier; excluded by default)")
+    config.addinivalue_line(
+        "markers", "multidevice: needs >1 device via a subprocess with "
+        "forced host devices (excluded by default)")
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

@@ -33,6 +33,7 @@ def _batch(cfg, b=2, s=16):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", LM_ARCHS)
 def test_forward_shapes_no_nan(arch):
     cfg = get_config(arch).reduced()
@@ -43,6 +44,7 @@ def test_forward_shapes_no_nan(arch):
     assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", LM_ARCHS)
 def test_train_step(arch):
     cfg = get_config(arch).reduced()
@@ -61,6 +63,7 @@ def test_train_step(arch):
                            np.asarray(l1, np.float32))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["minitron-8b", "qwen3-32b", "mamba2-130m",
                                   "zamba2-7b", "whisper-base",
                                   "llama4-scout-17b-16e",

@@ -1,0 +1,208 @@
+"""Validate-once/trace-many executor: parity with the interpreter across
+every (mode x dataflow x padding) cell, program-cache hit behavior, and
+schedule-key identity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compiler import LayerPlan, Program, compile_network
+from repro.core.executor import (
+    compile_executor,
+    lower_program,
+    to_dram_params,
+    validate_schedule,
+)
+from repro.core.hybrid_conv import ConvSpec
+from repro.core.program_cache import ProgramCache
+from repro.core.runtime import HybridRuntime, run_program
+
+# atol/rtol per dtype: the jitted executor may fuse/reassociate what the
+# interpreter dispatched op-by-op
+_TOL = {jnp.float32: dict(rtol=1e-4, atol=1e-4),
+        jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def _net(padding="SAME", dtype=jnp.float32):
+    h = 12
+    specs = [
+        ConvSpec("c1", h, h, 3, 8, padding=padding, relu=True),
+        ConvSpec("c2", h - (2 if padding == "VALID" else 0),
+                 h - (2 if padding == "VALID" else 0), 8, 12,
+                 padding=padding, relu=False),
+    ]
+    params = []
+    for i, s in enumerate(specs):
+        kw, kb = jax.random.split(jax.random.PRNGKey(i), 2)
+        params.append((
+            (jax.random.normal(kw, (s.r, s.s, s.c, s.k)) * 0.2).astype(dtype),
+            (jax.random.normal(kb, (s.k,)) * 0.1).astype(dtype)))
+    x = jax.random.normal(jax.random.PRNGKey(99), (2, h, h, 3)).astype(dtype)
+    return specs, params, x
+
+
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+@pytest.mark.parametrize("dataflow", ["is", "ws"])
+@pytest.mark.parametrize("mode", ["spat", "wino"])
+def test_executor_matches_interpreter(mode, dataflow, padding):
+    """Jitted executor == per-instruction interpreter on a 2-layer net with
+    mixed modes between layers (exercising the WINO<->SPAT reorders)."""
+    specs, params, x = _net(padding)
+    other = "spat" if mode == "wino" else "wino"
+    plans = [LayerPlan(mode, dataflow, 2, 2, 2),
+             LayerPlan(other, dataflow, 2, 1, 2)]
+    prog = compile_network(specs, plans)
+    y_interp = run_program(prog, params, x, strict=True)
+    y_jit = run_program(prog, params, x)
+    assert y_jit.shape == y_interp.shape and y_jit.dtype == y_interp.dtype
+    np.testing.assert_allclose(np.asarray(y_jit), np.asarray(y_interp),
+                               **_TOL[jnp.float32])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_executor_dtype_parity(dtype):
+    specs, params, x = _net("SAME", dtype)
+    plans = [LayerPlan("wino", "is", 2, 2, 2), LayerPlan("spat", "ws", 2, 2, 2)]
+    prog = compile_network(specs, plans)
+    y_interp = run_program(prog, params, x, strict=True)
+    y_jit = run_program(prog, params, x)
+    assert y_jit.dtype == dtype
+    np.testing.assert_allclose(np.asarray(y_jit, np.float32),
+                               np.asarray(y_interp, np.float32), **_TOL[dtype])
+
+
+def test_executor_stats_match_interpreter():
+    """Schedule validation produces the interpreter's pipeline counters."""
+    specs, params, x = _net()
+    plans = [LayerPlan("wino", "is", 2, 2, 2), LayerPlan("spat", "ws", 2, 3, 2)]
+    prog = compile_network(specs, plans)
+    rt_i = HybridRuntime(prog, strict=True)
+    rt_i.load_params(params)
+    rt_i.run(x)
+    rt_j = HybridRuntime(prog)
+    rt_j.load_params(params)
+    rt_j.run(x)
+    assert rt_i.stats == rt_j.stats
+    assert rt_j.stats == validate_schedule(prog)
+
+
+def test_cache_hit_same_program_no_retrace():
+    """Same Program + batch + dtype -> the same compiled fn, traced once."""
+    specs, params, x = _net()
+    plans = [LayerPlan("spat", "is", 2, 2, 2), LayerPlan("wino", "is", 2, 2, 2)]
+    prog = compile_network(specs, plans)
+    cache = ProgramCache()
+    dram = to_dram_params(prog, params)
+    e1 = cache.get(prog, batch=2, dtype=jnp.float32)
+    e1(dram, x)
+    e2 = cache.get(prog, batch=2, dtype=jnp.float32)
+    e2(dram, x)
+    assert e1 is e2
+    assert e1.trace_count == 1
+    assert cache.stats.hits == 1 and cache.stats.misses == 1
+
+
+def test_cache_recompiled_program_shares_entry():
+    """compile_network twice from the same specs/plans -> same schedule key
+    -> one cache entry (validate-once survives recompiles)."""
+    specs, params, x = _net()
+    plans = [LayerPlan("spat", "is", 2, 2, 2), LayerPlan("wino", "is", 2, 2, 2)]
+    p1 = compile_network(specs, plans)
+    p2 = compile_network(specs, plans)
+    assert p1 is not p2 and p1.schedule_key() == p2.schedule_key()
+    cache = ProgramCache()
+    assert cache.get(p1, batch=2, dtype=jnp.float32) \
+        is cache.get(p2, batch=2, dtype=jnp.float32)
+
+
+def test_cache_key_separates_batch_and_dtype():
+    specs, params, x = _net()
+    plans = [LayerPlan("spat", "is", 2, 1, 1), LayerPlan("spat", "is", 2, 1, 1)]
+    prog = compile_network(specs, plans)
+    cache = ProgramCache()
+    a = cache.get(prog, batch=2, dtype=jnp.float32)
+    b = cache.get(prog, batch=4, dtype=jnp.float32)
+    c = cache.get(prog, batch=2, dtype=jnp.bfloat16)
+    assert a is not b and a is not c and b is not c
+    assert cache.stats.misses == 3 and len(cache) == 3
+
+
+def test_cache_lru_eviction():
+    specs, params, x = _net()
+    plans = [LayerPlan("spat", "is", 2, 1, 1), LayerPlan("spat", "is", 2, 1, 1)]
+    prog = compile_network(specs, plans)
+    cache = ProgramCache(maxsize=2)
+    for batch in (1, 2, 3):
+        cache.get(prog, batch=batch, dtype=jnp.float32)
+    assert len(cache) == 2 and cache.stats.evictions == 1
+
+
+def test_schedule_key_changes_with_stream():
+    specs, params, x = _net()
+    plans = [LayerPlan("spat", "is", 2, 2, 2), LayerPlan("spat", "is", 2, 2, 2)]
+    p1 = compile_network(specs, plans)
+    p2 = compile_network(specs, [LayerPlan("wino", "is", 2, 2, 2),
+                                 LayerPlan("spat", "is", 2, 2, 2)])
+    assert p1.schedule_key() != p2.schedule_key()
+
+
+def test_lowered_fn_is_jittable_and_gradable():
+    """The lowered executor is a pure jax function: grads flow through it."""
+    specs, params, x = _net()
+    plans = [LayerPlan("wino", "is", 2, 2, 2), LayerPlan("spat", "is", 2, 2, 2)]
+    prog = compile_network(specs, plans)
+    validate_schedule(prog)
+    execute = lower_program(prog)
+
+    def loss(params):
+        # differentiate through the raw->U-space transform AND the executor
+        return jnp.sum(execute(to_dram_params(prog, params), x) ** 2)
+
+    g = jax.grad(loss)(params)
+    total = sum(float(jnp.sum(jnp.abs(leaf))) for leaf in jax.tree.leaves(g))
+    assert np.isfinite(total) and total > 0
+
+
+def test_executor_honors_comp_relu_bit():
+    """The stream's RELU bits are authoritative: a hand-flipped COMP relu
+    flag must change the executor's output exactly like the interpreter's."""
+    from repro.core.isa import Opcode
+    specs, params, x = _net()
+    plans = [LayerPlan("spat", "is", 2, 2, 2), LayerPlan("spat", "is", 2, 2, 2)]
+    prog = compile_network(specs, plans)
+    flipped = Program(
+        [dataclasses.replace(i, relu_flag=False) if i.opcode == Opcode.COMP
+         else i for i in prog.instructions],
+        prog.layers, prog.dram_size_words)
+    y_interp = run_program(flipped, params, x, strict=True)
+    y_jit = run_program(flipped, params, x)
+    np.testing.assert_allclose(np.asarray(y_jit), np.asarray(y_interp),
+                               **_TOL[jnp.float32])
+    # and the flip actually matters: relu-on vs relu-off streams differ
+    y_relu = run_program(prog, params, x, strict=True)
+    assert not np.allclose(np.asarray(y_interp), np.asarray(y_relu))
+
+
+def test_run_with_input_then_replay_from_dram():
+    """run(x) persists the input in DRAM like strict mode, so run() replays."""
+    specs, params, x = _net()
+    plans = [LayerPlan("wino", "is", 2, 2, 2), LayerPlan("spat", "is", 2, 2, 2)]
+    prog = compile_network(specs, plans)
+    rt = HybridRuntime(prog)
+    rt.load_params(params)
+    y1 = rt.run(x)
+    y2 = rt.run()          # no input: replay from DRAM, as strict mode does
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=0, atol=0)
+
+
+def test_compile_executor_reports_stats():
+    specs, params, x = _net()
+    plans = [LayerPlan("spat", "ws", 2, 2, 2), LayerPlan("spat", "is", 2, 2, 2)]
+    prog = compile_network(specs, plans)
+    ex = compile_executor(prog)
+    assert ex.stats["comp"] == sum(
+        len(cl.row_groups) * len(cl.k_groups) for cl in prog.layers)
+    y = ex(params, x)
+    assert y.shape == (2, 12, 12, specs[-1].k)

@@ -1,0 +1,105 @@
+"""Hazard discipline: mis-scheduled instruction streams must raise
+``HazardError`` in BOTH execution paths — the per-instruction interpreter
+(``strict=True``) and the one-shot schedule-validation pass that guards the
+jitted executor."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.compiler import LayerPlan, Program, compile_network
+from repro.core.executor import validate_schedule
+from repro.core.hybrid_conv import ConvSpec
+from repro.core.isa import Opcode
+from repro.core.runtime import HazardError, HybridRuntime
+
+
+def _net():
+    specs = [ConvSpec("c1", 16, 16, 3, 8, relu=True),
+             ConvSpec("c2", 16, 16, 8, 12, relu=False)]
+    params = []
+    for i, s in enumerate(specs):
+        kw, kb = jax.random.split(jax.random.PRNGKey(i), 2)
+        params.append((
+            jax.random.normal(kw, (s.r, s.s, s.c, s.k), jnp.float32) * 0.2,
+            jax.random.normal(kb, (s.k,), jnp.float32) * 0.1))
+    x = jax.random.normal(jax.random.PRNGKey(9), (1, 16, 16, 3), jnp.float32)
+    # 4 row groups so ping-pong slots are reused (needed for the live-slot clobber)
+    plans = [LayerPlan("spat", "is", 2, 2, 4), LayerPlan("spat", "ws", 2, 2, 4)]
+    return specs, plans, params, x
+
+
+def _mutate(prog: Program, name: str) -> Program:
+    ins = list(prog.instructions)
+    if name == "load_over_live_slot":
+        # hoist the ih=2 LOAD_INP (slot 0) to right after the ih=0 LOAD_INP:
+        # it clobbers slot 0 while ih=0 is still live, so COMP(ih=0) sees a
+        # stale tag — the classic ping-pong overrun the handshake FIFO stops.
+        idx2 = next(i for i, s in enumerate(ins)
+                    if s.opcode == Opcode.LOAD_INP and s.layer_id == 0
+                    and s.buff_base == (2 << 1 | 0))
+        idx0 = next(i for i, s in enumerate(ins)
+                    if s.opcode == Opcode.LOAD_INP and s.layer_id == 0
+                    and s.buff_base == (0 << 1 | 0))
+        hoisted = ins.pop(idx2)
+        ins.insert(idx0 + 1, hoisted)
+    elif name == "comp_before_load_inp":
+        ins = [s for s in ins if s.opcode != Opcode.LOAD_INP]
+    elif name == "comp_before_load_wgt":
+        ins = [s for s in ins if s.opcode != Opcode.LOAD_WGT]
+    elif name == "comp_with_stale_bias":
+        ins = [s for s in ins if s.opcode != Opcode.LOAD_BIAS]
+    elif name == "save_before_comp":
+        ins = [s for s in ins if s.opcode != Opcode.COMP]
+    elif name == "missing_final_save":
+        last_save = max(i for i, s in enumerate(ins)
+                        if s.opcode == Opcode.SAVE)
+        ins = ins[:last_save] + ins[last_save + 1:]
+    elif name == "no_save_at_all":
+        ins = [s for s in ins if s.opcode != Opcode.SAVE]
+    else:
+        raise ValueError(name)
+    return Program(ins, prog.layers, prog.dram_size_words)
+
+
+HAZARDS = ["load_over_live_slot", "comp_before_load_inp",
+           "comp_before_load_wgt", "comp_with_stale_bias",
+           "save_before_comp", "missing_final_save", "no_save_at_all"]
+
+
+@pytest.mark.parametrize("hazard", HAZARDS)
+def test_interpreter_raises(hazard):
+    specs, plans, params, x = _net()
+    bad = _mutate(compile_network(specs, plans), hazard)
+    rt = HybridRuntime(bad, strict=True)
+    rt.load_params(params)
+    with pytest.raises(HazardError):
+        rt.run(x)
+
+
+@pytest.mark.parametrize("hazard", HAZARDS)
+def test_validation_pass_raises(hazard):
+    specs, plans, params, x = _net()
+    bad = _mutate(compile_network(specs, plans), hazard)
+    with pytest.raises(HazardError):
+        validate_schedule(bad)
+
+
+@pytest.mark.parametrize("hazard", HAZARDS)
+def test_jitted_path_raises_before_compute(hazard):
+    """The default HybridRuntime path validates before it compiles/executes,
+    so a bad stream never reaches the executor or poisons the cache."""
+    specs, plans, params, x = _net()
+    bad = _mutate(compile_network(specs, plans), hazard)
+    rt = HybridRuntime(bad)
+    rt.load_params(params)
+    with pytest.raises(HazardError):
+        rt.run(x)
+
+
+def test_good_stream_passes_both_paths():
+    specs, plans, params, x = _net()
+    prog = compile_network(specs, plans)
+    validate_schedule(prog)            # no raise
+    rt = HybridRuntime(prog, strict=True)
+    rt.load_params(params)
+    rt.run(x)                          # no raise

@@ -15,12 +15,14 @@ from repro.data.pipeline import DataConfig, PrefetchingLoader, batch_for_step
 from repro.launch.train import train
 
 
+@pytest.mark.slow
 def test_train_loss_decreases(tmp_path):
     losses = train("minitron-8b", reduced=True, steps=25, batch=4, seq=32,
                    ckpt_dir=None, lr=3e-3, log_every=100)
     assert losses[-1] < losses[0] - 0.5, (losses[0], losses[-1])
 
 
+@pytest.mark.slow
 def test_vgg_runtime_training_signal():
     """VGG16 (reduced) forward through hybrid engine produces gradients."""
     from repro.core.compiler import LayerPlan
@@ -42,6 +44,7 @@ def test_vgg_runtime_training_signal():
     assert gnorm > 0
 
 
+@pytest.mark.slow
 def test_checkpoint_restart_bitexact(tmp_path):
     """Train 10; vs train 5 -> restore -> train 5: identical params."""
     d1, d2 = str(tmp_path / "a"), str(tmp_path / "b")
@@ -80,8 +83,8 @@ def test_elastic_restore_resharding(tmp_path):
     """Checkpoint written on one mesh restores onto a different mesh."""
     tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
     ckpt_lib.save(str(tmp_path), 3, tree)
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh
+    mesh = make_mesh((1,), ("model",))
     sh = {"w": jax.NamedSharding(mesh, jax.sharding.PartitionSpec("model"))}
     restored, step = ckpt_lib.restore(str(tmp_path), tree, shardings=sh)
     assert step == 3

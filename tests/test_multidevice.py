@@ -8,6 +8,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.multidevice
+
 _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -27,21 +29,21 @@ def test_shardmap_pallas_gemm():
     _run("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.compat import make_mesh, shard_map
         from repro.kernels.gemm import batched_matmul
         from repro.kernels.gemm.ref import batched_matmul_ref
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         a = jax.random.normal(jax.random.PRNGKey(0), (4, 64, 64))
         b = jax.random.normal(jax.random.PRNGKey(1), (4, 64, 128))
 
         def local_mm(a, b):  # batch sharded over data, N sharded over model
             return batched_matmul(a, b)
 
-        mm = jax.shard_map(local_mm, mesh=mesh,
-                           in_specs=(P("data", None, None),
-                                     P("data", None, "model")),
-                           out_specs=P("data", None, "model"),
-                           check_vma=False)  # pallas_call outputs carry no vma
+        mm = shard_map(local_mm, mesh=mesh,
+                       in_specs=(P("data", None, None),
+                                 P("data", None, "model")),
+                       out_specs=P("data", None, "model"),
+                       check_vma=False)  # pallas_call outputs carry no vma
         out = mm(a, b)
         ref = batched_matmul_ref(a, b)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
@@ -60,8 +62,8 @@ def test_sharded_train_step_runs():
                                              use_rules)
         from repro.optim import adamw
         from repro.train import steps as steps_lib
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.compat import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         rules = make_rules(mesh)
         cfg = get_config("minitron-8b").reduced()
         with use_rules(rules):
@@ -87,9 +89,9 @@ def test_compressed_psum_matches_mean():
     _run("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.compat import make_mesh, shard_map
         from repro.optim.compression import compressed_psum, init_error_state
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("data",))
         g = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
 
         def body(g):
@@ -98,8 +100,8 @@ def test_compressed_psum_matches_mean():
             mean, new_err = compressed_psum(grads, err, ("data",))
             return mean["w"]
 
-        out = jax.shard_map(body, mesh=mesh, in_specs=P("data", None),
-                            out_specs=P())(g)
+        out = shard_map(body, mesh=mesh, in_specs=P("data", None),
+                        out_specs=P())(g)
         ref = jnp.mean(g, axis=0)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    rtol=0.05, atol=0.02)
