@@ -6,15 +6,20 @@
 * hybrid-vs-spatial-only: the paper's headline 1.8x-class gain, measured by
   forcing all-Spatial plans through the same model.
 * TPU analog: the hardware-adapted model's GOPS for the v5e target.
+* runtime rows: interpreter vs cached-jitted executor, and the full-network
+  single-Program path vs the legacy segmented path (also written to a
+  ``BENCH_table4_vgg16.json`` artifact for CI).
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import time
 
 from repro.core import perf_model as pm
 from repro.core.dse import DSEResult, run_fpga_dse, run_tpu_dse
-from repro.models.vgg import conv_specs, conv_segments
+from repro.models.vgg import conv_specs, conv_segments, network_specs
 
 PAPER_GOPS = {"VU9P": 3375.7, "PYNQ-Z1": 83.3}
 
@@ -64,6 +69,7 @@ def run() -> list[dict]:
         "wino_layers": sum(p.mode == "wino" for p in rt.plans),
     })
     rows += run_runtime_comparison()
+    rows += run_single_vs_segmented()
     return rows
 
 
@@ -129,3 +135,69 @@ def run_runtime_comparison(*, img: int = 32, scale: int = 16, batch: int = 2,
         "speedup": round(t_int / t_jit, 1),
         "max_abs_diff": err,
     }]
+
+
+def run_single_vs_segmented(*, img: int = 32, scale: int = 16, batch: int = 2,
+                            iters: int = 10,
+                            artifact: str | None = "BENCH_table4_vgg16.json"
+                            ) -> list[dict]:
+    """Full-network ISA payoff: the whole reduced VGG16 (13 CONV + 5 POOL +
+    3 FC) as ONE Program vs the legacy per-segment Programs with host-side
+    maxpool/FC glue — end-to-end wall clock on the cached jitted executors.
+
+    The row is also written to ``BENCH_table4_vgg16.json`` so CI can archive
+    it as a run artifact.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.compiler import LayerPlan, compile_network
+    from repro.core.hybrid_conv import ConvSpec
+    from repro.core.runtime import HybridRuntime
+    from repro.launch.serve import build_segmented_request, make_vgg_params
+
+    specs = network_specs(img=img, scale=scale, n_classes=10)
+    ci, plans = 0, []
+    for s in specs:
+        if isinstance(s, ConvSpec):
+            plans.append(LayerPlan("wino" if ci % 2 == 0 else "spat",
+                                   "is" if ci % 2 else "ws", m=2,
+                                   g_k=2, g_h=2))
+            ci += 1
+        else:
+            plans.append(None)
+    params = make_vgg_params(specs, seed=0)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (batch, img, img, 3)), jnp.float32)
+
+    program = compile_network(specs, plans)
+    rt = HybridRuntime(program)
+    rt.load_params(params)
+    seg_request, _, _ = build_segmented_request(specs, plans, params)
+
+    y_single = jax.block_until_ready(rt.run(x))     # validate + jit both
+    y_seg = jax.block_until_ready(seg_request(x))
+    t0 = time.monotonic()
+    for _ in range(iters):
+        y_single = jax.block_until_ready(rt.run(x))
+    t_single = (time.monotonic() - t0) / iters
+    t0 = time.monotonic()
+    for _ in range(iters):
+        y_seg = jax.block_until_ready(seg_request(x))
+    t_seg = (time.monotonic() - t0) / iters
+
+    rows = [{
+        "bench": "table4_vgg16", "name": "runtime/single_vs_segmented",
+        "config": f"img{img}_scale{scale}_batch{batch}",
+        "n_instructions": len(program.instructions),
+        "single_program_ms": round(t_single * 1e3, 2),
+        "segmented_ms": round(t_seg * 1e3, 2),
+        "speedup": round(t_seg / t_single, 2),
+        "max_abs_diff": float(jnp.max(jnp.abs(y_single - y_seg))),
+    }]
+    if artifact:
+        with open(artifact, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"wrote {os.path.abspath(artifact)}")
+    return rows

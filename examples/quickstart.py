@@ -35,15 +35,17 @@ def main():
     print(f"v5e:  blocks=({tr.hw.bm},{tr.hw.bk},{tr.hw.bn}) m={tr.hw.m} "
           f"| {sum(p.mode == 'wino' for p in tr.plans)}/13 layers Winograd")
 
-    # the instruction stream executes one CONV *stage* (the chain between
-    # pools — the paper's runtime drives pooling from the host side)
-    from repro.core.hybrid_conv import ConvSpec
+    # the instruction stream executes the WHOLE model — CONVs, the 2x2
+    # maxpool, and the FC tail compile into one Program (POOL/FC opcodes)
+    from repro.core.hybrid_conv import ConvSpec, FCSpec, PoolSpec
     from repro.core.compiler import LayerPlan
     specs = [ConvSpec("c1", 16, 16, 3, 8), ConvSpec("c2", 16, 16, 8, 16),
-             ConvSpec("c3", 16, 16, 16, 8)]
+             ConvSpec("c3", 16, 16, 16, 8),
+             PoolSpec("p1", 16, 16, 8),
+             FCSpec("fc", 8 * 8 * 8, 10, relu=False)]
     plans = [LayerPlan("wino", "is", m=4, g_h=2, g_k=2),
              LayerPlan("spat", "ws", m=4, g_h=2, g_k=2),
-             LayerPlan("wino", "is", m=2)]
+             LayerPlan("wino", "is", m=2), None, None]
 
     print("\n== compile to the 128-bit ISA (Sec. 4.1) ==")
     prog = compile_network(specs, plans)
@@ -53,22 +55,36 @@ def main():
           f"DRAM plan: {prog.dram_size_words} words")
 
     print("\n== execute the stream vs direct hybrid-PE execution ==")
+    from repro.core.hybrid_conv import dense, max_pool2d
     key = jax.random.PRNGKey(0)
-    conv_params = []
+    params = []
     for i, s in enumerate(specs):
         kw, kb = jax.random.split(jax.random.PRNGKey(i))
-        conv_params.append(
-            (jax.random.normal(kw, (s.r, s.s, s.c, s.k), jnp.float32) * 0.2,
-             jax.random.normal(kb, (s.k,), jnp.float32) * 0.1))
+        if isinstance(s, ConvSpec):
+            params.append(
+                (jax.random.normal(kw, (s.r, s.s, s.c, s.k), jnp.float32) * 0.2,
+                 jax.random.normal(kb, (s.k,), jnp.float32) * 0.1))
+        elif isinstance(s, FCSpec):
+            params.append(
+                (jax.random.normal(kw, (s.d_in, s.d_out), jnp.float32) * 0.1,
+                 jnp.zeros((s.d_out,), jnp.float32)))
     x = jax.random.normal(key, (2, 16, 16, 3), jnp.float32)
-    y_stream = run_program(prog, conv_params, x)
+    y_stream = run_program(prog, params, x)
 
-    y_direct = x
-    for spec, (w, b), plan in zip(specs, conv_params, plans):
-        y_direct = hybrid_conv2d(y_direct, w, b, mode=plan.mode, m=plan.m,
-                                 relu=spec.relu, use_pallas=False)
+    y_direct, pi = x, 0
+    for spec, plan in zip(specs, plans):
+        if isinstance(spec, PoolSpec):
+            y_direct = max_pool2d(y_direct, spec.window, spec.stride)
+        elif isinstance(spec, FCSpec):
+            w, b = params[pi]; pi += 1
+            y_direct = dense(y_direct.reshape(y_direct.shape[0], -1), w, b,
+                             relu=spec.relu)
+        else:
+            w, b = params[pi]; pi += 1
+            y_direct = hybrid_conv2d(y_direct, w, b, mode=plan.mode, m=plan.m,
+                                     relu=spec.relu, use_pallas=False)
     err = float(jnp.max(jnp.abs(y_stream - y_direct)))
-    print(f"instruction-stream output == direct output: max |err| = {err:.2e}")
+    print(f"instruction-stream logits == direct logits: max |err| = {err:.2e}")
     assert err < 5e-3
     print("OK")
 

@@ -1,7 +1,15 @@
 """HybridDNN compiler: DNN graph + DSE plan -> 128-bit instruction stream.
 
-Implements the CONV-operation partition of Sec. 4.2.4 and the IS/WS loop
-orders of Figure 4:
+``compile_network`` accepts the FULL layer sequence of a model — ``ConvSpec``
+CONV layers, ``PoolSpec`` maxpools, and ``FCSpec`` fully-connected layers —
+and lowers it into ONE instruction stream (one ``Program``). The compiler
+fully controls data movement (Sec. 4.1): DRAM buffer planning runs across
+what used to be per-CONV-segment boundaries, POOL layers are a
+LOAD_INP/POOL/SAVE block, and FC layers a LOAD_BIAS/LOAD_INP/LOAD_WGT/FC/SAVE
+block, all under the same handshake-FIFO hazard discipline as CONV.
+
+For CONV layers it implements the operation partition of Sec. 4.2.4 and the
+IS/WS loop orders of Figure 4:
 
 * feature maps are partitioned into ``G_H`` row groups (``H`` for Spatial,
   ``H/m`` for Winograd — we use a configurable group height that defaults to
@@ -27,8 +35,8 @@ import math
 
 import numpy as np
 
-from repro.core.hybrid_conv import ConvSpec
-from repro.core.isa import Instruction, Opcode, encode_stream
+from repro.core.hybrid_conv import ConvSpec, FCSpec, PoolSpec
+from repro.core.isa import Instruction, Opcode, encode_stream, pack_fc_dims
 from repro.core.layouts import layout_for_mode
 from repro.core.winograd import R_WINO, pt_for
 
@@ -45,12 +53,12 @@ class LayerPlan:
 
 @dataclasses.dataclass(frozen=True)
 class CompiledLayer:
-    spec: ConvSpec
+    spec: ConvSpec | PoolSpec | FCSpec
     plan: LayerPlan
     layer_id: int
     inp_addr: int               # DRAM base of this layer's input fmap
     wgt_addr: int               # DRAM base of (possibly transformed) weights
-    bias_addr: int
+    bias_addr: int              # (-1 for layers without weights/bias)
     out_addr: int
     inp_layout: str             # layout the input is stored in ("spat"/"wino")
     out_layout: str             # layout SAVE writes for the next layer
@@ -58,6 +66,7 @@ class CompiledLayer:
     # derived group geometry
     row_groups: tuple[tuple[int, int], ...]   # output-row ranges per group
     k_groups: tuple[tuple[int, int], ...]     # output-channel ranges
+    kind: str = "conv"          # "conv" | "pool" | "fc"
 
 
 @dataclasses.dataclass
@@ -80,9 +89,9 @@ class Program:
             h = hashlib.sha256()
             h.update(encode_stream(self.instructions).tobytes())
             for cl in self.layers:
-                h.update(repr((cl.spec, cl.plan, cl.row_groups, cl.k_groups,
-                               cl.inp_layout, cl.out_layout, cl.out_m)
-                              ).encode())
+                h.update(repr((cl.kind, cl.spec, cl.plan, cl.row_groups,
+                               cl.k_groups, cl.inp_layout, cl.out_layout,
+                               cl.out_m)).encode())
             self._schedule_key = h.hexdigest()
         return self._schedule_key
 
@@ -119,21 +128,43 @@ def _inp_words(spec: ConvSpec, row_lo: int, row_hi: int) -> int:
     return (in_hi - in_lo) * spec.w * spec.c
 
 
+def _kind(spec) -> str:
+    if isinstance(spec, PoolSpec):
+        return "pool"
+    if isinstance(spec, FCSpec):
+        return "fc"
+    return "conv"
+
+
+# fixed plan for layers the DSE does not parameterize (pool/fc); the DSE
+# emits the same sentinel so DSE-produced and compiler-normalized
+# CompiledLayer.plan (and thus schedule keys) can never drift
+NO_PLAN = LayerPlan("spat", "is")
+
+
 def compile_network(
-    specs: list[ConvSpec],
-    plans: list[LayerPlan],
+    specs: list[ConvSpec | PoolSpec | FCSpec],
+    plans: list[LayerPlan | None],
     *,
     input_layout: str | None = None,
 ) -> Program:
-    """Compile a chain of CONV layers into the instruction stream.
+    """Compile a full layer chain (CONV / POOL / FC) into ONE instruction
+    stream.
 
-    The LOAD module only performs identity loads (Sec. 4.3), so the network
-    input must be stored in the layout of layer 0's mode — the runtime's
-    ``write_input`` does that host-side conversion.
+    ``plans`` aligns with ``specs``; entries for POOL/FC layers are ignored
+    (``None`` is accepted). The LOAD module only performs identity loads
+    (Sec. 4.3), so the network input must be stored in the layout of layer
+    0's mode — the runtime's ``write_input`` does that host-side conversion.
+    SAVE always writes the layout the *next consumer* wants: a CONV or POOL
+    followed by a Winograd-mode CONV stores tile-major WINO; anything
+    followed by POOL/FC stores SPAT.
     """
     assert len(specs) == len(plans)
+    plans = [NO_PLAN if _kind(s) != "conv" else p
+             for s, p in zip(specs, plans)]
     if input_layout is None:
-        input_layout = layout_for_mode(plans[0].mode)
+        input_layout = (layout_for_mode(plans[0].mode)
+                        if _kind(specs[0]) == "conv" else "spat")
     instrs: list[Instruction] = []
     layers: list[CompiledLayer] = []
     alloc = 0
@@ -144,19 +175,78 @@ def compile_network(
         alloc += words
         return base
 
+    def out_layout_for(lid: int) -> tuple[str, int]:
+        """Layout SAVE(lid) writes = what layer lid+1's LOAD wants."""
+        if lid + 1 >= len(specs) or _kind(specs[lid + 1]) != "conv":
+            return "spat", 0
+        nxt = plans[lid + 1]
+        layout = layout_for_mode(nxt.mode)
+        return layout, (nxt.m if layout == "wino" else 0)
+
     # allocate DRAM: input of layer 0, then per layer (weights, bias, output)
-    inp_addr = bump(specs[0].h * specs[0].w * specs[0].c)
+    s0 = specs[0]
+    inp_addr = bump(s0.d_in if _kind(s0) == "fc" else s0.h * s0.w * s0.c)
     inp_layout = input_layout
 
     for lid, (spec, plan) in enumerate(zip(specs, plans)):
+        kind = _kind(spec)
+        out_layout, out_m = out_layout_for(lid)
+
+        if kind == "pool":
+            ho, wo = spec.out_hw
+            out_addr = bump(ho * wo * spec.c)
+            cl = CompiledLayer(
+                spec=spec, plan=plan, layer_id=lid, kind="pool",
+                inp_addr=inp_addr, wgt_addr=-1, bias_addr=-1,
+                out_addr=out_addr, inp_layout=inp_layout,
+                out_layout=out_layout, out_m=out_m,
+                row_groups=((0, ho),), k_groups=((0, spec.c),))
+            layers.append(cl)
+            instrs.append(Instruction(
+                Opcode.LOAD_INP, buff_base=0, dram_base=inp_addr,
+                size=spec.h * spec.w * spec.c, layer_id=lid))
+            instrs.append(Instruction(
+                Opcode.POOL, pool_window=spec.window,
+                pool_stride=spec.stride, buff_base=0, layer_id=lid))
+            instrs.append(Instruction(
+                Opcode.SAVE, buff_base=0, dram_base=out_addr,
+                layout_out_wino=(out_layout == "wino"), layer_id=lid))
+            inp_addr, inp_layout = out_addr, out_layout
+            continue
+
+        if kind == "fc":
+            wgt_addr = bump(spec.d_in * spec.d_out)
+            bias_addr = bump(spec.d_out)
+            out_addr = bump(spec.d_out)
+            cl = CompiledLayer(
+                spec=spec, plan=plan, layer_id=lid, kind="fc",
+                inp_addr=inp_addr, wgt_addr=wgt_addr, bias_addr=bias_addr,
+                out_addr=out_addr, inp_layout=inp_layout,
+                out_layout="spat", out_m=0,
+                row_groups=((0, 1),), k_groups=((0, spec.d_out),))
+            layers.append(cl)
+            instrs.append(Instruction(
+                Opcode.LOAD_BIAS, buff_base=0, dram_base=bias_addr,
+                size=spec.d_out, layer_id=lid))
+            instrs.append(Instruction(
+                Opcode.LOAD_INP, buff_base=0, dram_base=inp_addr,
+                size=spec.d_in, layer_id=lid))
+            instrs.append(Instruction(
+                Opcode.LOAD_WGT, buff_base=0, dram_base=wgt_addr,
+                size=spec.d_in * spec.d_out, layer_id=lid))
+            instrs.append(Instruction(
+                Opcode.FC, buff_base=0, relu_flag=spec.relu,
+                size=pack_fc_dims(spec.d_in, spec.d_out), layer_id=lid))
+            instrs.append(Instruction(
+                Opcode.SAVE, buff_base=0, dram_base=out_addr,
+                relu_flag=spec.relu, layer_id=lid))
+            inp_addr, inp_layout = out_addr, "spat"
+            continue
+
         ho, wo = spec.out_hw
         wgt_addr = bump(_wgt_words(spec, plan, 0, spec.k))
         bias_addr = bump(spec.k)
         out_addr = bump(ho * wo * spec.k)
-
-        next_plan = plans[lid + 1] if lid + 1 < len(plans) else None
-        out_layout = layout_for_mode(next_plan.mode) if next_plan else "spat"
-        out_m = next_plan.m if (next_plan and out_layout == "wino") else 0
 
         align = plan.m if plan.mode == "wino" else 1
         row_groups = tuple(_split(ho, plan.g_h, align))

@@ -22,8 +22,8 @@ import math
 from typing import Sequence
 
 from repro.core import perf_model as pm
-from repro.core.compiler import LayerPlan
-from repro.core.hybrid_conv import ConvSpec
+from repro.core.compiler import NO_PLAN, LayerPlan
+from repro.core.hybrid_conv import ConvSpec, FCSpec, PoolSpec
 from repro.core.winograd import pt_for
 
 
@@ -94,7 +94,8 @@ def _fpga_layer_best(t: pm.FPGATarget, cand: FPGACandidate,
     return best
 
 
-def run_fpga_dse(t: pm.FPGATarget, specs: Sequence[ConvSpec]) -> DSEResult:
+def run_fpga_dse(t: pm.FPGATarget,
+                 specs: Sequence[ConvSpec | PoolSpec | FCSpec]) -> DSEResult:
     cands = enumerate_fpga_candidates(t)
     best_result = None
     for cand in cands:
@@ -102,7 +103,16 @@ def run_fpga_dse(t: pm.FPGATarget, specs: Sequence[ConvSpec]) -> DSEResult:
         t_inst = dataclasses.replace(t, bw=t.bw / cand.ni)
         plans, lats = [], []
         for spec in specs:
-            plan, lat = _fpga_layer_best(t_inst, cand, spec)
+            # POOL/FC have no DSE-searchable software parameters; they
+            # still contribute latency so candidates rank on the FULL net
+            if isinstance(spec, PoolSpec):
+                plan, lat = NO_PLAN, pm.fpga_pool_latency(
+                    t_inst, spec, cand.pi, cand.pt)
+            elif isinstance(spec, FCSpec):
+                plan, lat = NO_PLAN, pm.fpga_fc_latency(
+                    t_inst, spec, cand.pi, cand.po, cand.pt)
+            else:
+                plan, lat = _fpga_layer_best(t_inst, cand, spec)
             plans.append(plan)
             lats.append(lat / cand.ni)  # throughput: NI images in flight
         total = sum(lats)
@@ -168,14 +178,20 @@ def _tpu_layer_best(t: pm.TPUTarget, cand: TPUCandidate, spec: ConvSpec,
     return best
 
 
-def run_tpu_dse(specs: Sequence[ConvSpec], batch: int = 1,
+def run_tpu_dse(specs: Sequence[ConvSpec | PoolSpec | FCSpec], batch: int = 1,
                 t: pm.TPUTarget = pm.V5E) -> DSEResult:
     cands = enumerate_tpu_candidates(t)
     best_result = None
     for cand in cands:
         plans, lats = [], []
         for spec in specs:
-            plan, lat = _tpu_layer_best(t, cand, spec, batch)
+            if isinstance(spec, PoolSpec):
+                plan, lat = NO_PLAN, pm.tpu_pool_latency(t, spec, batch)
+            elif isinstance(spec, FCSpec):
+                plan, lat = NO_PLAN, pm.tpu_fc_latency(
+                    t, spec, batch, blocks=(cand.bm, cand.bk, cand.bn))
+            else:
+                plan, lat = _tpu_layer_best(t, cand, spec, batch)
             plans.append(plan)
             lats.append(lat)
         total = sum(lats)

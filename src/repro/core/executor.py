@@ -23,6 +23,13 @@ into the two phases the paper's accelerator actually has:
   The result is ``jax.jit``-compatible and is cached per
   ``(Program, batch, dtype)`` by :mod:`repro.core.program_cache`.
 
+Both phases cover the full-network ISA: POOL and FC blocks validate under
+the same slot-tag discipline as COMP (input slot for POOL; input slot,
+weight slot and bias buffer for FC) and lower through the shared
+:func:`pool_forward` / :func:`fc_forward` helpers the interpreter also
+calls, so an entire model — CONVs, maxpools, FC tail — executes as one
+jitted function.
+
 Numerical contract: for a stream that passes validation, the lowered
 function computes block-for-block the same math as the interpreter (same
 halo slicing, same horizontal padding, same U-space weight pre-transform,
@@ -38,8 +45,8 @@ import jax.numpy as jnp
 
 from repro.core import layouts
 from repro.core.compiler import CompiledLayer, Program
-from repro.core.hybrid_conv import hybrid_conv2d
-from repro.core.isa import Opcode
+from repro.core.hybrid_conv import dense, hybrid_conv2d, max_pool2d
+from repro.core.isa import Opcode, unpack_fc_dims
 from repro.core.winograd import transform_weights, winograd_apply_pretransformed
 
 
@@ -54,7 +61,8 @@ class HazardError(RuntimeError):
 
 def _fresh_stats() -> dict[str, int]:
     return {"load_inp": 0, "load_wgt": 0, "load_bias": 0,
-            "comp": 0, "save": 0, "inp_words": 0, "wgt_words": 0}
+            "comp": 0, "pool": 0, "fc": 0, "save": 0,
+            "inp_words": 0, "wgt_words": 0}
 
 
 # ---------------------------------------------------------------------------
@@ -125,10 +133,46 @@ def validate_schedule(program: Program) -> dict[str, int]:
                 raise HazardError(f"COMP L{ins.layer_id}: stale bias buffer")
             out_blocks.add((ih, kg))
             stats["comp"] += 1
+        elif op == Opcode.POOL:
+            islot = ins.buff_base & 1
+            cfg = (ins.pool_window, ins.pool_stride)
+            if cfg != (cl.spec.window, cl.spec.stride):
+                raise HazardError(
+                    f"POOL L{ins.layer_id}: word0 window/stride {cfg} "
+                    f"disagree with compiled spec "
+                    f"({cl.spec.window}, {cl.spec.stride})")
+            if inp_tags[islot] != (ins.layer_id, 0):
+                raise HazardError(
+                    f"POOL L{ins.layer_id}: input slot {islot} holds "
+                    f"{inp_tags[islot]}")
+            out_blocks.add((0, 0))
+            stats["pool"] += 1
+        elif op == Opcode.FC:
+            islot = ins.buff_base & 1
+            wslot = (ins.buff_base >> 1) & 1
+            dims = unpack_fc_dims(ins.size)
+            if dims != (cl.spec.d_in, cl.spec.d_out):
+                raise HazardError(
+                    f"FC L{ins.layer_id}: word3 dims {dims} disagree with "
+                    f"compiled spec ({cl.spec.d_in}, {cl.spec.d_out})")
+            if inp_tags[islot] != (ins.layer_id, 0):
+                raise HazardError(
+                    f"FC L{ins.layer_id}: input slot {islot} holds "
+                    f"{inp_tags[islot]}")
+            if wgt_tags[wslot] != (ins.layer_id, 0):
+                raise HazardError(
+                    f"FC L{ins.layer_id}: weight slot {wslot} holds "
+                    f"{wgt_tags[wslot]}")
+            if bias_tag != (ins.layer_id,):
+                raise HazardError(f"FC L{ins.layer_id}: stale bias buffer")
+            out_blocks.add((0, 0))
+            stats["fc"] += 1
         elif op == Opcode.SAVE:
             ih = ins.size & 0xFFF
             kg = (ins.size >> 12) & 0xFFF
-            if cl.plan.dataflow == "is":
+            if cl.kind != "conv":
+                need = [(0, 0)]
+            elif cl.plan.dataflow == "is":
                 need = [(ih, g) for g in range(len(cl.k_groups))]
             else:
                 need = [(ih, kg)]
@@ -224,16 +268,63 @@ def _layer_forward(cl: CompiledLayer, w_eff: jax.Array, bias: jax.Array,
     return y
 
 
-def to_dram_params(program: Program, params: list) -> list:
-    """Raw ``[(w_rsck, bias), ...]`` -> the DRAM weight image the executor
-    consumes: U-space ``(PT, PT, C, K)`` for Winograd layers, raw for
-    Spatial — identical to what ``HybridRuntime.load_params`` stores. Pure
-    jax, so it is differentiable and may run host-side (once, the paper's
-    offline transform) or inside a caller's own trace.
+def pool_forward(cl: CompiledLayer, x_stored: jax.Array,
+                 window: int, stride: int) -> jax.Array:
+    """One POOL block: identity LOAD view -> max pool, NHWC out.
+
+    The SAVE-side layout reorder (``out_layout == "wino"``) is applied by
+    the caller — the interpreter's layer flush or the lowered executor —
+    exactly as for CONV layers. Shared by both paths so they can never
+    drift.
     """
+    x = layouts.load_view(x_stored, cl.inp_layout, hw=(cl.spec.h, cl.spec.w))
+    return max_pool2d(x, window=window, stride=stride)
+
+
+def fc_forward(cl: CompiledLayer, w: jax.Array, bias: jax.Array,
+               x_stored: jax.Array, relu: bool) -> jax.Array:
+    """One FC layer: identity LOAD view, flatten, run the dense PE.
+
+    ``load_view`` honors ``inp_layout`` so a hand-built stream whose
+    previous layer stored tile-major WINO still flattens in NHWC order
+    (compiler-emitted programs always store SPAT before FC). Shared by the
+    interpreter and the lowered executor.
+    """
+    x = layouts.load_view(x_stored, cl.inp_layout)
+    x = x.reshape(x.shape[0], -1)
+    return dense(x, w, bias, relu=relu, use_pallas=False)
+
+
+def n_param_layers(program: Program) -> int:
+    """Layers that carry (w, bias) params — CONV and FC; POOL has none."""
+    return sum(cl.kind != "pool" for cl in program.layers)
+
+
+def check_param_count(program: Program, params: list):
+    if len(params) != n_param_layers(program):
+        raise ValueError(
+            f"expected {n_param_layers(program)} (w, bias) entries — one per "
+            f"CONV/FC layer in network order, POOL layers carry no params — "
+            f"got {len(params)}")
+
+
+def to_dram_params(program: Program, params: list) -> list:
+    """Raw ``[(w, bias), ...]`` (one entry per *parameterized* layer — CONV
+    and FC; POOL layers carry no params) -> the DRAM weight image the
+    executor consumes: U-space ``(PT, PT, C, K)`` for Winograd CONV layers,
+    raw for Spatial CONV and FC — identical to what
+    ``HybridRuntime.load_params`` stores. Pure jax, so it is differentiable
+    and may run host-side (once, the paper's offline transform) or inside a
+    caller's own trace.
+    """
+    check_param_count(program, params)
     out = []
-    for cl, (w, b) in zip(program.layers, params):
-        if cl.plan.mode == "wino":
+    it = iter(params)
+    for cl in program.layers:
+        if cl.kind == "pool":
+            continue
+        w, b = next(it)
+        if cl.kind == "conv" and cl.plan.mode == "wino":
             assert cl.spec.r == 3 and cl.spec.s == 3, \
                 "runtime pre-transform supports r=s=3 (VGG family)"
             w = transform_weights(w, cl.plan.m)
@@ -251,29 +342,50 @@ def lower_program(program: Program) -> Callable[[list, jax.Array], jax.Array]:
     from them inside the trace would re-execute every call.
     """
     for cl in program.layers:
-        if cl.plan.mode == "wino":
+        if cl.kind == "conv" and cl.plan.mode == "wino":
             assert cl.spec.r == 3 and cl.spec.s == 3, \
                 "runtime pre-transform supports r=s=3 (VGG family)"
 
-    # the stream's COMP RELU bits are the authority (compiler sets them to
-    # spec.relu, but hand-built/decoded streams may differ per block)
+    # the stream's COMP/FC RELU bits and POOL window/stride are the
+    # authority (the compiler sets them from the spec, but hand-built or
+    # decoded streams may differ per block)
     relu_bits: dict[tuple[int, int, int], bool] = {}
+    pool_cfg: dict[int, tuple[int, int]] = {}
     for ins in program.instructions:
         if ins.opcode == Opcode.COMP:
             ih = ins.size & 0xFFF
             kg = (ins.size >> 12) & 0xFFF
             relu_bits[(ins.layer_id, ih, kg)] = ins.relu_flag
+        elif ins.opcode == Opcode.FC:
+            relu_bits[(ins.layer_id, 0, 0)] = ins.relu_flag
+        elif ins.opcode == Opcode.POOL:
+            pool_cfg[ins.layer_id] = (ins.pool_window, ins.pool_stride)
 
     def execute(params: list, x_nhwc: jax.Array) -> jax.Array:
         cl0 = program.layers[0]
         x = x_nhwc
         if cl0.inp_layout == "wino":
             x = layouts.save_transform(x, "wino", cl0.plan.m)
-        for cl, (w_eff, b) in zip(program.layers, params):
-            x = _layer_forward(
-                cl, w_eff, b, x,
-                lambda ih, kg, cl=cl: relu_bits.get((cl.layer_id, ih, kg),
-                                                    cl.spec.relu))
+        pi = 0
+        for cl in program.layers:
+            if cl.kind == "pool":
+                window, stride = pool_cfg.get(
+                    cl.layer_id, (cl.spec.window, cl.spec.stride))
+                x = pool_forward(cl, x, window, stride)
+                if cl.out_layout == "wino":
+                    x = layouts.save_transform(x, "wino", cl.out_m)
+                continue
+            w_eff, b = params[pi]
+            pi += 1
+            if cl.kind == "fc":
+                x = fc_forward(cl, w_eff, b, x,
+                               relu_bits.get((cl.layer_id, 0, 0),
+                                             cl.spec.relu))
+            else:
+                x = _layer_forward(
+                    cl, w_eff, b, x,
+                    lambda ih, kg, cl=cl: relu_bits.get((cl.layer_id, ih, kg),
+                                                        cl.spec.relu))
         return x
 
     return execute

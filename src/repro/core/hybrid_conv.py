@@ -57,6 +57,40 @@ class ConvSpec:
         return self.stride == 1 and self.r >= 1 and self.s >= 1
 
 
+@dataclasses.dataclass(frozen=True)
+class PoolSpec:
+    """Static description of one max-pooling layer (POOL opcode currency)."""
+    name: str
+    h: int                  # input spatial height
+    w: int
+    c: int                  # channels (pooling is depthwise)
+    window: int = 2
+    stride: int = 2
+
+    @property
+    def out_hw(self) -> tuple[int, int]:
+        # VALID pooling, the VGG16 convention
+        return ((self.h - self.window) // self.stride + 1,
+                (self.w - self.window) // self.stride + 1)
+
+    @property
+    def macs(self) -> int:
+        return 0            # comparisons, not MACs — excluded from GOPS
+
+
+@dataclasses.dataclass(frozen=True)
+class FCSpec:
+    """Static description of one fully-connected layer (FC opcode currency)."""
+    name: str
+    d_in: int
+    d_out: int
+    relu: bool = False
+
+    @property
+    def macs(self) -> int:
+        return self.d_in * self.d_out
+
+
 def hybrid_conv2d(
     x_nhwc: jax.Array,
     g_rsck: jax.Array,

@@ -22,7 +22,7 @@ from __future__ import annotations
 import dataclasses
 import math
 
-from repro.core.hybrid_conv import ConvSpec
+from repro.core.hybrid_conv import ConvSpec, FCSpec, PoolSpec
 from repro.core.winograd import R_WINO, pt_for
 
 
@@ -145,6 +145,24 @@ def fpga_t_ldi(t: FPGATarget, s: ConvSpec, pi, pt) -> float:
 def fpga_t_sv(t: FPGATarget, s: ConvSpec, po, pt) -> float:
     ho, wo = s.out_hw
     return (s.k * ho * wo) / min(t.bw, t.freq * po * pt)           # Eq. 11
+
+
+def fpga_pool_latency(t: FPGATarget, s: PoolSpec, pi: int, pt: int) -> float:
+    """POOL streams through the LOAD path at the input rate (Eq. 10 analog):
+    the comparison tree keeps up with the stream, so the layer is bound by
+    reading the input map and writing the decimated output."""
+    ho, wo = s.out_hw
+    words = s.c * s.h * s.w + s.c * ho * wo
+    return words / min(t.bw, t.freq * pi * pt)
+
+
+def fpga_fc_latency(t: FPGATarget, s: FCSpec, pi, po, pt) -> float:
+    """FC is a GEMV on the PE's MAC array: every weight word is used once,
+    so the layer is the max of compute (Eq. 6 analog with HO*WO = 1) and
+    streaming the weight matrix from external memory."""
+    t_cp = s.d_in * s.d_out / (t.freq * pi * po * pt)
+    t_ldw = s.d_in * s.d_out / t.bw
+    return max(t_cp, t_ldw)
 
 
 def fpga_layer_latency(t: FPGATarget, s: ConvSpec, pi, po, pt, m,
@@ -280,6 +298,35 @@ def tpu_layer_latency(t: TPUTarget, s: ConvSpec, mode: str, dataflow: str,
         body = max(g_k * t_ldi, t_ldw, t_cp, t_sv)
         penalty = t_ldi / max(1, g_h) + t_ldw / max(1, g_k)
     return body + penalty
+
+
+def tpu_pool_latency(t: TPUTarget, s: PoolSpec, batch: int = 1) -> float:
+    """POOL on TPU is HBM-bound: read the map, write the decimated map; the
+    window-max comparisons run on the VPU and never dominate."""
+    ho, wo = s.out_hw
+    bytes_ = (batch * s.h * s.w * s.c + batch * ho * wo * s.c) * t.bytes_per_word
+    flops = batch * ho * wo * s.c * s.window * s.window
+    return max(bytes_ / t.hbm_bw, flops / t.vpu_flops)
+
+
+def tpu_fc_latency(t: TPUTarget, s: FCSpec, batch: int = 1,
+                   blocks: tuple[int, int, int] | None = None) -> float:
+    """FC as a (batch, d_in) x (d_in, d_out) GEMM on the MXU.
+
+    At serving batch sizes the MXU runs at batch/sublane-alignment
+    efficiency and the layer is usually bound by streaming the weight
+    matrix from HBM — the same weight-bandwidth wall Eq. 8/9 models for
+    CONV weights on the FPGA.
+    """
+    eff = tpu_mxu_eff(batch, s.d_in, s.d_out)
+    if blocks is not None:
+        bm, bk, bn = blocks
+        eff *= (_block_eff(batch, bm) * _block_eff(s.d_in, bk)
+                * _block_eff(s.d_out, bn))
+    flops = 2.0 * batch * s.d_in * s.d_out
+    bytes_ = (s.d_in * s.d_out
+              + batch * (s.d_in + s.d_out)) * t.bytes_per_word
+    return max(flops / (t.peak_flops * eff), bytes_ / t.hbm_bw)
 
 
 def layer_gops(s: ConvSpec, latency: float, batch: int = 1) -> float:

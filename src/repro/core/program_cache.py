@@ -17,6 +17,10 @@ The cache key is ``(program.schedule_key(), batch, dtype)``:
 Schedule validation runs **once per schedule key** (not per entry): executors
 for new batch sizes of an already-validated program reuse the cached
 validation stats. Entries are LRU-evicted beyond ``maxsize``.
+
+Full-network Programs (POOL/FC opcodes) need no special keying: the encoded
+stream and per-layer geometry already cover the new layer kinds, so the key
+rules are unchanged — a whole-model Program is just one more schedule key.
 """
 from __future__ import annotations
 

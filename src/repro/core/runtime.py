@@ -25,6 +25,13 @@ DRAM is a word-addressed store (dict base-address -> tensor). Winograd-mode
 weights live in DRAM pre-transformed to U-space (Sec. 4.2.3), so LOAD_WGT
 traffic matches Eq. 9. The SAVE stage applies the layout reorder for the next
 layer's mode (Sec. 4.3) once the layer's last block lands.
+
+The full-network ISA (POOL/FC opcodes) runs a whole model — CONVs,
+interleaved maxpools, and the FC classifier tail — from ONE instruction
+stream: POOL validates its input slot like COMP and produces the pooled
+block; FC additionally checks the weight slot and bias buffer; both flow
+through the same SAVE/flush path, so every layer kind obeys one hazard
+discipline in both execution paths.
 """
 from __future__ import annotations
 
@@ -38,11 +45,14 @@ from repro.core import layouts
 from repro.core.compiler import CompiledLayer, Program
 from repro.core.executor import (  # noqa: F401  (HazardError re-export)
     HazardError,
+    check_param_count,
+    fc_forward,
+    pool_forward,
     slice_input_rows,
     width_pad,
 )
 from repro.core.hybrid_conv import hybrid_conv2d
-from repro.core.isa import Instruction, Opcode
+from repro.core.isa import Instruction, Opcode, unpack_fc_dims
 from repro.core.winograd import (
     pt_for,
     transform_weights,
@@ -71,7 +81,7 @@ class HybridRuntime:
         self._raw_params: list[tuple[Any, Any]] | None = None
         # pipeline statistics (4-stage pipeline occupancy model)
         self.stats = {"load_inp": 0, "load_wgt": 0, "load_bias": 0,
-                      "comp": 0, "save": 0,
+                      "comp": 0, "pool": 0, "fc": 0, "save": 0,
                       "inp_words": 0, "wgt_words": 0}
 
     @property
@@ -83,10 +93,17 @@ class HybridRuntime:
 
     # -- DRAM management ----------------------------------------------------
     def load_params(self, params: list[tuple[Any, Any]]):
-        """params: [(w_rsck, bias), ...] per layer. Winograd layers store U."""
+        """params: [(w, bias), ...] — one entry per *parameterized* layer
+        (CONV and FC, in network order; POOL layers carry no params).
+        Winograd CONV layers store U-space weights."""
+        check_param_count(self.program, params)
         self._raw_params = [tuple(p) for p in params]
-        for cl, (w, b) in zip(self.program.layers, params):
-            if cl.plan.mode == "wino":
+        it = iter(params)
+        for cl in self.program.layers:
+            if cl.kind == "pool":
+                continue
+            w, b = next(it)
+            if cl.kind == "conv" and cl.plan.mode == "wino":
                 assert cl.spec.r == 3 and cl.spec.s == 3, \
                     "runtime pre-transform supports r=s=3 (VGG family)"
                 self.dram[cl.wgt_addr] = transform_weights(w, cl.plan.m)
@@ -115,13 +132,17 @@ class HybridRuntime:
             self.write_input(x_nhwc)       # same DRAM contract as strict mode
         else:
             cl0 = self.program.layers[0]
-            x_nhwc = layouts.load_view(self.dram[cl0.inp_addr],
-                                       cl0.inp_layout,
-                                       hw=(cl0.spec.h, cl0.spec.w))
+            stored = self.dram[cl0.inp_addr]
+            if cl0.kind == "fc":           # FC-first: flat activation, no hw
+                x_nhwc = stored.reshape(stored.shape[0], -1)
+            else:
+                x_nhwc = layouts.load_view(stored, cl0.inp_layout,
+                                           hw=(cl0.spec.h, cl0.spec.w))
         # the executor consumes the DRAM weight image load_params already
-        # built (U-space for wino) — no per-request weight work
+        # built (U-space for wino) — no per-request weight work; POOL
+        # layers carry no params
         params = [(self.dram[cl.wgt_addr], self.dram[cl.bias_addr])
-                  for cl in self.program.layers]
+                  for cl in self.program.layers if cl.kind != "pool"]
         self.stats = self.cache.validate(self.program)   # HazardError on bad streams
         entry = self.cache.get(
             self.program, batch=x_nhwc.shape[0], dtype=x_nhwc.dtype,
@@ -156,7 +177,12 @@ class HybridRuntime:
                 self.stats["load_bias"] += 1
             elif op == Opcode.LOAD_INP:
                 ih, slot = ins.buff_base >> 1, ins.buff_base & 1
-                data = self._load_input_group(cl, ih)
+                if cl.kind in ("pool", "fc"):
+                    # identity load of the stored tensor; pool_forward /
+                    # fc_forward apply the layout view themselves
+                    data = self.dram[cl.inp_addr]
+                else:
+                    data = self._load_input_group(cl, ih)
                 inp_slots[slot] = _Slot((ins.layer_id, ih), data)
                 self.stats["load_inp"] += 1
                 self.stats["inp_words"] += ins.size
@@ -187,6 +213,50 @@ class HybridRuntime:
                                     bias_buf.data, ih, kg, ins)
                 out_blocks[(ih, kg)] = blk
                 self.stats["comp"] += 1
+            elif op == Opcode.POOL:
+                islot = ins.buff_base & 1
+                cfg = (ins.pool_window, ins.pool_stride)
+                if cfg != (cl.spec.window, cl.spec.stride):
+                    raise HazardError(
+                        f"POOL L{ins.layer_id}: word0 window/stride {cfg} "
+                        f"disagree with compiled spec "
+                        f"({cl.spec.window}, {cl.spec.stride})")
+                if inp_slots[islot].tag != (ins.layer_id, 0):
+                    raise HazardError(
+                        f"POOL L{ins.layer_id}: input slot {islot} holds "
+                        f"{inp_slots[islot].tag}")
+                out_blocks[(0, 0)] = pool_forward(
+                    cl, inp_slots[islot].data, ins.pool_window,
+                    ins.pool_stride)
+                self.stats["pool"] += 1
+            elif op == Opcode.FC:
+                islot = ins.buff_base & 1
+                wslot = (ins.buff_base >> 1) & 1
+                dims = unpack_fc_dims(ins.size)
+                if dims != (cl.spec.d_in, cl.spec.d_out):
+                    raise HazardError(
+                        f"FC L{ins.layer_id}: word3 dims {dims} disagree "
+                        f"with compiled spec ({cl.spec.d_in}, {cl.spec.d_out})")
+                if inp_slots[islot].tag != (ins.layer_id, 0):
+                    raise HazardError(
+                        f"FC L{ins.layer_id}: input slot {islot} holds "
+                        f"{inp_slots[islot].tag}")
+                if wgt_slots[wslot].tag != (ins.layer_id, 0):
+                    raise HazardError(
+                        f"FC L{ins.layer_id}: weight slot {wslot} holds "
+                        f"{wgt_slots[wslot].tag}")
+                if bias_buf.tag != (ins.layer_id,):
+                    raise HazardError(f"FC L{ins.layer_id}: stale bias buffer")
+                out_blocks[(0, 0)] = fc_forward(
+                    cl, wgt_slots[wslot].data, bias_buf.data,
+                    inp_slots[islot].data, ins.relu_flag)
+                self.stats["fc"] += 1
+            elif op == Opcode.SAVE and cl.kind != "conv":
+                if (0, 0) not in out_blocks:
+                    raise HazardError(
+                        f"SAVE L{ins.layer_id} block (0, 0) not computed")
+                staging = out_blocks.pop((0, 0))
+                self.stats["save"] += 1
             elif op == Opcode.SAVE:
                 ih = ins.size & 0xFFF
                 kg = (ins.size >> 12) & 0xFFF

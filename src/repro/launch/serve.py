@@ -85,14 +85,84 @@ def serve(arch: str, *, reduced: bool = True, batch: int = 4,
     return gen_tokens
 
 
+def make_vgg_params(specs, seed: int = 0):
+    """Random [(w, b), ...] for every parameterized layer (CONV + FC)."""
+    from repro.core.hybrid_conv import ConvSpec, FCSpec
+
+    rng = np.random.default_rng(seed)
+    params = []
+    for s in specs:
+        if isinstance(s, ConvSpec):
+            w = jnp.asarray(rng.standard_normal((s.r, s.s, s.c, s.k)),
+                            jnp.float32) * (s.r * s.s * s.c) ** -0.5
+            params.append((w, jnp.zeros((s.k,), jnp.float32)))
+        elif isinstance(s, FCSpec):
+            w = jnp.asarray(rng.standard_normal((s.d_in, s.d_out)),
+                            jnp.float32) * s.d_in ** -0.5
+            params.append((w, jnp.zeros((s.d_out,), jnp.float32)))
+    return params
+
+
+def build_segmented_request(specs, plans, params, *, strict: bool = False):
+    """The legacy multi-Program path: one compiled Program per CONV segment,
+    host-side 2x2 maxpool glue between segments, and the FC tail outside
+    the runtime. Kept as the ``--segmented`` compatibility path; asserted
+    numerically identical to the single-Program path in
+    ``tests/test_integration.py``. ``strict=True`` builds the per-segment
+    runtimes on the per-instruction interpreter instead of the cached
+    jitted executor (the ``--compare-interpreter`` baseline)."""
+    from repro.core.compiler import compile_network
+    from repro.core.hybrid_conv import ConvSpec, FCSpec, dense, max_pool2d
+    from repro.core.runtime import HybridRuntime
+    from repro.models import vgg
+
+    # params align with the non-pool specs, in network order
+    nonpool = [s for s in specs if not isinstance(s, vgg.PoolSpec)]
+    assert len(nonpool) == len(params)
+    conv_specs = [s for s in specs if isinstance(s, ConvSpec)]
+    conv_plans = [p for s, p in zip(specs, plans) if isinstance(s, ConvSpec)]
+    conv_params = [p for s, p in zip(nonpool, params)
+                   if isinstance(s, ConvSpec)]
+    pool_specs = [s for s in specs if isinstance(s, vgg.PoolSpec)]
+    fc_specs = [s for s in nonpool if isinstance(s, FCSpec)]
+    fc_params = [p for s, p in zip(nonpool, params) if isinstance(s, FCSpec)]
+
+    runtimes, idx, n_instr = [], 0, 0
+    for n in vgg.conv_segments():
+        program = compile_network(conv_specs[idx:idx + n],
+                                  conv_plans[idx:idx + n])
+        rt = HybridRuntime(program, strict=strict)
+        rt.load_params(conv_params[idx:idx + n])
+        runtimes.append(rt)
+        n_instr += len(program.instructions)
+        idx += n
+
+    assert len(pool_specs) == len(runtimes), \
+        "segmented path expects one maxpool after each CONV segment"
+
+    def request(x):
+        for rt, ps in zip(runtimes, pool_specs):
+            x = max_pool2d(rt.run(x), ps.window, ps.stride)
+        x = x.reshape(x.shape[0], -1)
+        for s, (w, b) in zip(fc_specs, fc_params):
+            x = dense(x, w, b, relu=s.relu)
+        return x
+
+    return request, runtimes, n_instr
+
+
 def serve_cnn(arch: str = "vgg16", *, reduced: bool = True, batch: int = 8,
-              iters: int = 20, seed: int = 0, compare_interpreter: bool = False):
+              iters: int = 20, seed: int = 0, compare_interpreter: bool = False,
+              segmented: bool = False):
     """CNN inference through the full HybridDNN pipeline.
 
-    DSE picks per-layer (mode, dataflow, m, g_h, g_k); the compiler lowers
-    them to the 128-bit stream; the runtime validates the schedule ONCE and
-    serves every request from the cached jitted executor — steady-state
-    requests never touch the Python interpreter.
+    DSE picks per-layer (mode, dataflow, m, g_h, g_k) over the WHOLE model
+    (CONV + POOL + FC latency terms); the compiler lowers all 21 layers to
+    ONE 128-bit instruction stream; the runtime validates the schedule ONCE
+    and serves every request from the cached jitted executor — steady-state
+    requests never touch the Python interpreter. ``segmented=True`` keeps
+    the legacy multi-Program path (one Program per CONV segment, host-side
+    maxpool glue, FC tail outside the runtime) for comparison.
     """
     from repro.core.compiler import compile_network
     from repro.core.dse import run_tpu_dse
@@ -100,49 +170,41 @@ def serve_cnn(arch: str = "vgg16", *, reduced: bool = True, batch: int = 8,
     from repro.core.runtime import HybridRuntime
     from repro.models import vgg
 
-    from repro.core.hybrid_conv import max_pool2d
-
     if arch != "vgg16":
         raise ValueError(f"CNN serving supports 'vgg16' (the paper's case "
                          f"study), got {arch!r}")
     iters = max(1, iters)
     img, scale = (64, 8) if reduced else (224, 1)
-    specs = vgg.conv_specs(img=img, scale=scale)
+    n_classes = 10 if reduced else 1000
+    specs = vgg.network_specs(img=img, scale=scale, n_classes=n_classes)
     t0 = time.monotonic()
     dse = run_tpu_dse(specs, batch=batch)
     t_dse = time.monotonic() - t0
 
-    # one Program per CONV segment; the 2x2 maxpool between segments lives
-    # outside the instruction stream (POOL is not a CONV-ISA opcode)
-    rng = np.random.default_rng(seed)
-    params = []
-    for s in specs:
-        w = jnp.asarray(rng.standard_normal((s.r, s.s, s.c, s.k)),
-                        jnp.float32) * (s.r * s.s * s.c) ** -0.5
-        params.append((w, jnp.zeros((s.k,), jnp.float32)))
+    params = make_vgg_params(specs, seed)
+    n_wino = sum(p.mode == "wino" for s, p in zip(specs, dse.plans)
+                 if isinstance(s, vgg.ConvSpec))
+    n_spat = sum(p.mode == "spat" for s, p in zip(specs, dse.plans)
+                 if isinstance(s, vgg.ConvSpec))
 
-    runtimes, idx, n_instr = [], 0, 0
-    for n in vgg.conv_segments():
-        program = compile_network(specs[idx:idx + n], dse.plans[idx:idx + n])
+    if segmented:
+        request, runtimes, n_instr = build_segmented_request(
+            specs, dse.plans, params)
+        desc = f"{len(runtimes)} segment Programs + host maxpool/FC glue"
+    else:
+        program = compile_network(specs, dse.plans)
         rt = HybridRuntime(program)
-        rt.load_params(params[idx:idx + n])
-        runtimes.append(rt)
-        n_instr += len(program.instructions)
-        idx += n
-    print(f"{arch}: {len(specs)} CONV layers in {len(runtimes)} segments, "
-          f"{sum(p.mode == 'wino' for p in dse.plans)} wino / "
-          f"{sum(p.mode == 'spat' for p in dse.plans)} spat; "
+        rt.load_params(params)
+        request = rt.run
+        n_instr = len(program.instructions)
+        desc = "ONE Program (POOL/FC in-stream)"
+    print(f"{arch}: {len(specs)} layers as {desc}, "
+          f"{n_wino} wino / {n_spat} spat CONVs; "
           f"DSE {t_dse * 1e3:.0f}ms over {dse.candidates_searched} candidates, "
           f"{n_instr} instructions")
 
-    def request(x, strict_runtimes=None):
-        for rt in (strict_runtimes or runtimes):
-            x = rt.run(x)
-            x = max_pool2d(x)
-        return x
-
-    x = jnp.asarray(rng.standard_normal((batch, img, img, specs[0].c)),
-                    jnp.float32)
+    rng = np.random.default_rng(seed + 1)
+    x = jnp.asarray(rng.standard_normal((batch, img, img, 3)), jnp.float32)
     t0 = time.monotonic()
     y = jax.block_until_ready(request(x))      # validate + compile + run
     t_first = time.monotonic() - t0
@@ -158,14 +220,16 @@ def serve_cnn(arch: str = "vgg16", *, reduced: bool = True, batch: int = 8,
           f"({gops:.1f} GOPS); cache hits={cache.stats.hits} "
           f"misses={cache.stats.misses}")
     if compare_interpreter:
-        strict = []
-        for rt in runtimes:
-            s_rt = HybridRuntime(rt.program, strict=True)
-            s_rt.load_params(rt._raw_params)
-            strict.append(s_rt)
-        jax.block_until_ready(request(x, strict))   # warm XLA op caches
+        if segmented:
+            strict_request, _, _ = build_segmented_request(
+                specs, dse.plans, params, strict=True)
+        else:
+            s_rt = HybridRuntime(program, strict=True)
+            s_rt.load_params(params)
+            strict_request = s_rt.run
+        jax.block_until_ready(strict_request(x))   # warm XLA op caches
         t0 = time.monotonic()
-        y_i = jax.block_until_ready(request(x, strict))
+        y_i = jax.block_until_ready(strict_request(x))
         t_interp = time.monotonic() - t0
         err = float(jnp.max(jnp.abs(y - y_i)))
         print(f"interpreter: {t_interp * 1e3:.1f}ms/batch "
@@ -184,12 +248,16 @@ def main():
     ap.add_argument("--iters", type=int, default=20,
                     help="steady-state requests to time (CNN serving)")
     ap.add_argument("--compare-interpreter", action="store_true")
+    ap.add_argument("--segmented", action="store_true",
+                    help="legacy multi-Program CNN path (one Program per "
+                         "CONV segment, host-side maxpool/FC glue)")
     args = ap.parse_args()
     if args.arch.startswith("vgg"):
         y = serve_cnn(args.arch, reduced=args.reduced, batch=args.batch,
                       iters=args.iters,
-                      compare_interpreter=args.compare_interpreter)
-        print("output feature map:", y.shape)
+                      compare_interpreter=args.compare_interpreter,
+                      segmented=args.segmented)
+        print("logits:", y.shape)
         return
     toks = serve(args.arch, reduced=args.reduced, batch=args.batch,
                  prompt_len=args.prompt_len, gen=args.gen)

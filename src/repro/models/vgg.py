@@ -13,7 +13,14 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.compiler import LayerPlan
-from repro.core.hybrid_conv import ConvSpec, dense, hybrid_conv2d, max_pool2d
+from repro.core.hybrid_conv import (
+    ConvSpec,
+    FCSpec,
+    PoolSpec,
+    dense,
+    hybrid_conv2d,
+    max_pool2d,
+)
 from repro.models.layers import _init
 
 # (input hw, in_ch, out_ch); 'M' = 2x2 maxpool
@@ -43,13 +50,43 @@ def conv_specs(img: int = 224, scale: int = 1) -> list[ConvSpec]:
     return specs
 
 
+def network_specs(img: int = 224, scale: int = 1, *, n_classes: int = 1000,
+                  fc_dim: int | None = None
+                  ) -> list[ConvSpec | PoolSpec | FCSpec]:
+    """The FULL 21-layer VGG16 as one compilable spec chain: 13 CONVs with
+    the 5 interleaved 2x2 maxpools (``PoolSpec``) and the 3-layer FC
+    classifier tail (``FCSpec``) — directly consumable by
+    ``compile_network`` / ``run_tpu_dse`` so the whole model becomes ONE
+    ``Program``. ``scale`` divides channel/FC widths (smoke tests); ``img``
+    rescales the input resolution (must be divisible by 32)."""
+    convs = conv_specs(img, scale)
+    specs: list = []
+    ci, hw, c, pi = 0, img, 0, 0
+    for entry in _VGG16:
+        if entry == "M":
+            specs.append(PoolSpec(f"pool{pi}", hw, hw, c))
+            hw //= 2
+            pi += 1
+        else:
+            s = convs[ci]
+            specs.append(s)
+            ci, hw, c = ci + 1, s.h, s.k
+    feat = hw * hw * c
+    fc_dim = fc_dim or max(64, 4096 // scale)
+    specs += [FCSpec("fc1", feat, fc_dim, relu=True),
+              FCSpec("fc2", fc_dim, fc_dim, relu=True),
+              FCSpec("fc3", fc_dim, n_classes, relu=False)]
+    return specs
+
+
 def conv_segments() -> list[int]:
     """Consecutive-CONV run lengths between maxpools: [2, 2, 3, 3, 3].
 
-    The 128-bit ISA encodes CONV layers only; a pooled network is served as
-    one compiled ``Program`` per segment with the 2x2 maxpool applied
-    between segments (the paper's accelerator does the same — POOL lives
-    outside the CONV instruction stream).
+    Legacy multi-Program serving (the ``--segmented`` compatibility path):
+    one compiled ``Program`` per CONV segment, the 2x2 maxpool applied
+    host-side between segments, and the FC tail outside the runtime. The
+    default path compiles ``network_specs()`` into ONE Program instead —
+    the POOL/FC opcodes put every layer inside the instruction stream.
     """
     sizes, run = [], 0
     for entry in _VGG16:

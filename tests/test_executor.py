@@ -197,6 +197,29 @@ def test_run_with_input_then_replay_from_dram():
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=0, atol=0)
 
 
+def test_fc_first_program_replay_both_paths():
+    """An FC-only Program (no spatial first layer) runs and replays from
+    DRAM identically on the jitted and strict paths."""
+    from repro.core.hybrid_conv import FCSpec
+    specs = [FCSpec("f1", 8, 6, relu=True), FCSpec("f2", 6, 4)]
+    prog = compile_network(specs, [None, None])
+    params = [
+        (jax.random.normal(jax.random.PRNGKey(0), (8, 6)) * 0.3,
+         jnp.zeros((6,))),
+        (jax.random.normal(jax.random.PRNGKey(1), (6, 4)) * 0.3,
+         jnp.zeros((4,))),
+    ]
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 8))
+    rt = HybridRuntime(prog)
+    rt.load_params(params)
+    y1 = rt.run(x)
+    y2 = rt.run()                      # replay from DRAM, FC-first
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    y3 = run_program(prog, params, x, strict=True)
+    assert y3.shape == (2, 4)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y3))
+
+
 def test_compile_executor_reports_stats():
     specs, params, x = _net()
     plans = [LayerPlan("spat", "ws", 2, 2, 2), LayerPlan("spat", "is", 2, 2, 2)]

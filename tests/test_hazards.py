@@ -103,3 +103,113 @@ def test_good_stream_passes_both_paths():
     rt = HybridRuntime(prog, strict=True)
     rt.load_params(params)
     rt.run(x)                          # no raise
+
+
+# ---------------------------------------------------------------------------
+# POOL / FC hazard discipline (full-network ISA)
+# ---------------------------------------------------------------------------
+
+def _full_net():
+    """conv -> pool -> conv -> fc: every new-opcode block in one stream."""
+    from repro.core.hybrid_conv import FCSpec, PoolSpec
+    specs = [ConvSpec("c1", 8, 8, 3, 4, relu=True),
+             PoolSpec("p1", 8, 8, 4),
+             ConvSpec("c2", 4, 4, 4, 4, relu=True),
+             FCSpec("f1", 4 * 4 * 4, 6, relu=False)]
+    plans = [LayerPlan("spat", "is"), None, LayerPlan("spat", "is"), None]
+    params = []
+    for i, s in enumerate(specs):
+        kw, kb = jax.random.split(jax.random.PRNGKey(i), 2)
+        if isinstance(s, ConvSpec):
+            params.append((
+                jax.random.normal(kw, (s.r, s.s, s.c, s.k), jnp.float32) * 0.2,
+                jax.random.normal(kb, (s.k,), jnp.float32) * 0.1))
+        elif isinstance(s, FCSpec):
+            params.append((
+                jax.random.normal(kw, (s.d_in, s.d_out), jnp.float32) * 0.2,
+                jax.random.normal(kb, (s.d_out,), jnp.float32) * 0.1))
+    x = jax.random.normal(jax.random.PRNGKey(7), (1, 8, 8, 3), jnp.float32)
+    return specs, plans, params, x
+
+
+def _mutate_full(prog: Program, name: str) -> Program:
+    import dataclasses
+
+    from repro.core.isa import pack_fc_dims
+
+    ins = list(prog.instructions)
+    if name == "fc_wrong_word3_dims":
+        # the stream's packed FC (d_in, d_out) must agree with the compiled
+        # spec — a hand-edited word3 is a malformed stream, not silent math
+        ins = [dataclasses.replace(s, size=pack_fc_dims(6 * 6 * 4, 6))
+               if s.opcode == Opcode.FC else s for s in ins]
+    elif name == "pool_wrong_word0_cfg":
+        # same contract for POOL's window/stride in the m_tile byte
+        ins = [dataclasses.replace(s, pool_window=1, pool_stride=2)
+               if s.opcode == Opcode.POOL else s for s in ins]
+    elif name == "pool_before_load_inp":
+        # drop the pool layer's LOAD_INP: POOL sees a stale input slot
+        ins = [s for s in ins
+               if not (s.opcode == Opcode.LOAD_INP and s.layer_id == 1)]
+    elif name == "pool_save_before_pool":
+        ins = [s for s in ins if s.opcode != Opcode.POOL]
+    elif name == "fc_before_load_inp":
+        ins = [s for s in ins
+               if not (s.opcode == Opcode.LOAD_INP and s.layer_id == 3)]
+    elif name == "fc_before_load_wgt":
+        ins = [s for s in ins
+               if not (s.opcode == Opcode.LOAD_WGT and s.layer_id == 3)]
+    elif name == "fc_with_stale_bias":
+        ins = [s for s in ins
+               if not (s.opcode == Opcode.LOAD_BIAS and s.layer_id == 3)]
+    elif name == "fc_save_before_fc":
+        ins = [s for s in ins if s.opcode != Opcode.FC]
+    else:
+        raise ValueError(name)
+    return Program(ins, prog.layers, prog.dram_size_words)
+
+
+POOL_FC_HAZARDS = ["pool_before_load_inp", "pool_save_before_pool",
+                   "fc_before_load_inp", "fc_before_load_wgt",
+                   "fc_with_stale_bias", "fc_save_before_fc",
+                   "fc_wrong_word3_dims", "pool_wrong_word0_cfg"]
+
+
+@pytest.mark.parametrize("hazard", POOL_FC_HAZARDS)
+def test_pool_fc_interpreter_raises(hazard):
+    specs, plans, params, x = _full_net()
+    bad = _mutate_full(compile_network(specs, plans), hazard)
+    rt = HybridRuntime(bad, strict=True)
+    rt.load_params(params)
+    with pytest.raises(HazardError):
+        rt.run(x)
+
+
+@pytest.mark.parametrize("hazard", POOL_FC_HAZARDS)
+def test_pool_fc_validation_pass_raises(hazard):
+    specs, plans, params, x = _full_net()
+    bad = _mutate_full(compile_network(specs, plans), hazard)
+    with pytest.raises(HazardError):
+        validate_schedule(bad)
+
+
+@pytest.mark.parametrize("hazard", POOL_FC_HAZARDS)
+def test_pool_fc_jitted_path_raises_before_compute(hazard):
+    specs, plans, params, x = _full_net()
+    bad = _mutate_full(compile_network(specs, plans), hazard)
+    rt = HybridRuntime(bad)
+    rt.load_params(params)
+    with pytest.raises(HazardError):
+        rt.run(x)
+
+
+def test_pool_fc_good_stream_passes_both_paths():
+    specs, plans, params, x = _full_net()
+    prog = compile_network(specs, plans)
+    stats = validate_schedule(prog)    # no raise
+    assert stats["pool"] == 1 and stats["fc"] == 1
+    rt = HybridRuntime(prog, strict=True)
+    rt.load_params(params)
+    y = rt.run(x)                      # no raise
+    assert y.shape == (1, 6)
+    assert rt.stats == stats

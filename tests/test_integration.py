@@ -44,6 +44,64 @@ def test_vgg_runtime_training_signal():
     assert gnorm > 0
 
 
+def test_vgg_single_program_matches_segmented():
+    """The full reduced VGG16 (13 CONV + 5 POOL + 3 FC) compiled as ONE
+    Program produces the same logits as the legacy multi-Program path
+    (per-segment Programs + host-side maxpool glue + FC tail outside the
+    runtime) — and the one-Program strict interpreter matches the cached
+    jitted executor bitwise."""
+    from repro.core.compiler import LayerPlan, compile_network
+    from repro.core.hybrid_conv import ConvSpec
+    from repro.core.runtime import HybridRuntime
+    from repro.launch.serve import build_segmented_request, make_vgg_params
+    from repro.models import vgg
+
+    img, scale = 32, 16
+    specs = vgg.network_specs(img=img, scale=scale, n_classes=10)
+    # alternate wino/spat CONV plans so the one-Program path exercises the
+    # POOL->WINO layout reorder and the U-space weight path, not just spat
+    ci = 0
+    plans = []
+    for s in specs:
+        if isinstance(s, ConvSpec):
+            plans.append(LayerPlan("wino" if ci % 2 == 0 else "spat",
+                                   "is" if ci % 2 else "ws", m=2))
+            ci += 1
+        else:
+            plans.append(None)
+    params = make_vgg_params(specs, seed=0)
+    x = jnp.asarray(np.random.default_rng(1).standard_normal(
+        (2, img, img, 3)), jnp.float32)
+
+    program = compile_network(specs, plans)
+    rt = HybridRuntime(program)
+    rt.load_params(params)
+    y_single = rt.run(x)
+    assert y_single.shape == (2, 10)
+
+    # acceptance: strict interpreter == cached jitted executor, bitwise
+    rt_strict = HybridRuntime(program, strict=True)
+    rt_strict.load_params(params)
+    y_strict = rt_strict.run(x)
+    np.testing.assert_array_equal(np.asarray(y_single), np.asarray(y_strict))
+
+    # compatibility: segmented path numerically identical
+    request, _, _ = build_segmented_request(specs, plans, params)
+    y_seg = request(x)
+    np.testing.assert_array_equal(np.asarray(y_single), np.asarray(y_seg))
+
+
+@pytest.mark.slow
+def test_serve_cnn_segmented_flag_matches_default():
+    """serve_cnn's --segmented compatibility path end-to-end (DSE plans,
+    program cache, random params) agrees with the single-Program default."""
+    from repro.launch.serve import serve_cnn
+    y1 = serve_cnn("vgg16", reduced=True, batch=2, iters=1, seed=3)
+    y2 = serve_cnn("vgg16", reduced=True, batch=2, iters=1, seed=3,
+                   segmented=True)
+    np.testing.assert_array_equal(y1, y2)
+
+
 @pytest.mark.slow
 def test_checkpoint_restart_bitexact(tmp_path):
     """Train 10; vs train 5 -> restore -> train 5: identical params."""

@@ -98,3 +98,45 @@ def test_pipeline_stats():
     assert rt.stats["comp"] == sum(
         len(cl.row_groups) * len(cl.k_groups) for cl in prog.layers)
     assert rt.stats["load_inp"] > 0 and rt.stats["save"] > 0
+
+
+def test_decode_reserved_opcode_names_bad_word():
+    """Reserved/out-of-range opcodes raise a ValueError that names the
+    offending word, not a bare enum error."""
+    import numpy as np
+    from repro.core.isa import decode
+    for bad in (0, 8, 15):
+        w0 = bad | (3 << 16)
+        with pytest.raises(ValueError, match=f"word0=0x{w0:08x}"):
+            decode(np.array([w0, 0, 0, 0], np.uint32))
+    # encoded valid streams still decode
+    from repro.core.isa import Instruction, Opcode as Op, decode_stream, \
+        encode_stream
+    ins = [Instruction(Op.POOL, pool_window=2, pool_stride=2, layer_id=5)]
+    assert decode_stream(encode_stream(ins)) == ins
+
+
+def test_full_network_roundtrip_through_encoded_stream():
+    """A conv+pool+fc Program survives encode->decode bit-exactly, and the
+    decoded stream drives the interpreter to the same logits."""
+    from repro.core.hybrid_conv import FCSpec, PoolSpec
+    from repro.core.isa import decode_stream, encode_stream
+    specs = [ConvSpec("c1", 8, 8, 3, 6, relu=True),
+             PoolSpec("p1", 8, 8, 6),
+             FCSpec("f1", 4 * 4 * 6, 5)]
+    plans = [LayerPlan("wino", "is", m=2), None, None]
+    prog = compile_network(specs, plans)
+    decoded = decode_stream(encode_stream(prog.instructions))
+    assert decoded == prog.instructions
+    params = [
+        (jax.random.normal(jax.random.PRNGKey(0), (3, 3, 3, 6)) * 0.2,
+         jnp.zeros((6,))),
+        (jax.random.normal(jax.random.PRNGKey(1), (4 * 4 * 6, 5)) * 0.2,
+         jnp.zeros((5,))),
+    ]
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 8, 8, 3))
+    y1 = run_program(prog, params, x, strict=True)
+    y2 = run_program(Program(decoded, prog.layers, prog.dram_size_words),
+                     params, x, strict=True)
+    assert y1.shape == (2, 5)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))

@@ -50,31 +50,61 @@ def test_winograd_equals_direct(h, w, c, k, m, r, seed):
     wino=st.booleans(), ws=st.booleans(), lw=st.booleans(),
     relu=st.booleans(),
     m=st.integers(0, 255), layer=st.integers(0, 2 ** 16 - 1),
+    pw=st.integers(0, 15), ps=st.integers(0, 15),
     buff=st.integers(0, 2 ** 32 - 1), dram=st.integers(0, 2 ** 32 - 1),
     size=st.integers(0, 2 ** 32 - 1),
 )
-def test_isa_roundtrip(opcode, wino, ws, lw, relu, m, layer, buff, dram, size):
+def test_isa_roundtrip(opcode, wino, ws, lw, relu, m, layer, pw, ps,
+                       buff, dram, size):
+    """Bit-exact across all 7 opcodes. POOL reuses the m_tile byte for
+    window/stride, so the pool fields only exist on POOL instructions and
+    m_tile only on the others."""
+    is_pool = opcode == Opcode.POOL
     ins = Instruction(opcode, wino_flag=wino, dataflow_ws=ws,
-                      layout_out_wino=lw, relu_flag=relu, m_tile=m,
+                      layout_out_wino=lw, relu_flag=relu,
+                      m_tile=0 if is_pool else m,
+                      pool_window=pw if is_pool else 0,
+                      pool_stride=ps if is_pool else 0,
                       layer_id=layer, buff_base=buff, dram_base=dram,
                       size=size)
     assert decode(ins.encode()) == ins
 
 
 @settings(**_SETTINGS)
+@given(
+    d_in=st.integers(0, 2 ** 16 - 1), d_out=st.integers(0, 2 ** 16 - 1),
+    relu=st.booleans(), layer=st.integers(0, 2 ** 16 - 1),
+)
+def test_isa_fc_dims_roundtrip(d_in, d_out, relu, layer):
+    """FC packs (d_in, d_out) into word3; pack/unpack and the 128-bit
+    round-trip both preserve them exactly."""
+    from repro.core.isa import pack_fc_dims, unpack_fc_dims
+    assert unpack_fc_dims(pack_fc_dims(d_in, d_out)) == (d_in, d_out)
+    ins = Instruction(Opcode.FC, relu_flag=relu, layer_id=layer,
+                      size=pack_fc_dims(d_in, d_out))
+    back = decode(ins.encode())
+    assert back == ins
+    assert unpack_fc_dims(back.size) == (d_in, d_out)
+
+
+@settings(**_SETTINGS)
 @given(n=st.integers(0, 12), seed=st.integers(0, 999))
 def test_isa_stream_roundtrip(n, seed):
     rng = np.random.default_rng(seed)
-    instrs = [
-        Instruction(Opcode(int(rng.integers(1, 6))),
-                    wino_flag=bool(rng.integers(2)),
-                    m_tile=int(rng.integers(0, 8)),
-                    layer_id=int(rng.integers(0, 100)),
-                    buff_base=int(rng.integers(0, 2 ** 32)),
-                    dram_base=int(rng.integers(0, 2 ** 32)),
-                    size=int(rng.integers(0, 2 ** 32)))
-        for _ in range(n)
-    ]
+    instrs = []
+    for _ in range(n):
+        op = Opcode(int(rng.integers(1, 8)))
+        is_pool = op == Opcode.POOL
+        instrs.append(
+            Instruction(op,
+                        wino_flag=bool(rng.integers(2)),
+                        m_tile=0 if is_pool else int(rng.integers(0, 8)),
+                        pool_window=int(rng.integers(0, 16)) if is_pool else 0,
+                        pool_stride=int(rng.integers(0, 16)) if is_pool else 0,
+                        layer_id=int(rng.integers(0, 100)),
+                        buff_base=int(rng.integers(0, 2 ** 32)),
+                        dram_base=int(rng.integers(0, 2 ** 32)),
+                        size=int(rng.integers(0, 2 ** 32))))
     assert decode_stream(encode_stream(instrs)) == instrs
 
 
