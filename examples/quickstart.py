@@ -1,91 +1,79 @@
-"""Quickstart: the HybridDNN pipeline end-to-end on a small CNN.
+"""Quickstart: the HybridDNN framework API end-to-end on a reduced VGG16.
 
-1. Describe CONV layers (ConvSpec) — here a reduced VGG16.
-2. Run the DSE (paper Sec. 5) to pick per-layer mode (Spatial/Winograd) and
-   dataflow (IS/WS) for both the paper's FPGA targets and the TPU target.
-3. Compile the network to the 128-bit instruction stream (Sec. 4.1).
-4. Execute the stream on the functional runtime and check it against direct
-   execution through the hybrid PE.
+The paper's whole design flow is one call — DSE (Sec. 5) -> compile to the
+128-bit ISA (Sec. 4.1) -> validate the hazard schedule once -> the cached
+jitted executor:
+
+    acc = api.Accelerator.build(specs, target=pm.V5E, batch=4)
+    logits = acc(x)
+
+Any DSE backend goes through the same ``Target`` protocol, so the paper's
+FPGA devices and the TPU target are interchangeable here. The script also
+exercises the save/load path (reuse a compiled Program without re-running
+DSE) and the batching ``ServingSession``.
 
   PYTHONPATH=src python examples/quickstart.py
 """
+import os
+import tempfile
+
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core import perf_model as pm
-from repro.core.compiler import compile_network
-from repro.core.dse import run_fpga_dse, run_tpu_dse
-from repro.core.hybrid_conv import hybrid_conv2d
-from repro.core.isa import encode_stream
-from repro.core.runtime import run_program
 from repro.models import vgg
 
 
 def main():
     img, scale = 32, 16
-    specs = vgg.conv_specs(img=img, scale=scale)
+    specs = vgg.network_specs(img=img, scale=scale, n_classes=10)
+    x = np.random.default_rng(0).standard_normal(
+        (2, img, img, 3)).astype(np.float32)
 
-    print("== DSE (paper Sec. 5) ==")
-    for target, name in ((pm.VU9P, "VU9P"), (pm.PYNQ_Z1, "PYNQ-Z1")):
-        r = run_fpga_dse(target, specs)
-        print(f"{name}: PI={r.hw.pi} PO={r.hw.po} PT={r.hw.pt} NI={r.hw.ni} "
-              f"| {sum(p.mode == 'wino' for p in r.plans)}/13 layers Winograd")
-    tr = run_tpu_dse(specs, batch=4)
-    print(f"v5e:  blocks=({tr.hw.bm},{tr.hw.bk},{tr.hw.bn}) m={tr.hw.m} "
-          f"| {sum(p.mode == 'wino' for p in tr.plans)}/13 layers Winograd")
+    # -- the 5-line flow: DSE -> compile -> validate -> execute -------------
+    acc = api.Accelerator.build(specs, target=pm.V5E, batch=2)
+    logits = acc(x)
+    print(acc.summary())
+    print(f"logits: {logits.shape}\n")
 
-    # the instruction stream executes the WHOLE model — CONVs, the 2x2
-    # maxpool, and the FC tail compile into one Program (POOL/FC opcodes)
-    from repro.core.hybrid_conv import ConvSpec, FCSpec, PoolSpec
-    from repro.core.compiler import LayerPlan
-    specs = [ConvSpec("c1", 16, 16, 3, 8), ConvSpec("c2", 16, 16, 8, 16),
-             ConvSpec("c3", 16, 16, 16, 8),
-             PoolSpec("p1", 16, 16, 8),
-             FCSpec("fc", 8 * 8 * 8, 10, relu=False)]
-    plans = [LayerPlan("wino", "is", m=4, g_h=2, g_k=2),
-             LayerPlan("spat", "ws", m=4, g_h=2, g_k=2),
-             LayerPlan("wino", "is", m=2), None, None]
-
-    print("\n== compile to the 128-bit ISA (Sec. 4.1) ==")
-    prog = compile_network(specs, plans)
-    image = encode_stream(prog.instructions)
-    print(f"{len(prog.instructions)} instructions "
-          f"({image.nbytes} bytes of instruction memory), "
-          f"DRAM plan: {prog.dram_size_words} words")
-
-    print("\n== execute the stream vs direct hybrid-PE execution ==")
-    from repro.core.hybrid_conv import dense, max_pool2d
-    key = jax.random.PRNGKey(0)
-    params = []
-    for i, s in enumerate(specs):
-        kw, kb = jax.random.split(jax.random.PRNGKey(i))
-        if isinstance(s, ConvSpec):
-            params.append(
-                (jax.random.normal(kw, (s.r, s.s, s.c, s.k), jnp.float32) * 0.2,
-                 jax.random.normal(kb, (s.k,), jnp.float32) * 0.1))
-        elif isinstance(s, FCSpec):
-            params.append(
-                (jax.random.normal(kw, (s.d_in, s.d_out), jnp.float32) * 0.1,
-                 jnp.zeros((s.d_out,), jnp.float32)))
-    x = jax.random.normal(key, (2, 16, 16, 3), jnp.float32)
-    y_stream = run_program(prog, params, x)
-
-    y_direct, pi = x, 0
-    for spec, plan in zip(specs, plans):
-        if isinstance(spec, PoolSpec):
-            y_direct = max_pool2d(y_direct, spec.window, spec.stride)
-        elif isinstance(spec, FCSpec):
-            w, b = params[pi]; pi += 1
-            y_direct = dense(y_direct.reshape(y_direct.shape[0], -1), w, b,
-                             relu=spec.relu)
-        else:
-            w, b = params[pi]; pi += 1
-            y_direct = hybrid_conv2d(y_direct, w, b, mode=plan.mode, m=plan.m,
-                                     relu=spec.relu, use_pallas=False)
-    err = float(jnp.max(jnp.abs(y_stream - y_direct)))
-    print(f"instruction-stream logits == direct logits: max |err| = {err:.2e}")
+    # -- one Target protocol, three DSE backends ----------------------------
+    for target in (pm.VU9P, pm.PYNQ_Z1):
+        r = target.run_dse(specs)
+        n_wino = sum(p.mode == "wino" for s, p in zip(specs, r.plans)
+                     if isinstance(s, vgg.ConvSpec))
+        print(f"{target.name}: PI={r.hw.pi} PO={r.hw.po} PT={r.hw.pt} "
+              f"NI={r.hw.ni} | {n_wino}/13 CONVs Winograd "
+              f"({r.candidates_searched} candidates)")
+    acc_fpga = api.Accelerator.build(specs, target=pm.PYNQ_Z1, batch=2,
+                                     params=acc.params)
+    err = float(np.max(np.abs(np.asarray(acc_fpga(x)) - np.asarray(logits))))
+    print(f"FPGA-planned vs TPU-planned logits: max |diff| = {err:.2e}\n")
     assert err < 5e-3
+
+    # -- save the compiled Program; reload without re-running the DSE -------
+    with tempfile.TemporaryDirectory() as d:
+        path = acc.save_program(os.path.join(d, "vgg16_reduced.json"))
+        acc2 = api.Accelerator.from_program(path, params=acc.params)
+        same = np.array_equal(np.asarray(acc2(x)), np.asarray(logits))
+        print(f"saved + reloaded Program ({acc2.n_instructions} "
+              f"instructions): bitwise-equal logits = {same}")
+        assert same
+
+    # -- batched serving: single-image requests coalesce on the queue -------
+    with acc.serve(max_batch=4, warmup=True) as session:
+        outs = session.run_many([x[i % 2] for i in range(8)])
+        jax.block_until_ready(outs[-1])
+        # coalesced device batches may differ in shape from the batch-2
+        # reference call -> float-associativity tolerance, not bitwise
+        ok = all(np.allclose(np.asarray(o), np.asarray(logits[i % 2]),
+                             atol=1e-5, rtol=1e-5)
+                 for i, o in enumerate(outs))
+        print(f"ServingSession: {session.stats.requests} requests in "
+              f"{session.stats.batches} device batches "
+              f"({session.stats.padded_rows} padded rows); "
+              f"rows match = {ok}")
+        assert ok
     print("OK")
 
 

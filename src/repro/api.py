@@ -1,0 +1,684 @@
+"""``repro.api`` — one façade for the paper's full design flow (Fig. 1).
+
+The paper's headline contribution is a *framework*: model + hardware target
+in, deployed accelerator out. This module is that framework's user surface:
+
+    from repro import api
+    from repro.core import perf_model as pm
+    from repro.models import vgg
+
+    specs = vgg.network_specs(img=64, scale=8, n_classes=10)
+    acc = api.Accelerator.build(specs, target=pm.V5E, batch=8)
+    logits = acc(x)                 # cached, validated, jitted executor
+    print(acc.summary())            # per-layer mode/dataflow/latency table
+
+``Accelerator.build`` runs the DSE (Sec. 5) through the unified ``Target``
+protocol — any object with ``run_dse(specs, batch)`` works, so ``pm.V5E``
+and the ``pm.FPGATarget`` instances dispatch identically — compiles ONE
+``Program`` (Sec. 4.1), validates the hazard schedule once, and returns a
+callable accelerator whose requests hit the cached jitted executor.
+
+``Accelerator.save_program`` / ``Accelerator.from_program`` persist the
+compiled instruction stream (plus specs/plans and the DSE verdict) so a
+deployment can skip the DSE; the loader recompiles and verifies the stream
+bit-exactly.
+
+``ServingSession`` (via ``Accelerator.serve()``) is the paper's NI-instances
+analog on the host mesh: a padding-bucketed request-batching queue that
+coalesces single-image requests into device batches, pads them up to a fixed
+set of bucket sizes (so the jit cache holds one executor per bucket), and
+optionally shards the batch axis over every local device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future, InvalidStateError
+from typing import Any, Protocol, Sequence, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import perf_model as pm
+from repro.core.compiler import NO_PLAN, LayerPlan, Program, compile_network
+from repro.core.dse import DSEResult, FPGACandidate, TPUCandidate
+from repro.core.hybrid_conv import ConvSpec, FCSpec, PoolSpec
+from repro.core.runtime import HybridRuntime
+
+PROGRAM_FORMAT = "hybriddnn-program/v1"
+
+
+@runtime_checkable
+class Target(Protocol):
+    """Anything that can run the paper's DSE for a layer chain.
+
+    ``pm.TPUTarget`` and ``pm.FPGATarget`` both implement this, so callers
+    never branch on ``run_tpu_dse`` vs ``run_fpga_dse`` — they hand any
+    target instance to ``Accelerator.build``.
+    """
+
+    def run_dse(self, specs, batch: int = 1) -> DSEResult: ...
+
+
+def random_params(specs: Sequence[Any], seed: int = 0) -> list:
+    """Random ``[(w, b), ...]`` for every parameterized layer (CONV + FC),
+    fan-in scaled — the stand-in for trained weights throughout the repo."""
+    rng = np.random.default_rng(seed)
+    params = []
+    for s in specs:
+        if isinstance(s, ConvSpec):
+            w = jnp.asarray(rng.standard_normal((s.r, s.s, s.c, s.k)),
+                            jnp.float32) * (s.r * s.s * s.c) ** -0.5
+            params.append((w, jnp.zeros((s.k,), jnp.float32)))
+        elif isinstance(s, FCSpec):
+            w = jnp.asarray(rng.standard_normal((s.d_in, s.d_out)),
+                            jnp.float32) * s.d_in ** -0.5
+            params.append((w, jnp.zeros((s.d_out,), jnp.float32)))
+    return params
+
+
+def _conv_segments_of(specs) -> list[int]:
+    """Consecutive-CONV run lengths between maxpools (VGG16: [2,2,3,3,3]).
+
+    The segmented request glues segments with a host-side maxpool, so the
+    chain must be ``(CONV+ POOL)+ FC*`` — anything else (trailing CONVs
+    without a pool, a pool before any CONV, CONVs after the FC tail) gets a
+    descriptive error instead of an opaque crash downstream."""
+    segments, run, seen_fc = [], 0, False
+    for s in specs:
+        if isinstance(s, ConvSpec):
+            if seen_fc:
+                raise ValueError("segmented path: CONV after the FC tail")
+            run += 1
+        elif isinstance(s, PoolSpec):
+            if seen_fc:
+                raise ValueError("segmented path: POOL after the FC tail")
+            if run == 0:
+                raise ValueError(
+                    "segmented path: maxpool without a preceding CONV "
+                    "segment — the chain must be (CONV+ POOL)+ FC*")
+            segments.append(run)
+            run = 0
+        else:
+            seen_fc = True
+    if run:
+        raise ValueError(
+            "segmented path: trailing CONV segment without a maxpool — "
+            "use the single-Program path (segmented=False) for this chain")
+    if not segments:
+        raise ValueError("segmented path: no CONV+POOL segment in the chain")
+    return segments
+
+
+def build_segmented_request(specs, plans, params, *, strict: bool = False,
+                            cache=None):
+    """The legacy multi-Program path: one compiled Program per CONV segment,
+    host-side 2x2 maxpool glue between segments, and the FC tail outside
+    the runtime. Kept as ``Accelerator.build(..., segmented=True)``;
+    asserted numerically identical to the single-Program path in
+    ``tests/test_integration.py``. ``strict=True`` builds the per-segment
+    runtimes on the per-instruction interpreter instead of the cached
+    jitted executor; ``cache`` overrides the process-global program cache
+    for every segment runtime."""
+    from repro.core.hybrid_conv import dense, max_pool2d
+
+    # params align with the non-pool specs, in network order
+    nonpool = [s for s in specs if not isinstance(s, PoolSpec)]
+    assert len(nonpool) == len(params)
+    conv_specs = [s for s in specs if isinstance(s, ConvSpec)]
+    conv_plans = [p for s, p in zip(specs, plans) if isinstance(s, ConvSpec)]
+    conv_params = [p for s, p in zip(nonpool, params)
+                   if isinstance(s, ConvSpec)]
+    pool_specs = [s for s in specs if isinstance(s, PoolSpec)]
+    fc_specs = [s for s in nonpool if isinstance(s, FCSpec)]
+    fc_params = [p for s, p in zip(nonpool, params) if isinstance(s, FCSpec)]
+
+    runtimes, idx, n_instr = [], 0, 0
+    for n in _conv_segments_of(specs):
+        program = compile_network(conv_specs[idx:idx + n],
+                                  conv_plans[idx:idx + n])
+        rt = HybridRuntime(program, strict=strict, cache=cache)
+        rt.load_params(conv_params[idx:idx + n])
+        runtimes.append(rt)
+        n_instr += len(program.instructions)
+        idx += n
+
+    assert len(pool_specs) == len(runtimes), \
+        "segmented path expects one maxpool after each CONV segment"
+
+    def request(x):
+        for rt, ps in zip(runtimes, pool_specs):
+            x = max_pool2d(rt.run(x), ps.window, ps.stride)
+        x = x.reshape(x.shape[0], -1)
+        for s, (w, b) in zip(fc_specs, fc_params):
+            x = dense(x, w, b, relu=s.relu)
+        return x
+
+    return request, runtimes, n_instr
+
+
+# ---------------------------------------------------------------------------
+# Program (de)serialization helpers
+# ---------------------------------------------------------------------------
+
+_SPEC_KINDS = {"conv": ConvSpec, "pool": PoolSpec, "fc": FCSpec}
+
+
+def _spec_to_dict(spec) -> dict:
+    kind = ("pool" if isinstance(spec, PoolSpec)
+            else "fc" if isinstance(spec, FCSpec) else "conv")
+    return {"kind": kind, **dataclasses.asdict(spec)}
+
+
+def _spec_from_dict(d: dict):
+    d = dict(d)
+    return _SPEC_KINDS[d.pop("kind")](**d)
+
+
+def _hw_to_dict(hw) -> dict:
+    if isinstance(hw, TPUCandidate):
+        return {"type": "tpu", **dataclasses.asdict(hw)}
+    if isinstance(hw, FPGACandidate):
+        return {"type": "fpga", **dataclasses.asdict(hw)}
+    return {"type": "other", "repr": repr(hw)}
+
+
+def _hw_from_dict(d: dict):
+    d = dict(d)
+    typ = d.pop("type")
+    if typ == "tpu":
+        return TPUCandidate(**d)
+    if typ == "fpga":
+        return FPGACandidate(**d)
+    return d.get("repr")
+
+
+def _fmt_t(seconds: float) -> str:
+    if seconds < 1e-3:
+        return f"{seconds * 1e6:8.1f} us"
+    if seconds < 1.0:
+        return f"{seconds * 1e3:8.2f} ms"
+    return f"{seconds:8.3f} s "
+
+
+# ---------------------------------------------------------------------------
+# The façade
+# ---------------------------------------------------------------------------
+
+class Accelerator:
+    """A built accelerator: DSE verdict + ONE compiled Program + the cached,
+    validated, jitted executor behind ``__call__``.
+
+    Construct with :meth:`build` (the full flow) or :meth:`from_program`
+    (reuse a saved instruction stream, skipping the DSE).
+    """
+
+    def __init__(self, *, specs, plans, params, request, target=None,
+                 batch: int = 1, program: Program | None = None,
+                 runtime: HybridRuntime | None = None,
+                 dse: DSEResult | None = None, segmented: bool = False,
+                 segment_runtimes: list | None = None):
+        self.specs = list(specs)
+        self.plans = list(plans)
+        self.params = params
+        self.target = target
+        self.batch = batch
+        self.program = program
+        self.runtime = runtime
+        self.dse = dse
+        self.segmented = segmented
+        self.segment_runtimes = segment_runtimes
+        self._request = request
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def build(cls, specs, target: Target = pm.V5E, *, batch: int = 8,
+              params: list | None = None, seed: int = 0,
+              plans: Sequence[LayerPlan | None] | None = None,
+              segmented: bool = False, strict: bool = False,
+              cache=None) -> "Accelerator":
+        """DSE -> compile -> validate, in one call.
+
+        ``target`` is any :class:`Target` (``pm.V5E``, ``pm.VU9P``,
+        ``pm.PYNQ_Z1``, or a custom instance). ``plans`` overrides the DSE
+        (skips it entirely — useful for benchmarks pinning a schedule).
+        ``params`` defaults to :func:`random_params`. ``segmented=True``
+        builds the legacy multi-Program path instead (one Program per CONV
+        segment, host-side glue); ``strict=True`` runs the per-instruction
+        interpreter instead of the cached executor.
+        """
+        specs = list(specs)
+        dse = None
+        if plans is None:
+            if not isinstance(target, Target):
+                raise TypeError(
+                    f"target {target!r} does not implement the Target "
+                    f"protocol (needs a run_dse(specs, batch) method) — pass "
+                    f"e.g. pm.V5E, pm.VU9P, pm.PYNQ_Z1, or supply plans=")
+            dse = target.run_dse(specs, batch=batch)
+            plans = list(dse.plans)
+        else:
+            plans = list(plans)
+        if params is None:
+            params = random_params(specs, seed)
+
+        if segmented:
+            request, seg_rts, _ = build_segmented_request(
+                specs, plans, params, strict=strict, cache=cache)
+            return cls(specs=specs, plans=plans, params=params,
+                       request=request, target=target, batch=batch, dse=dse,
+                       segmented=True, segment_runtimes=seg_rts)
+
+        program = compile_network(specs, plans)
+        rt = HybridRuntime(program, strict=strict, cache=cache)
+        rt.load_params(params)
+        if not strict:
+            rt.cache.validate(program)   # schedule check once, at build time
+        return cls(specs=specs, plans=plans, params=params, request=rt.run,
+                   target=target, batch=batch, program=program, runtime=rt,
+                   dse=dse)
+
+    # -- inference ----------------------------------------------------------
+    def __call__(self, x):
+        """One inference request. ``x``: (n, H, W, C) for CONV-first models,
+        (n, D) for FC-first. Steady-state calls are cache hits only."""
+        return self._request(jnp.asarray(x, self.input_dtype))
+
+    @property
+    def input_dtype(self):
+        if self.params:
+            return self.params[0][0].dtype
+        return jnp.float32
+
+    @property
+    def input_shape(self) -> tuple[int, ...]:
+        """Shape of ONE request item (no batch dim)."""
+        s0 = self.specs[0]
+        if isinstance(s0, FCSpec):
+            return (s0.d_in,)
+        return (s0.h, s0.w, s0.c)
+
+    @property
+    def n_instructions(self) -> int:
+        if self.program is not None:
+            return len(self.program.instructions)
+        return sum(len(rt.program.instructions)
+                   for rt in self.segment_runtimes or [])
+
+    def strict_request(self):
+        """A per-instruction-interpreter request fn over the same Program(s)
+        and params — the hazard-faithful baseline for comparisons."""
+        if self.segmented:
+            return build_segmented_request(
+                self.specs, self.plans, self.params, strict=True)[0]
+        rt = HybridRuntime(self.program, strict=True)
+        rt.load_params(self.params)
+        return rt.run
+
+    # -- reporting ----------------------------------------------------------
+    def _hw_desc(self) -> str:
+        if self.dse is None:
+            return "plans supplied (no DSE)"
+        hw = self.dse.hw
+        if isinstance(hw, TPUCandidate):
+            return (f"blocks=({hw.bm},{hw.bk},{hw.bn}) m={hw.m} | DSE over "
+                    f"{self.dse.candidates_searched} candidates")
+        if isinstance(hw, FPGACandidate):
+            return (f"PI={hw.pi} PO={hw.po} PT={hw.pt} NI={hw.ni} | DSE over "
+                    f"{self.dse.candidates_searched} candidates")
+        return str(hw)
+
+    def summary(self) -> str:
+        """Per-layer plan/latency table — the DSE verdict, human-readable."""
+        # target is an instance with .name, or the bare name string a
+        # from_program-restored accelerator carries
+        tname = (self.target if isinstance(self.target, str)
+                 else getattr(self.target, "name", None)) or "-"
+        kind_of = {ConvSpec: "conv", PoolSpec: "pool", FCSpec: "fc"}
+        head = (f"{len(self.specs)} layers as "
+                + (f"{len(self.segment_runtimes)} segment Programs + host "
+                   f"glue" if self.segmented else
+                   f"ONE Program ({self.n_instructions} instructions)"))
+        lines = [f"Accelerator[{tname}]: {head}",
+                 f"  {self._hw_desc()}, batch={self.batch}",
+                 f"  {'layer':<12}{'kind':<6}{'mode':<6}{'df':<4}"
+                 f"{'m':>2}{'g_h':>5}{'g_k':>5}  {'latency':>11}{'share':>8}"]
+        lats = self.dse.layer_latencies if self.dse else None
+        total = self.dse.total_latency if self.dse else None
+        for i, (s, p) in enumerate(zip(self.specs, self.plans)):
+            kind = kind_of[type(s)]
+            p = p or NO_PLAN
+            mode, df, m = (p.mode, p.dataflow, str(p.m)) \
+                if kind == "conv" else ("-", "-", "-")
+            gh, gk = ((str(p.g_h), str(p.g_k)) if kind == "conv"
+                      else ("-", "-"))
+            lat = _fmt_t(lats[i]) if lats else "          -"
+            share = (f"{100 * lats[i] / total:6.1f}%"
+                     if lats and total else "      -")
+            lines.append(f"  {s.name:<12}{kind:<6}{mode:<6}{df:<4}"
+                         f"{m:>2}{gh:>5}{gk:>5}  {lat}{share}")
+        if total is not None:
+            macs = sum(s.macs for s in self.specs)
+            scale = self.batch if isinstance(self.dse.hw, TPUCandidate) else 1
+            gops = 2.0 * macs * scale / total / 1e9
+            lines.append(f"  est. total {_fmt_t(total).strip()} "
+                         f"({gops:.1f} effective GOPS)")
+        return "\n".join(lines)
+
+    # -- persistence --------------------------------------------------------
+    def save_program(self, path: str) -> str:
+        """Persist the compiled instruction stream + specs/plans + DSE
+        verdict as JSON, so :meth:`from_program` can rebuild this
+        accelerator without re-running the DSE. Params are NOT saved (they
+        are the model's weights — supply them at load time)."""
+        if self.program is None:
+            raise ValueError("segmented accelerators hold multiple Programs; "
+                             "save_program supports the single-Program path")
+        doc = {
+            "format": PROGRAM_FORMAT,
+            "target": (self.target if isinstance(self.target, str)
+                       else getattr(self.target, "name", None)),
+            "batch": self.batch,
+            "specs": [_spec_to_dict(s) for s in self.specs],
+            "plans": [dataclasses.asdict(cl.plan)
+                      for cl in self.program.layers],
+            "instructions": self.program.instruction_image().tolist(),
+            "dse": None if self.dse is None else {
+                "hw": _hw_to_dict(self.dse.hw),
+                "layer_latencies": [float(v)
+                                    for v in self.dse.layer_latencies],
+                "total_latency": float(self.dse.total_latency),
+                "candidates_searched": self.dse.candidates_searched,
+            },
+        }
+        with open(path, "w") as f:
+            json.dump(doc, f)
+        return path
+
+    @classmethod
+    def from_program(cls, path: str, *, params: list | None = None,
+                     strict: bool = False, cache=None) -> "Accelerator":
+        """Rebuild an accelerator from :meth:`save_program` output — no DSE.
+
+        The layer chain is recompiled from the saved specs/plans and the
+        resulting stream is verified bit-exact against the saved instruction
+        image; a mismatch (compiler/schedule drift) raises ``ValueError``
+        rather than serving from a stream that was never validated.
+
+        ``params`` is required: saved programs carry no weights, and
+        silently substituting random ones would make a reloaded deployment
+        serve garbage — pass ``api.random_params(specs, seed)`` explicitly
+        if stand-in weights are what you want.
+        """
+        if params is None:
+            raise ValueError(
+                "saved programs carry no weights — pass params=[...] "
+                "(api.random_params(specs, seed) for stand-ins)")
+        with open(path) as f:
+            doc = json.load(f)
+        if doc.get("format") != PROGRAM_FORMAT:
+            raise ValueError(f"{path}: not a {PROGRAM_FORMAT} file "
+                             f"(format={doc.get('format')!r})")
+        specs = [_spec_from_dict(d) for d in doc["specs"]]
+        plans = [LayerPlan(**d) for d in doc["plans"]]
+        program = compile_network(specs, plans)
+        image = np.asarray(doc["instructions"], np.uint32).reshape(-1, 4)
+        if not np.array_equal(program.instruction_image(), image):
+            raise ValueError(
+                f"{path}: saved instruction stream does not match its "
+                f"recompilation (compiler or schedule drift) — re-run "
+                f"Accelerator.build and save again")
+        dse = None
+        if doc.get("dse"):
+            d = doc["dse"]
+            dse = DSEResult(hw=_hw_from_dict(d["hw"]), plans=plans,
+                            layer_latencies=d["layer_latencies"],
+                            total_latency=d["total_latency"],
+                            candidates_searched=d["candidates_searched"])
+        rt = HybridRuntime(program, strict=strict, cache=cache)
+        rt.load_params(params)
+        if not strict:
+            rt.cache.validate(program)
+        return cls(specs=specs, plans=plans, params=params, request=rt.run,
+                   target=doc.get("target"), batch=doc.get("batch", 1),
+                   program=program, runtime=rt, dse=dse)
+
+    # -- serving ------------------------------------------------------------
+    def serve(self, **kwargs) -> "ServingSession":
+        """Open a :class:`ServingSession` over this accelerator — a
+        padding-bucketed request-batching queue (see the class docs).
+        ``mesh="host"`` shards batches over all local devices."""
+        if kwargs.get("mesh") == "host":
+            from repro.launch.mesh import make_host_mesh
+            kwargs["mesh"] = make_host_mesh()
+        return ServingSession(self, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Serving: the request-batching queue (NI-instances analog)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SessionStats:
+    requests: int = 0        # requests completed
+    batches: int = 0         # executor invocations
+    padded_rows: int = 0     # zero rows added to reach a bucket size
+
+
+class ServingSession:
+    """Padding-bucketed request-batching queue over the cached executor.
+
+    Callers ``submit()`` single items (H, W, C) or small batches
+    (n, H, W, C) and get a ``Future``; a worker thread coalesces pending
+    requests into device batches of at most ``max_batch`` items, pads each
+    batch up to the nearest size in ``buckets`` (so the jit cache holds one
+    executor per bucket instead of one per observed batch size), runs the
+    accelerator's cached executor directly (no per-request DRAM dict work),
+    and scatters the rows back to the futures in submission order.
+
+    ``mesh``: a ``jax.sharding.Mesh`` — device batches whose bucket size
+    is a multiple of the device count are sharded along the batch axis over
+    every device (weights replicated once at session start), the paper's
+    NI-instances analog. ``max_wait_ms`` is the batching window: after the
+    first pending request the worker waits that long for co-arriving
+    requests before launching a partial batch.
+    """
+
+    def __init__(self, acc: Accelerator, *, max_batch: int = 8,
+                 buckets: Sequence[int] | None = None, mesh=None,
+                 max_wait_ms: float = 5.0, warmup: bool = False):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.acc = acc
+        self.max_batch = int(max_batch)
+        if buckets is None:
+            buckets, b = [], 1
+            while b < self.max_batch:
+                buckets.append(b)
+                b *= 2
+            buckets.append(self.max_batch)
+        self.buckets = tuple(sorted({int(b) for b in buckets}))
+        if self.buckets[-1] < self.max_batch or self.buckets[0] < 1:
+            raise ValueError(
+                f"buckets {self.buckets} must cover max_batch={max_batch}")
+        self.stats = SessionStats()
+        self._single_rank = len(acc.input_shape)
+        self._max_wait = max(0.0, max_wait_ms) / 1e3
+        self._pending: deque = deque()
+        self._cv = threading.Condition()
+        self._closed = False
+
+        # hot path: one cached executor entry per bucket (validated once,
+        # lowered once per bucket). Falls back to acc(x) for segmented /
+        # strict accelerators.
+        self._entries: dict[int, Any] = {}
+        self._params = None
+        rt = acc.runtime
+        if rt is not None and not rt.strict:
+            for b in self.buckets:
+                self._entries[b], self._params = rt.executor_entry(
+                    b, acc.input_dtype)
+
+        self._mesh = mesh
+        self._x_sharding = None
+        self._n_devices = 1
+        if mesh is not None:
+            self._n_devices = int(np.prod(mesh.devices.shape))
+            if self._n_devices > 1 and self._params is None:
+                # refuse rather than silently serve unsharded: sharding
+                # needs the direct executor-entry hot path
+                raise ValueError(
+                    "mesh sharding requires the single-Program cached "
+                    "executor path — segmented/strict accelerators can't "
+                    "shard over the mesh")
+            if self._n_devices > 1 and self._params is not None:
+                spec = jax.sharding.PartitionSpec()
+                self._params = jax.device_put(
+                    self._params, jax.NamedSharding(mesh, spec))
+                self._x_sharding = jax.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec(tuple(mesh.axis_names)))
+
+        if warmup:   # pre-trace every bucket so first requests don't stall
+            for b in self.buckets:
+                z = jnp.zeros((b, *acc.input_shape), acc.input_dtype)
+                jax.block_until_ready(self._run_bucket(z))
+
+        self._thread = threading.Thread(
+            target=self._worker, daemon=True, name="hybriddnn-serving")
+        self._thread.start()
+
+    # -- client side --------------------------------------------------------
+    def submit(self, x) -> Future:
+        """Enqueue one request; returns a Future of the result (a single
+        item's logits for single-item requests, a batch for batched ones).
+
+        The request is staged host-side (numpy): no jax dispatch happens on
+        the caller's thread — the worker launches one device call per
+        coalesced bucket."""
+        x = np.asarray(x, np.dtype(self.acc.input_dtype))
+        if x.ndim == self._single_rank:
+            x, single = x[None], True
+        elif x.ndim == self._single_rank + 1:
+            single = False
+        else:
+            raise ValueError(
+                f"request rank {x.ndim} does not match input shape "
+                f"{self.acc.input_shape} (+ optional batch dim)")
+        if not 1 <= x.shape[0] <= self.max_batch:
+            raise ValueError(
+                f"request batch {x.shape[0]} must be between 1 and "
+                f"max_batch={self.max_batch}")
+        if tuple(x.shape[1:]) != self.acc.input_shape:
+            # reject here, not in the worker: a malformed item would fail
+            # the batch concatenate and poison every co-batched request
+            raise ValueError(
+                f"request item shape {tuple(x.shape[1:])} does not match "
+                f"the accelerator input shape {self.acc.input_shape}")
+        fut: Future = Future()
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("ServingSession is closed")
+            self._pending.append((x, single, fut))
+            self._cv.notify()
+        return fut
+
+    def __call__(self, x):
+        """Synchronous convenience: submit + wait."""
+        return self.submit(x).result()
+
+    def run_many(self, xs) -> list:
+        """Submit every request first (so they batch together), then gather."""
+        futs = [self.submit(x) for x in xs]
+        return [f.result() for f in futs]
+
+    def close(self):
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        self._thread.join()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # -- worker side --------------------------------------------------------
+    def _take_group(self):
+        """Collect pending requests into one device batch (<= max_batch)."""
+        with self._cv:
+            while not self._pending and not self._closed:
+                self._cv.wait()
+            if not self._pending:
+                return None, 0           # closed and drained
+            group, n = [], 0
+            deadline = time.monotonic() + self._max_wait
+            while True:
+                while (self._pending
+                       and n + self._pending[0][0].shape[0] <= self.max_batch):
+                    x, single, fut = self._pending.popleft()
+                    group.append((x, single, fut))
+                    n += x.shape[0]
+                if n >= self.max_batch or self._pending or self._closed:
+                    break                # full, head won't fit, or draining
+                timeout = deadline - time.monotonic()
+                if timeout <= 0:
+                    break                # batching window expired
+                self._cv.wait(timeout)
+            return group, n
+
+    def _run_bucket(self, x):
+        b = x.shape[0]
+        if self._x_sharding is not None and b % self._n_devices == 0:
+            x = jax.device_put(x, self._x_sharding)
+        entry = self._entries.get(b)
+        if entry is not None:
+            return entry(self._params, x)
+        return self.acc(x)
+
+    def _run_group(self, group, n):
+        # assemble and scatter in numpy: per-op jax dispatch dominates at
+        # this granularity (8 expand_dims + concat + 8 slices per batch),
+        # so the queue would otherwise run slower than the direct loop it
+        # exists to beat. Costs one host sync per device batch.
+        xs = [x for x, _, _ in group]
+        x = xs[0] if len(xs) == 1 else np.concatenate(xs, axis=0)
+        bucket = next(b for b in self.buckets if b >= n)
+        if bucket > n:
+            x = np.concatenate(
+                [x, np.zeros((bucket - n, *x.shape[1:]), x.dtype)])
+            self.stats.padded_rows += bucket - n
+        y = np.asarray(self._run_bucket(jnp.asarray(x)))
+        # count the batch BEFORE resolving futures: callers blocked on
+        # result() read stats as soon as the last future fires
+        self.stats.batches += 1
+        self.stats.requests += len(group)
+        off = 0
+        for xi, single, fut in group:
+            k = xi.shape[0]
+            try:
+                fut.set_result(y[off] if single else y[off:off + k])
+            except InvalidStateError:
+                pass    # caller cancelled mid-flight; drop only their rows
+            off += k
+
+    def _worker(self):
+        while True:
+            group, n = self._take_group()
+            if group is None:
+                return
+            try:
+                self._run_group(group, n)
+            except Exception as e:  # noqa: BLE001 — surface via the futures
+                for _, _, fut in group:
+                    try:
+                        if not fut.done():
+                            fut.set_exception(e)
+                    except InvalidStateError:
+                        pass    # cancelled in the done()/set race
+

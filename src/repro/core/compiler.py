@@ -77,6 +77,12 @@ class Program:
     _schedule_key: str | None = dataclasses.field(
         default=None, repr=False, compare=False)
 
+    def instruction_image(self) -> np.ndarray:
+        """The encoded uint32[n, 4] instruction-memory image — the on-disk /
+        on-device representation (``Accelerator.save_program`` persists it
+        and verifies a recompilation reproduces it bit-exactly)."""
+        return encode_stream(self.instructions)
+
     def schedule_key(self) -> str:
         """Content hash of the schedule — the program-cache identity.
 

@@ -27,6 +27,15 @@ from repro.core.hybrid_conv import ConvSpec, FCSpec, PoolSpec
 from repro.core.winograd import pt_for
 
 
+class DSEError(ValueError):
+    """No feasible hardware candidate (or nothing to plan).
+
+    Raised instead of silently returning ``None`` when Step (1) produces an
+    empty candidate list — e.g. a resource budget too small for even the
+    minimum PE, or a ``vmem_bytes`` below the smallest block working set.
+    """
+
+
 # ---------------------------------------------------------------------------
 # FPGA DSE (paper-faithful)
 # ---------------------------------------------------------------------------
@@ -76,7 +85,10 @@ def enumerate_fpga_candidates(t: pm.FPGATarget,
                 best = FPGACandidate(pi, po, pt, ni)
             if best:
                 cands.append(best)
-    return cands
+    # canonicalize: the candidate stream must be duplicate-free however the
+    # grow strategy evolves (today it appends at most one candidate per
+    # (PT, NI) pair, so this is a guarded invariant, not a repair)
+    return list(dict.fromkeys(cands))
 
 
 def _fpga_layer_best(t: pm.FPGATarget, cand: FPGACandidate,
@@ -96,7 +108,15 @@ def _fpga_layer_best(t: pm.FPGATarget, cand: FPGACandidate,
 
 def run_fpga_dse(t: pm.FPGATarget,
                  specs: Sequence[ConvSpec | PoolSpec | FCSpec]) -> DSEResult:
+    if not specs:
+        raise DSEError("FPGA DSE: empty layer list — nothing to plan")
     cands = enumerate_fpga_candidates(t)
+    if not cands:
+        raise DSEError(
+            f"FPGA DSE: no hardware candidate fits {t.name} "
+            f"(LUT={t.luts}, DSP={t.dsps}, BRAM18K={t.bram_18k}, "
+            f"dies={t.n_dies}) — even the minimum PE (PI=PO=1, PT=4, NI=1) "
+            f"exceeds the Eq. 3-5 resource budget")
     best_result = None
     for cand in cands:
         # NI instances process different images but SHARE the DRAM port
@@ -180,7 +200,15 @@ def _tpu_layer_best(t: pm.TPUTarget, cand: TPUCandidate, spec: ConvSpec,
 
 def run_tpu_dse(specs: Sequence[ConvSpec | PoolSpec | FCSpec], batch: int = 1,
                 t: pm.TPUTarget = pm.V5E) -> DSEResult:
+    if not specs:
+        raise DSEError("TPU DSE: empty layer list — nothing to plan")
     cands = enumerate_tpu_candidates(t)
+    if not cands:
+        raise DSEError(
+            f"TPU DSE: no (bm, bk, bn) block shape fits {t.name}'s VMEM "
+            f"budget ({t.vmem_bytes} bytes) — the smallest double-buffered "
+            f"working set (bm=bk=bn=128) needs "
+            f"{2 * 4 * 2 * (3 * 128 * 128)} bytes")
     best_result = None
     for cand in cands:
         plans, lats = [], []

@@ -52,6 +52,14 @@ class FPGATarget:
                                 # single die (cross-die routing breaks timing,
                                 # Sec. 1 — the reason VU9P runs 6 instances)
 
+    def run_dse(self, specs, batch: int = 1):
+        """Unified ``Target`` entry point (see ``repro.api``): Step 1-3 of
+        the paper's DSE for this device. ``batch`` is accepted for signature
+        parity with the TPU target — the FPGA latency model is per-image
+        (batch parallelism comes from the NI instances)."""
+        from repro.core.dse import run_fpga_dse
+        return run_fpga_dse(self, specs)
+
 
 # bw calibrated against Table 4 (the paper does not publish its DDR4/DDR3
 # bandwidths): VU9P 50e9 12-bit words/s ~= 75 GB/s (NSA.241 multi-channel
@@ -77,6 +85,13 @@ class TPUTarget:
     mxu_dim: int = 128                  # systolic edge; alignment unit
     sublane: int = 8
     vpu_flops: float = 4 * 985e9        # VPU lanes for the Winograd transforms
+
+    def run_dse(self, specs, batch: int = 1):
+        """Unified ``Target`` entry point (see ``repro.api``): enumerate GEMM
+        block candidates under this chip's VMEM budget and plan per-layer
+        (mode, dataflow, m, g_h, g_k) at the given serving batch."""
+        from repro.core.dse import run_tpu_dse
+        return run_tpu_dse(specs, batch=batch, t=self)
 
 
 V5E = TPUTarget()

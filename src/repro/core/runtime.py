@@ -111,6 +111,31 @@ class HybridRuntime:
                 self.dram[cl.wgt_addr] = w
             self.dram[cl.bias_addr] = b
 
+    def dram_params(self) -> list[tuple[Any, Any]]:
+        """The DRAM weight image ``load_params`` built — U-space for Winograd
+        CONV layers, raw for Spatial/FC; one entry per parameterized layer."""
+        if self._raw_params is None:
+            raise RuntimeError("load_params must be called first")
+        return [(self.dram[cl.wgt_addr], self.dram[cl.bias_addr])
+                for cl in self.program.layers if cl.kind != "pool"]
+
+    def executor_entry(self, batch: int, dtype):
+        """The cached jitted executor + DRAM weight image for (batch, dtype).
+
+        The serving hot path: a caller holding a fixed parameter set (e.g.
+        ``api.ServingSession``) invokes ``entry(params, x)`` directly,
+        skipping the per-request DRAM dict writes ``run`` performs. Schedule
+        validation still runs (once per schedule key, cached)."""
+        if self.strict:
+            raise RuntimeError(
+                "strict interpreter mode has no cached executor entry")
+        params = self.dram_params()
+        self.stats = self.cache.validate(self.program)
+        entry = self.cache.get(
+            self.program, batch=batch, dtype=dtype,
+            param_dtypes=tuple(jnp.dtype(w.dtype).name for w, _ in params))
+        return entry, params
+
     def write_input(self, x_nhwc):
         cl0 = self.program.layers[0]
         if cl0.inp_layout == "wino":
@@ -140,13 +165,9 @@ class HybridRuntime:
                                            hw=(cl0.spec.h, cl0.spec.w))
         # the executor consumes the DRAM weight image load_params already
         # built (U-space for wino) — no per-request weight work; POOL
-        # layers carry no params
-        params = [(self.dram[cl.wgt_addr], self.dram[cl.bias_addr])
-                  for cl in self.program.layers if cl.kind != "pool"]
-        self.stats = self.cache.validate(self.program)   # HazardError on bad streams
-        entry = self.cache.get(
-            self.program, batch=x_nhwc.shape[0], dtype=x_nhwc.dtype,
-            param_dtypes=tuple(jnp.dtype(w.dtype).name for w, _ in params))
+        # layers carry no params.  executor_entry validates the schedule
+        # (HazardError on bad streams; cached per schedule key).
+        entry, params = self.executor_entry(x_nhwc.shape[0], x_nhwc.dtype)
         y = entry(params, x_nhwc)
         self.dram[self.program.layers[-1].out_addr] = y
         return y

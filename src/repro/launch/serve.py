@@ -85,148 +85,83 @@ def serve(arch: str, *, reduced: bool = True, batch: int = 4,
     return gen_tokens
 
 
-def make_vgg_params(specs, seed: int = 0):
-    """Random [(w, b), ...] for every parameterized layer (CONV + FC)."""
-    from repro.core.hybrid_conv import ConvSpec, FCSpec
+# Back-compat aliases: both lived here before the ``repro.api`` façade
+# (PR 3); benchmarks and tests import them from this module.
+from repro.api import build_segmented_request  # noqa: E402,F401
+from repro.api import random_params as make_vgg_params  # noqa: E402,F401
 
-    rng = np.random.default_rng(seed)
-    params = []
-    for s in specs:
-        if isinstance(s, ConvSpec):
-            w = jnp.asarray(rng.standard_normal((s.r, s.s, s.c, s.k)),
-                            jnp.float32) * (s.r * s.s * s.c) ** -0.5
-            params.append((w, jnp.zeros((s.k,), jnp.float32)))
-        elif isinstance(s, FCSpec):
-            w = jnp.asarray(rng.standard_normal((s.d_in, s.d_out)),
-                            jnp.float32) * s.d_in ** -0.5
-            params.append((w, jnp.zeros((s.d_out,), jnp.float32)))
-    return params
-
-
-def build_segmented_request(specs, plans, params, *, strict: bool = False):
-    """The legacy multi-Program path: one compiled Program per CONV segment,
-    host-side 2x2 maxpool glue between segments, and the FC tail outside
-    the runtime. Kept as the ``--segmented`` compatibility path; asserted
-    numerically identical to the single-Program path in
-    ``tests/test_integration.py``. ``strict=True`` builds the per-segment
-    runtimes on the per-instruction interpreter instead of the cached
-    jitted executor (the ``--compare-interpreter`` baseline)."""
-    from repro.core.compiler import compile_network
-    from repro.core.hybrid_conv import ConvSpec, FCSpec, dense, max_pool2d
-    from repro.core.runtime import HybridRuntime
-    from repro.models import vgg
-
-    # params align with the non-pool specs, in network order
-    nonpool = [s for s in specs if not isinstance(s, vgg.PoolSpec)]
-    assert len(nonpool) == len(params)
-    conv_specs = [s for s in specs if isinstance(s, ConvSpec)]
-    conv_plans = [p for s, p in zip(specs, plans) if isinstance(s, ConvSpec)]
-    conv_params = [p for s, p in zip(nonpool, params)
-                   if isinstance(s, ConvSpec)]
-    pool_specs = [s for s in specs if isinstance(s, vgg.PoolSpec)]
-    fc_specs = [s for s in nonpool if isinstance(s, FCSpec)]
-    fc_params = [p for s, p in zip(nonpool, params) if isinstance(s, FCSpec)]
-
-    runtimes, idx, n_instr = [], 0, 0
-    for n in vgg.conv_segments():
-        program = compile_network(conv_specs[idx:idx + n],
-                                  conv_plans[idx:idx + n])
-        rt = HybridRuntime(program, strict=strict)
-        rt.load_params(conv_params[idx:idx + n])
-        runtimes.append(rt)
-        n_instr += len(program.instructions)
-        idx += n
-
-    assert len(pool_specs) == len(runtimes), \
-        "segmented path expects one maxpool after each CONV segment"
-
-    def request(x):
-        for rt, ps in zip(runtimes, pool_specs):
-            x = max_pool2d(rt.run(x), ps.window, ps.stride)
-        x = x.reshape(x.shape[0], -1)
-        for s, (w, b) in zip(fc_specs, fc_params):
-            x = dense(x, w, b, relu=s.relu)
-        return x
-
-    return request, runtimes, n_instr
+CNN_TARGETS = {"tpu": "V5E", "vu9p": "VU9P", "pynq": "PYNQ_Z1"}
 
 
 def serve_cnn(arch: str = "vgg16", *, reduced: bool = True, batch: int = 8,
               iters: int = 20, seed: int = 0, compare_interpreter: bool = False,
-              segmented: bool = False):
-    """CNN inference through the full HybridDNN pipeline.
+              segmented: bool = False, target: str = "tpu",
+              session: bool = False):
+    """CNN inference through the full HybridDNN pipeline — now a thin driver
+    over ``repro.api``.
 
-    DSE picks per-layer (mode, dataflow, m, g_h, g_k) over the WHOLE model
-    (CONV + POOL + FC latency terms); the compiler lowers all 21 layers to
-    ONE 128-bit instruction stream; the runtime validates the schedule ONCE
-    and serves every request from the cached jitted executor — steady-state
-    requests never touch the Python interpreter. ``segmented=True`` keeps
-    the legacy multi-Program path (one Program per CONV segment, host-side
-    maxpool glue, FC tail outside the runtime) for comparison.
+    ``Accelerator.build`` runs the DSE (per-layer mode/dataflow/m/g_h/g_k
+    over the WHOLE model), lowers all 21 layers to ONE 128-bit instruction
+    stream, validates the schedule ONCE, and serves every request from the
+    cached jitted executor — steady-state requests never touch the Python
+    interpreter. ``target`` picks the DSE backend through the unified
+    ``Target`` protocol (``tpu``/``vu9p``/``pynq``). ``segmented=True``
+    keeps the legacy multi-Program path for comparison, and ``session=True``
+    additionally drives requests through the batching ``ServingSession``.
     """
-    from repro.core.compiler import compile_network
-    from repro.core.dse import run_tpu_dse
+    from repro import api
+    from repro.core import perf_model as pm
     from repro.core.program_cache import default_cache
-    from repro.core.runtime import HybridRuntime
     from repro.models import vgg
 
     if arch != "vgg16":
         raise ValueError(f"CNN serving supports 'vgg16' (the paper's case "
                          f"study), got {arch!r}")
+    if target not in CNN_TARGETS:
+        raise ValueError(f"--target must be one of {sorted(CNN_TARGETS)}")
     iters = max(1, iters)
     img, scale = (64, 8) if reduced else (224, 1)
     n_classes = 10 if reduced else 1000
     specs = vgg.network_specs(img=img, scale=scale, n_classes=n_classes)
     t0 = time.monotonic()
-    dse = run_tpu_dse(specs, batch=batch)
-    t_dse = time.monotonic() - t0
-
-    params = make_vgg_params(specs, seed)
-    n_wino = sum(p.mode == "wino" for s, p in zip(specs, dse.plans)
-                 if isinstance(s, vgg.ConvSpec))
-    n_spat = sum(p.mode == "spat" for s, p in zip(specs, dse.plans)
-                 if isinstance(s, vgg.ConvSpec))
-
-    if segmented:
-        request, runtimes, n_instr = build_segmented_request(
-            specs, dse.plans, params)
-        desc = f"{len(runtimes)} segment Programs + host maxpool/FC glue"
-    else:
-        program = compile_network(specs, dse.plans)
-        rt = HybridRuntime(program)
-        rt.load_params(params)
-        request = rt.run
-        n_instr = len(program.instructions)
-        desc = "ONE Program (POOL/FC in-stream)"
-    print(f"{arch}: {len(specs)} layers as {desc}, "
-          f"{n_wino} wino / {n_spat} spat CONVs; "
-          f"DSE {t_dse * 1e3:.0f}ms over {dse.candidates_searched} candidates, "
-          f"{n_instr} instructions")
+    acc = api.Accelerator.build(specs, target=getattr(pm, CNN_TARGETS[target]),
+                                batch=batch, seed=seed, segmented=segmented)
+    t_build = time.monotonic() - t0
+    print(acc.summary())
+    print(f"build (DSE+compile+validate): {t_build * 1e3:.0f}ms")
 
     rng = np.random.default_rng(seed + 1)
     x = jnp.asarray(rng.standard_normal((batch, img, img, 3)), jnp.float32)
     t0 = time.monotonic()
-    y = jax.block_until_ready(request(x))      # validate + compile + run
+    y = jax.block_until_ready(acc(x))          # first request: jit trace
     t_first = time.monotonic() - t0
     t0 = time.monotonic()
     for _ in range(iters):                     # steady state: cache hits only
-        y = jax.block_until_ready(request(x))
+        y = jax.block_until_ready(acc(x))
     t_steady = (time.monotonic() - t0) / max(1, iters)
     macs = sum(s.macs for s in specs)
     gops = 2 * macs * batch / 1e9 / t_steady
     cache = default_cache()
-    print(f"first request (validate+jit): {t_first * 1e3:.1f}ms; "
+    print(f"first request (jit): {t_first * 1e3:.1f}ms; "
           f"steady: {t_steady * 1e3:.2f}ms/batch{batch} "
           f"({gops:.1f} GOPS); cache hits={cache.stats.hits} "
           f"misses={cache.stats.misses}")
+    if session:
+        with acc.serve(max_batch=batch, buckets=(batch,), warmup=True,
+                       mesh="host") as s:
+            n_req = batch * iters
+            # materialize requests host-side before timing, like real
+            # clients arriving with their own arrays
+            reqs = [np.asarray(x[i % batch]) for i in range(n_req)]
+            t0 = time.monotonic()
+            outs = s.run_many(reqs)
+            jax.block_until_ready(outs[-1])
+            dt = time.monotonic() - t0
+            print(f"ServingSession: {n_req} requests in {dt * 1e3:.1f}ms "
+                  f"({n_req / dt:.1f} req/s, {s.stats.batches} device "
+                  f"batches, {s.stats.padded_rows} padded rows)")
     if compare_interpreter:
-        if segmented:
-            strict_request, _, _ = build_segmented_request(
-                specs, dse.plans, params, strict=True)
-        else:
-            s_rt = HybridRuntime(program, strict=True)
-            s_rt.load_params(params)
-            strict_request = s_rt.run
+        strict_request = acc.strict_request()
         jax.block_until_ready(strict_request(x))   # warm XLA op caches
         t0 = time.monotonic()
         y_i = jax.block_until_ready(strict_request(x))
@@ -241,7 +176,10 @@ def serve_cnn(arch: str = "vgg16", *, reduced: bool = True, batch: int = 8,
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true", default=True)
+    # BooleanOptionalAction so --no-reduced actually reaches full-size mode
+    # (a bare store_true with default=True made it unreachable)
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
@@ -251,12 +189,19 @@ def main():
     ap.add_argument("--segmented", action="store_true",
                     help="legacy multi-Program CNN path (one Program per "
                          "CONV segment, host-side maxpool/FC glue)")
+    ap.add_argument("--target", default="tpu", choices=sorted(CNN_TARGETS),
+                    help="DSE backend for CNN serving (unified Target "
+                         "protocol: TPU v5e or the paper's FPGA devices)")
+    ap.add_argument("--session", action="store_true",
+                    help="also drive requests through the batching "
+                         "ServingSession (host-mesh sharded)")
     args = ap.parse_args()
     if args.arch.startswith("vgg"):
         y = serve_cnn(args.arch, reduced=args.reduced, batch=args.batch,
                       iters=args.iters,
                       compare_interpreter=args.compare_interpreter,
-                      segmented=args.segmented)
+                      segmented=args.segmented, target=args.target,
+                      session=args.session)
         print("logits:", y.shape)
         return
     toks = serve(args.arch, reduced=args.reduced, batch=args.batch,

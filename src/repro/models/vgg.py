@@ -101,11 +101,14 @@ def conv_segments() -> list[int]:
     return sizes
 
 
-def default_plans(specs: list[ConvSpec] | None = None) -> list[LayerPlan]:
-    """DSE-selected plans (TPU target)."""
-    from repro.core.dse import run_tpu_dse
+def default_plans(specs: list[ConvSpec] | None = None, *,
+                  target=None, batch: int = 1) -> list[LayerPlan]:
+    """DSE-selected plans through the unified ``Target`` protocol
+    (``repro.api``); defaults to the TPU target ``pm.V5E``."""
+    from repro.core import perf_model as pm
     specs = specs or conv_specs()
-    return run_tpu_dse(specs).plans
+    target = target if target is not None else pm.V5E
+    return target.run_dse(specs, batch=batch).plans
 
 
 def init_params(key, cfg: ModelConfig | None = None, *, img: int = 224,

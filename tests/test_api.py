@@ -1,0 +1,187 @@
+"""The ``repro.api`` façade: Accelerator.build through the unified Target
+protocol, save/load of compiled Programs, and the batching ServingSession."""
+import dataclasses
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import perf_model as pm
+from repro.core.compiler import LayerPlan, compile_network
+from repro.core.dse import DSEError, run_tpu_dse
+from repro.core.hybrid_conv import ConvSpec, FCSpec, PoolSpec
+from repro.core.runtime import HybridRuntime
+
+# small enough that every jit compile stays cheap in the fast tier
+SPECS = [ConvSpec("c1", 16, 16, 3, 8), ConvSpec("c2", 16, 16, 8, 16),
+         PoolSpec("p1", 16, 16, 16), FCSpec("fc", 8 * 8 * 16, 10, relu=False)]
+
+
+def _x(batch=2, seed=1):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(
+        (batch, 16, 16, 3)), jnp.float32)
+
+
+def test_targets_satisfy_protocol():
+    assert isinstance(pm.V5E, api.Target)
+    assert isinstance(pm.VU9P, api.Target)
+    assert isinstance(pm.PYNQ_Z1, api.Target)
+    with pytest.raises(TypeError, match="Target"):
+        api.Accelerator.build(SPECS, target="not-a-target")
+
+
+def test_build_matches_manual_pipeline():
+    """The façade is glue, not new math: bitwise-equal to hand-stitching
+    run_tpu_dse -> compile_network -> HybridRuntime (the pre-API flow)."""
+    x = _x()
+    acc = api.Accelerator.build(SPECS, target=pm.V5E, batch=2, seed=0)
+    dse = run_tpu_dse(SPECS, batch=2)
+    program = compile_network(SPECS, dse.plans)
+    rt = HybridRuntime(program)
+    rt.load_params(api.random_params(SPECS, seed=0))
+    np.testing.assert_array_equal(np.asarray(acc(x)), np.asarray(rt.run(x)))
+    assert acc.n_instructions == len(program.instructions)
+
+
+def test_fpga_target_through_unified_protocol():
+    """An FPGATarget instance drives the same build path; its planned
+    Program executes bitwise-identically on the strict interpreter, and
+    matches the TPU-planned network function numerically."""
+    x = _x()
+    acc_t = api.Accelerator.build(SPECS, target=pm.V5E, batch=2, seed=0)
+    acc_f = api.Accelerator.build(SPECS, target=pm.PYNQ_Z1, batch=2, seed=0)
+    y_t, y_f = np.asarray(acc_t(x)), np.asarray(acc_f(x))
+    # same network, possibly different per-layer modes -> float tolerance
+    np.testing.assert_allclose(y_f, y_t, atol=5e-3, rtol=1e-3)
+    # executor vs per-instruction interpreter on the FPGA-planned Program
+    np.testing.assert_array_equal(y_f, np.asarray(acc_f.strict_request()(x)))
+
+
+def test_plans_override_skips_dse():
+    plans = [LayerPlan("wino", "is", m=2), LayerPlan("spat", "ws"),
+             None, None]
+    acc = api.Accelerator.build(SPECS, plans=plans, seed=0)
+    assert acc.dse is None
+    assert acc(_x()).shape == (2, 10)
+    assert "plans supplied" in acc.summary()
+
+
+def test_summary_layer_table():
+    acc = api.Accelerator.build(SPECS, target=pm.V5E, batch=2)
+    s = acc.summary()
+    for token in ("c1", "c2", "p1", "fc", "pool", "conv", "est. total",
+                  "candidates", "ONE Program"):
+        assert token in s, f"summary missing {token!r}:\n{s}"
+
+
+def test_save_program_roundtrip(tmp_path):
+    x = _x()
+    acc = api.Accelerator.build(SPECS, target=pm.V5E, batch=2, seed=0)
+    path = acc.save_program(str(tmp_path / "prog.json"))
+    acc2 = api.Accelerator.from_program(path, params=acc.params)
+    np.testing.assert_array_equal(np.asarray(acc(x)), np.asarray(acc2(x)))
+    # the DSE verdict travels with the program (summary still works)
+    assert acc2.dse is not None
+    assert acc2.dse.candidates_searched == acc.dse.candidates_searched
+    assert dataclasses.asdict(acc2.dse.hw) == dataclasses.asdict(acc.dse.hw)
+    assert "est. total" in acc2.summary()
+    # the target name survives the roundtrip (and a re-save)
+    assert "Accelerator[v5e]" in acc2.summary()
+    path2 = acc2.save_program(str(tmp_path / "prog2.json"))
+    assert json.load(open(path2))["target"] == "v5e"
+
+
+def test_from_program_rejects_drifted_stream(tmp_path):
+    acc = api.Accelerator.build(SPECS, target=pm.V5E, batch=2)
+    path = acc.save_program(str(tmp_path / "prog.json"))
+    with open(path) as f:
+        doc = json.load(f)
+    # omitting params is an error (saved programs carry no weights)
+    with pytest.raises(ValueError, match="carry no weights"):
+        api.Accelerator.from_program(path)
+    doc["instructions"][0][2] ^= 1          # flip a DRAM_BASE bit
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    with pytest.raises(ValueError, match="does not match"):
+        api.Accelerator.from_program(path, params=acc.params)
+    doc["format"] = "something-else"
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    with pytest.raises(ValueError, match="format"):
+        api.Accelerator.from_program(path, params=acc.params)
+
+
+def test_serving_session_batches_and_preserves_order():
+    acc = api.Accelerator.build(SPECS, plans=[LayerPlan("spat", "is"),
+                                              LayerPlan("spat", "is"),
+                                              None, None], seed=0)
+    x = _x(batch=6, seed=3)
+    y_ref = np.asarray(acc(x))
+    with acc.serve(max_batch=4, warmup=True) as s:
+        # a full-bucket request runs through the SAME cached executor entry
+        # as the direct call -> bitwise
+        np.testing.assert_array_equal(np.asarray(s(x[:4])),
+                                      np.asarray(acc(x[:4])))
+        # mixed single-item and batched requests, submitted together; the
+        # coalesced device batches may differ in shape from the reference
+        # batch-6 call, so rows agree to float tolerance, in order
+        futs = [s.submit(x[0]), s.submit(x[1:4]), s.submit(x[4]),
+                s.submit(x[5])]
+        outs = [np.asarray(f.result()) for f in futs]
+    np.testing.assert_allclose(outs[0], y_ref[0], atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(outs[1], y_ref[1:4], atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(outs[2], y_ref[4], atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(outs[3], y_ref[5], atol=1e-5, rtol=1e-5)
+    assert s.stats.requests == 5
+    # 6 items over max_batch=4 -> at least two coalesced device batches
+    assert s.stats.batches >= 3
+
+
+def test_serving_session_rejects_oversized_and_closed():
+    acc = api.Accelerator.build(SPECS, plans=[LayerPlan("spat", "is"),
+                                              LayerPlan("spat", "is"),
+                                              None, None], seed=0)
+    s = acc.serve(max_batch=2)
+    with pytest.raises(ValueError, match="max_batch"):
+        s.submit(_x(batch=3))
+    with pytest.raises(ValueError, match="max_batch"):
+        s.submit(np.empty((0, 16, 16, 3), np.float32))   # empty request
+    with pytest.raises(ValueError, match="rank"):
+        s.submit(np.zeros((16, 16)))        # neither item nor batch rank
+    with pytest.raises(ValueError, match="input shape"):
+        s.submit(np.zeros((17, 16, 3)))     # right rank, wrong item shape
+    s.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        s.submit(_x(batch=1))
+
+
+def test_segmented_rejects_non_vgg_chains():
+    """segmented=True requires the (CONV+ POOL)+ FC* layout its host-side
+    maxpool glue assumes; anything else gets a descriptive error."""
+    plans = [LayerPlan("spat", "is")] * 2 + [None, None]
+    with pytest.raises(ValueError, match="trailing CONV"):
+        api.Accelerator.build(
+            [ConvSpec("c1", 16, 16, 3, 8), PoolSpec("p", 16, 16, 8),
+             ConvSpec("c2", 8, 8, 8, 8), FCSpec("fc", 8 * 8 * 8, 4)],
+            plans=plans, segmented=True)
+    with pytest.raises(ValueError, match="without a preceding CONV"):
+        api.Accelerator.build(
+            [PoolSpec("p", 16, 16, 3), ConvSpec("c1", 8, 8, 3, 8),
+             PoolSpec("p2", 8, 8, 8), FCSpec("fc", 4 * 4 * 8, 4)],
+            plans=plans, segmented=True)
+
+
+def test_dse_error_when_nothing_fits():
+    tiny_tpu = dataclasses.replace(pm.V5E, vmem_bytes=1024)
+    with pytest.raises(DSEError, match="VMEM"):
+        tiny_tpu.run_dse(SPECS, batch=1)
+    tiny_fpga = dataclasses.replace(pm.PYNQ_Z1, name="tiny", luts=100,
+                                    dsps=4, bram_18k=2)
+    with pytest.raises(DSEError, match="no hardware candidate"):
+        tiny_fpga.run_dse(SPECS)
+    with pytest.raises(DSEError, match="empty layer list"):
+        pm.V5E.run_dse([], batch=1)
+    with pytest.raises(DSEError, match="empty layer list"):
+        pm.VU9P.run_dse([])

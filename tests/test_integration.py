@@ -45,15 +45,15 @@ def test_vgg_runtime_training_signal():
 
 
 def test_vgg_single_program_matches_segmented():
-    """The full reduced VGG16 (13 CONV + 5 POOL + 3 FC) compiled as ONE
-    Program produces the same logits as the legacy multi-Program path
-    (per-segment Programs + host-side maxpool glue + FC tail outside the
+    """The full reduced VGG16 (13 CONV + 5 POOL + 3 FC) built through the
+    ``repro.api`` façade as ONE Program produces the same logits as the
+    legacy multi-Program path (``Accelerator.build(..., segmented=True)``:
+    per-segment Programs + host-side maxpool glue + FC tail outside the
     runtime) — and the one-Program strict interpreter matches the cached
     jitted executor bitwise."""
-    from repro.core.compiler import LayerPlan, compile_network
+    from repro import api
+    from repro.core.compiler import LayerPlan
     from repro.core.hybrid_conv import ConvSpec
-    from repro.core.runtime import HybridRuntime
-    from repro.launch.serve import build_segmented_request, make_vgg_params
     from repro.models import vgg
 
     img, scale = 32, 16
@@ -69,25 +69,22 @@ def test_vgg_single_program_matches_segmented():
             ci += 1
         else:
             plans.append(None)
-    params = make_vgg_params(specs, seed=0)
+    acc = api.Accelerator.build(specs, plans=plans, seed=0, batch=2)
     x = jnp.asarray(np.random.default_rng(1).standard_normal(
         (2, img, img, 3)), jnp.float32)
 
-    program = compile_network(specs, plans)
-    rt = HybridRuntime(program)
-    rt.load_params(params)
-    y_single = rt.run(x)
+    y_single = acc(x)
     assert y_single.shape == (2, 10)
 
     # acceptance: strict interpreter == cached jitted executor, bitwise
-    rt_strict = HybridRuntime(program, strict=True)
-    rt_strict.load_params(params)
-    y_strict = rt_strict.run(x)
+    y_strict = acc.strict_request()(x)
     np.testing.assert_array_equal(np.asarray(y_single), np.asarray(y_strict))
 
-    # compatibility: segmented path numerically identical
-    request, _, _ = build_segmented_request(specs, plans, params)
-    y_seg = request(x)
+    # compatibility: segmented path numerically identical (the old
+    # build_segmented_request glue, now behind the façade)
+    acc_seg = api.Accelerator.build(specs, plans=plans, params=acc.params,
+                                    batch=2, segmented=True)
+    y_seg = acc_seg(x)
     np.testing.assert_array_equal(np.asarray(y_single), np.asarray(y_seg))
 
 
@@ -100,6 +97,24 @@ def test_serve_cnn_segmented_flag_matches_default():
     y2 = serve_cnn("vgg16", reduced=True, batch=2, iters=1, seed=3,
                    segmented=True)
     np.testing.assert_array_equal(y1, y2)
+
+
+@pytest.mark.slow
+def test_serve_cnn_matches_direct_accelerator_build():
+    """The serve entrypoint is a thin driver over the façade: a direct
+    ``Accelerator.build(...)(x)`` with the same seed/batch reproduces
+    serve_cnn's logits bitwise."""
+    from repro import api
+    from repro.core import perf_model as pm
+    from repro.launch.serve import serve_cnn
+    from repro.models import vgg
+
+    y = serve_cnn("vgg16", reduced=True, batch=2, iters=1, seed=5)
+    specs = vgg.network_specs(img=64, scale=8, n_classes=10)
+    acc = api.Accelerator.build(specs, target=pm.V5E, batch=2, seed=5)
+    x = jnp.asarray(np.random.default_rng(6).standard_normal(
+        (2, 64, 64, 3)), jnp.float32)
+    np.testing.assert_array_equal(y, np.asarray(acc(x)))
 
 
 @pytest.mark.slow
