@@ -7,10 +7,10 @@
   forcing all-Spatial plans through the same model.
 * TPU analog: the hardware-adapted model's GOPS for the v5e target.
 * runtime rows: interpreter vs cached-jitted executor, the full-network
-  single-Program path vs the legacy segmented path, and the batching
-  ``ServingSession`` queue vs direct ``rt.run`` loops (the runtime +
-  serving rows are written to a ``BENCH_table4_vgg16.json`` artifact for
-  CI).
+  single-Program path vs the legacy segmented path, the batching
+  ``ServingSession`` queue vs direct ``rt.run`` loops, and the Pallas PE
+  backend vs the XLA lowering (the runtime + serving rows are written to
+  a ``BENCH_table4_vgg16.json`` artifact for CI).
 """
 from __future__ import annotations
 
@@ -73,6 +73,7 @@ def run() -> list[dict]:
     runtime_rows = run_runtime_comparison()
     runtime_rows += run_single_vs_segmented()
     runtime_rows += run_serving_queue()
+    runtime_rows += run_pallas_vs_xla()
     _write_artifact(runtime_rows)
     return rows + runtime_rows
 
@@ -208,6 +209,55 @@ def run_single_vs_segmented(*, img: int = 32, scale: int = 16, batch: int = 2,
         "segmented_ms": round(t_seg * 1e3, 2),
         "speedup": round(t_seg / t_single, 2),
         "max_abs_diff": float(jnp.max(jnp.abs(y_single - y_seg))),
+    }]
+
+
+def run_pallas_vs_xla(*, img: int = 32, scale: int = 16, batch: int = 2,
+                      iters: int = 5) -> list[dict]:
+    """PE-backend comparison on the cached jitted executor: the same reduced
+    VGG16 Program lowered through the XLA ops vs the Pallas PE kernels
+    (``Accelerator.build(..., backend="pallas")``), with max |diff|.
+
+    On CPU/CI the Pallas path runs in interpret mode, so ``pallas_ms`` there
+    measures the fallback, not kernel performance — the row's job off-TPU is
+    the numerical-parity evidence and keeping the path exercised; on real
+    TPU it becomes the kernel-vs-XLA speed row. ``backend_mode`` records
+    which of the two was measured.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import api
+
+    specs = network_specs(img=img, scale=scale, n_classes=10)
+    plans = _alternating_plans(specs)
+    acc_xla = api.Accelerator.build(specs, plans=plans, seed=0, batch=batch)
+    acc_pal = api.Accelerator.build(specs, plans=plans, params=acc_xla.params,
+                                    batch=batch, backend="pallas")
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (batch, img, img, 3)), jnp.float32)
+
+    y_xla = jax.block_until_ready(acc_xla(x))       # trace + compile both
+    y_pal = jax.block_until_ready(acc_pal(x))
+    t0 = time.monotonic()
+    for _ in range(iters):
+        y_xla = jax.block_until_ready(acc_xla(x))
+    t_xla = (time.monotonic() - t0) / iters
+    t0 = time.monotonic()
+    for _ in range(iters):
+        y_pal = jax.block_until_ready(acc_pal(x))
+    t_pal = (time.monotonic() - t0) / iters
+
+    on_tpu = jax.default_backend() == "tpu"
+    return [{
+        "bench": "table4_vgg16", "name": "runtime/pallas_vs_xla",
+        "config": f"img{img}_scale{scale}_batch{batch}",
+        "backend_mode": "tpu" if on_tpu else "cpu_interpret",
+        "xla_ms": round(t_xla * 1e3, 2),
+        "pallas_ms": round(t_pal * 1e3, 2),
+        "pallas_over_xla": round(t_pal / t_xla, 2),
+        "max_abs_diff": float(jnp.max(jnp.abs(y_xla - y_pal))),
     }]
 
 

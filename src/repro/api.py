@@ -28,6 +28,12 @@ analog on the host mesh: a padding-bucketed request-batching queue that
 coalesces single-image requests into device batches, pads them up to a fixed
 set of bucket sizes (so the jit cache holds one executor per bucket), and
 optionally shards the batch axis over every local device.
+
+``backend="xla" | "pallas"`` (on ``build``, ``from_program``, and inherited
+by sessions) selects the PE implementation every CONV/FC block lowers
+through — the XLA ops (GSPMD-shardable, the default) or the Pallas PE
+kernels (interpret-mode fallback off-TPU). See ``docs/ARCHITECTURE.md`` for
+the plug-in table and ``docs/API.md`` for the full reference.
 """
 from __future__ import annotations
 
@@ -115,7 +121,8 @@ def _conv_segments_of(specs) -> list[int]:
 
 
 def build_segmented_request(specs, plans, params, *, strict: bool = False,
-                            cache=None):
+                            cache=None, backend: str = "xla",
+                            interpret: bool | None = None):
     """The legacy multi-Program path: one compiled Program per CONV segment,
     host-side 2x2 maxpool glue between segments, and the FC tail outside
     the runtime. Kept as ``Accelerator.build(..., segmented=True)``;
@@ -123,8 +130,12 @@ def build_segmented_request(specs, plans, params, *, strict: bool = False,
     ``tests/test_integration.py``. ``strict=True`` builds the per-segment
     runtimes on the per-instruction interpreter instead of the cached
     jitted executor; ``cache`` overrides the process-global program cache
-    for every segment runtime."""
+    for every segment runtime; ``backend``/``interpret`` select the PE
+    implementation for the segment runtimes AND the host-side FC tail."""
+    from repro.core.executor import resolve_backend
     from repro.core.hybrid_conv import dense, max_pool2d
+
+    resolve_backend(backend, interpret)   # reject bad combos before building
 
     # params align with the non-pool specs, in network order
     nonpool = [s for s in specs if not isinstance(s, PoolSpec)]
@@ -141,7 +152,8 @@ def build_segmented_request(specs, plans, params, *, strict: bool = False,
     for n in _conv_segments_of(specs):
         program = compile_network(conv_specs[idx:idx + n],
                                   conv_plans[idx:idx + n])
-        rt = HybridRuntime(program, strict=strict, cache=cache)
+        rt = HybridRuntime(program, strict=strict, cache=cache,
+                           backend=backend, interpret=interpret)
         rt.load_params(conv_params[idx:idx + n])
         runtimes.append(rt)
         n_instr += len(program.instructions)
@@ -155,7 +167,8 @@ def build_segmented_request(specs, plans, params, *, strict: bool = False,
             x = max_pool2d(rt.run(x), ps.window, ps.stride)
         x = x.reshape(x.shape[0], -1)
         for s, (w, b) in zip(fc_specs, fc_params):
-            x = dense(x, w, b, relu=s.relu)
+            x = dense(x, w, b, relu=s.relu,
+                      use_pallas=backend == "pallas", interpret=interpret)
         return x
 
     return request, runtimes, n_instr
@@ -214,14 +227,24 @@ class Accelerator:
     validated, jitted executor behind ``__call__``.
 
     Construct with :meth:`build` (the full flow) or :meth:`from_program`
-    (reuse a saved instruction stream, skipping the DSE).
+    (reuse a saved instruction stream, skipping the DSE). ``backend``
+    selects the PE implementation the executor lowers each CONV/FC block
+    through — ``"xla"`` (default) or ``"pallas"`` (the Pallas TPU kernels,
+    interpret-mode on CPU unless overridden) — see ``docs/ARCHITECTURE.md``.
+
+    Instances are callable: ``acc(x)`` runs one inference request through
+    the cached executor. :meth:`summary` prints the per-layer DSE verdict,
+    :meth:`save_program` / :meth:`from_program` persist/restore the
+    compiled stream, and :meth:`serve` opens a batching
+    :class:`ServingSession`.
     """
 
     def __init__(self, *, specs, plans, params, request, target=None,
                  batch: int = 1, program: Program | None = None,
                  runtime: HybridRuntime | None = None,
                  dse: DSEResult | None = None, segmented: bool = False,
-                 segment_runtimes: list | None = None):
+                 segment_runtimes: list | None = None,
+                 backend: str = "xla", interpret: bool | None = None):
         self.specs = list(specs)
         self.plans = list(plans)
         self.params = params
@@ -232,6 +255,8 @@ class Accelerator:
         self.dse = dse
         self.segmented = segmented
         self.segment_runtimes = segment_runtimes
+        self.backend = backend
+        self.interpret = interpret
         self._request = request
 
     # -- construction -------------------------------------------------------
@@ -240,7 +265,8 @@ class Accelerator:
               params: list | None = None, seed: int = 0,
               plans: Sequence[LayerPlan | None] | None = None,
               segmented: bool = False, strict: bool = False,
-              cache=None) -> "Accelerator":
+              cache=None, backend: str = "xla",
+              interpret: bool | None = None) -> "Accelerator":
         """DSE -> compile -> validate, in one call.
 
         ``target`` is any :class:`Target` (``pm.V5E``, ``pm.VU9P``,
@@ -250,6 +276,12 @@ class Accelerator:
         builds the legacy multi-Program path instead (one Program per CONV
         segment, host-side glue); ``strict=True`` runs the per-instruction
         interpreter instead of the cached executor.
+
+        ``backend="pallas"`` routes every CONV/FC block through the Pallas
+        PE kernels instead of the XLA ops; ``interpret`` overrides the
+        Pallas interpret-mode auto-selection (``None`` = interpret mode
+        everywhere but real TPU). The backend joins the program-cache key,
+        so the same Program serves both backends side by side.
         """
         specs = list(specs)
         dse = None
@@ -268,19 +300,22 @@ class Accelerator:
 
         if segmented:
             request, seg_rts, _ = build_segmented_request(
-                specs, plans, params, strict=strict, cache=cache)
+                specs, plans, params, strict=strict, cache=cache,
+                backend=backend, interpret=interpret)
             return cls(specs=specs, plans=plans, params=params,
                        request=request, target=target, batch=batch, dse=dse,
-                       segmented=True, segment_runtimes=seg_rts)
+                       segmented=True, segment_runtimes=seg_rts,
+                       backend=backend, interpret=interpret)
 
         program = compile_network(specs, plans)
-        rt = HybridRuntime(program, strict=strict, cache=cache)
+        rt = HybridRuntime(program, strict=strict, cache=cache,
+                           backend=backend, interpret=interpret)
         rt.load_params(params)
         if not strict:
             rt.cache.validate(program)   # schedule check once, at build time
         return cls(specs=specs, plans=plans, params=params, request=rt.run,
                    target=target, batch=batch, program=program, runtime=rt,
-                   dse=dse)
+                   dse=dse, backend=backend, interpret=interpret)
 
     # -- inference ----------------------------------------------------------
     def __call__(self, x):
@@ -311,7 +346,9 @@ class Accelerator:
 
     def strict_request(self):
         """A per-instruction-interpreter request fn over the same Program(s)
-        and params — the hazard-faithful baseline for comparisons."""
+        and params — the hazard-faithful baseline for comparisons. Always
+        runs the XLA PE, regardless of this accelerator's ``backend``, so
+        it can serve as the numerical oracle for the Pallas path too."""
         if self.segmented:
             return build_segmented_request(
                 self.specs, self.plans, self.params, strict=True)[0]
@@ -401,7 +438,8 @@ class Accelerator:
 
     @classmethod
     def from_program(cls, path: str, *, params: list | None = None,
-                     strict: bool = False, cache=None) -> "Accelerator":
+                     strict: bool = False, cache=None, backend: str = "xla",
+                     interpret: bool | None = None) -> "Accelerator":
         """Rebuild an accelerator from :meth:`save_program` output — no DSE.
 
         The layer chain is recompiled from the saved specs/plans and the
@@ -412,7 +450,9 @@ class Accelerator:
         ``params`` is required: saved programs carry no weights, and
         silently substituting random ones would make a reloaded deployment
         serve garbage — pass ``api.random_params(specs, seed)`` explicitly
-        if stand-in weights are what you want.
+        if stand-in weights are what you want. ``backend``/``interpret``
+        select the PE implementation exactly as in :meth:`build` — the
+        saved stream is backend-agnostic, so one artifact deploys to both.
         """
         if params is None:
             raise ValueError(
@@ -439,13 +479,15 @@ class Accelerator:
                             layer_latencies=d["layer_latencies"],
                             total_latency=d["total_latency"],
                             candidates_searched=d["candidates_searched"])
-        rt = HybridRuntime(program, strict=strict, cache=cache)
+        rt = HybridRuntime(program, strict=strict, cache=cache,
+                           backend=backend, interpret=interpret)
         rt.load_params(params)
         if not strict:
             rt.cache.validate(program)
         return cls(specs=specs, plans=plans, params=params, request=rt.run,
                    target=doc.get("target"), batch=doc.get("batch", 1),
-                   program=program, runtime=rt, dse=dse)
+                   program=program, runtime=rt, dse=dse,
+                   backend=backend, interpret=interpret)
 
     # -- serving ------------------------------------------------------------
     def serve(self, **kwargs) -> "ServingSession":
@@ -479,6 +521,12 @@ class ServingSession:
     executor per bucket instead of one per observed batch size), runs the
     accelerator's cached executor directly (no per-request DRAM dict work),
     and scatters the rows back to the futures in submission order.
+
+    The session inherits the accelerator's PE ``backend``: per-bucket
+    executors are fetched through ``HybridRuntime.executor_entry``, which
+    keys the program cache on ``(schedule, bucket, dtype, backend,
+    interpret)`` — an ``Accelerator.build(..., backend="pallas")`` session
+    serves every request through the Pallas PE kernels.
 
     ``mesh``: a ``jax.sharding.Mesh`` — device batches whose bucket size
     is a multiple of the device count are sharded along the batch axis over
@@ -535,6 +583,14 @@ class ServingSession:
                     "mesh sharding requires the single-Program cached "
                     "executor path — segmented/strict accelerators can't "
                     "shard over the mesh")
+            if self._n_devices > 1 and acc.backend == "pallas":
+                # GSPMD cannot partition an opaque Pallas custom call —
+                # sharded serving needs the XLA lowering (wrapping the
+                # kernels in shard_map is the real-TPU follow-up, see
+                # parallel/sharding.py)
+                raise ValueError(
+                    "mesh sharding requires backend='xla': the Pallas PE "
+                    "kernels are not GSPMD-partitionable")
             if self._n_devices > 1 and self._params is not None:
                 spec = jax.sharding.PartitionSpec()
                 self._params = jax.device_put(

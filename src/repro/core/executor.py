@@ -34,6 +34,23 @@ Numerical contract: for a stream that passes validation, the lowered
 function computes block-for-block the same math as the interpreter (same
 halo slicing, same horizontal padding, same U-space weight pre-transform,
 same dtype casts), so outputs agree to float-associativity tolerance.
+
+Backends: lowering emits each block's compute through one of two PE
+implementations, selected by ``backend=``:
+
+* ``"xla"`` (default) — plain ``lax``/``jnp`` ops. GSPMD-partitionable, so
+  the lowered function can live inside a pjit-sharded model.
+* ``"pallas"`` — the Pallas PE kernels (``kernels/spatial_conv`` for
+  Spatial CONV, ``kernels/winograd`` + ``kernels/gemm`` for Winograd CONV,
+  ``kernels/gemm`` for FC). ``interpret=None`` auto-selects interpret mode
+  off-TPU (``kernels.common.INTERPRET``) so the same Program runs on the
+  CPU test container; pass ``interpret=False`` to force compiled lowering.
+
+Both backends lower the identical blocked schedule — only the per-block PE
+changes — and are asserted equal (to tolerance) over full reduced VGG16 in
+``tests/test_backend_pallas.py``. POOL blocks always lower through
+``lax.reduce_window``: pooling is comparisons, not PE MACs, in the paper's
+architecture (Sec. 4.2). See ``docs/ARCHITECTURE.md``.
 """
 from __future__ import annotations
 
@@ -57,6 +74,36 @@ class HazardError(RuntimeError):
     re-exports this class so existing ``except HazardError`` sites keep
     working).
     """
+
+
+BACKENDS = ("xla", "pallas")
+
+
+def resolve_backend(backend: str, interpret: bool | None
+                    ) -> tuple[str, bool | None]:
+    """Normalize a ``(backend, interpret)`` pair to its effective value.
+
+    ``interpret`` only means something on the Pallas backend; ``None`` there
+    resolves to ``kernels.common.INTERPRET`` (interpret mode everywhere but
+    real TPU). Passing a non-None ``interpret`` with ``backend="xla"`` is a
+    contradiction — the XLA lowering would silently ignore it and the
+    caller would believe the Pallas interpret path was exercised — so it
+    raises instead. The resolved pair is what joins the program-cache key,
+    so an auto-selected fallback and an explicit one share a cache entry.
+    """
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {backend!r}: expected one of {BACKENDS}")
+    if backend == "xla":
+        if interpret is not None:
+            raise ValueError(
+                f"interpret={interpret!r} has no effect with backend='xla' "
+                f"— pass backend='pallas' or drop interpret")
+        return "xla", None
+    if interpret is None:
+        from repro.kernels.common import INTERPRET
+        return "pallas", INTERPRET
+    return "pallas", bool(interpret)
 
 
 def _fresh_stats() -> dict[str, int]:
@@ -225,8 +272,44 @@ def width_pad(cl: CompiledLayer) -> tuple[int, int]:
     return (0, 0)
 
 
+def conv_block_forward(cl: CompiledLayer, x_slab: jax.Array,
+                       w_grp: jax.Array, b_grp: jax.Array, relu: bool,
+                       *, backend: str = "xla",
+                       interpret: bool | None = None) -> jax.Array:
+    """One COMP block on the selected PE backend.
+
+    ``x_slab`` is the row-group slice (halo included, vertical padding
+    materialized); ``w_grp`` the k-group slice of the DRAM weight image
+    (U-space for Winograd). Shared by the lowered executor and the strict
+    interpreter's COMP handler so the two paths route through one PE
+    implementation per backend.
+    """
+    spec, plan = cl.spec, cl.plan
+    dtype = x_slab.dtype
+    wpad = width_pad(cl)
+    if plan.mode == "wino":
+        x_p = jnp.pad(x_slab, ((0, 0), (0, 0), wpad, (0, 0)))
+        if backend == "pallas":
+            from repro.kernels.winograd import (
+                winograd_apply_pretransformed_pallas,
+            )
+            return winograd_apply_pretransformed_pallas(
+                x_p, w_grp, b_grp, m=plan.m, relu=relu, padding="VALID",
+                dataflow=plan.dataflow, out_dtype=dtype, interpret=interpret)
+        return winograd_apply_pretransformed(
+            x_p, w_grp, b_grp, plan.m, relu=relu,
+            padding="VALID", out_dtype=dtype)
+    return hybrid_conv2d(
+        x_slab, w_grp, b_grp, mode="spat",
+        dataflow=plan.dataflow, stride=spec.stride,
+        relu=relu, padding=((0, 0), wpad),
+        use_pallas=backend == "pallas", interpret=interpret,
+        out_dtype=dtype)
+
+
 def _layer_forward(cl: CompiledLayer, w_eff: jax.Array, bias: jax.Array,
-                   x_stored: jax.Array, relu_of) -> jax.Array:
+                   x_stored: jax.Array, relu_of, *, backend: str = "xla",
+                   interpret: bool | None = None) -> jax.Array:
     """One layer as blocked compute over the compiled (row, k) groups.
 
     ``w_eff`` is the DRAM-resident weight image: U-space ``(PT, PT, C, K)``
@@ -235,30 +318,18 @@ def _layer_forward(cl: CompiledLayer, w_eff: jax.Array, bias: jax.Array,
     instruction's RELU bit for that block (the stream is authoritative, not
     the spec — the interpreter obeys ``ins.relu_flag`` and so must we).
     """
-    spec, plan = cl.spec, cl.plan
+    spec = cl.spec
     x = layouts.load_view(x_stored, cl.inp_layout, hw=(spec.h, spec.w))
     dtype = x_stored.dtype
-    wpad = width_pad(cl)
 
     row_slabs = []
     for ih, (r0, r1) in enumerate(cl.row_groups):
         x_slab = slice_input_rows(cl, x, ih)
         k_blocks = []
         for kg, (lo, hi) in enumerate(cl.k_groups):
-            w_grp = w_eff[..., lo:hi]
-            b_grp = bias[lo:hi]
-            relu = relu_of(ih, kg)
-            if plan.mode == "wino":
-                x_p = jnp.pad(x_slab, ((0, 0), (0, 0), wpad, (0, 0)))
-                blk = winograd_apply_pretransformed(
-                    x_p, w_grp, b_grp, plan.m, relu=relu,
-                    padding="VALID", out_dtype=dtype)
-            else:
-                blk = hybrid_conv2d(
-                    x_slab, w_grp, b_grp, mode="spat",
-                    dataflow=plan.dataflow, stride=spec.stride,
-                    relu=relu, padding=[(0, 0), wpad],
-                    use_pallas=False, out_dtype=dtype)
+            blk = conv_block_forward(
+                cl, x_slab, w_eff[..., lo:hi], bias[lo:hi], relu_of(ih, kg),
+                backend=backend, interpret=interpret)
             k_blocks.append(blk[:, :r1 - r0].astype(dtype))
         row_slabs.append(k_blocks[0] if len(k_blocks) == 1
                          else jnp.concatenate(k_blocks, axis=-1))
@@ -282,17 +353,20 @@ def pool_forward(cl: CompiledLayer, x_stored: jax.Array,
 
 
 def fc_forward(cl: CompiledLayer, w: jax.Array, bias: jax.Array,
-               x_stored: jax.Array, relu: bool) -> jax.Array:
+               x_stored: jax.Array, relu: bool, *, backend: str = "xla",
+               interpret: bool | None = None) -> jax.Array:
     """One FC layer: identity LOAD view, flatten, run the dense PE.
 
     ``load_view`` honors ``inp_layout`` so a hand-built stream whose
     previous layer stored tile-major WINO still flattens in NHWC order
     (compiler-emitted programs always store SPAT before FC). Shared by the
-    interpreter and the lowered executor.
+    interpreter and the lowered executor; ``backend="pallas"`` routes the
+    matmul through the shared ``kernels/gemm`` PE.
     """
     x = layouts.load_view(x_stored, cl.inp_layout)
     x = x.reshape(x.shape[0], -1)
-    return dense(x, w, bias, relu=relu, use_pallas=False)
+    return dense(x, w, bias, relu=relu, use_pallas=backend == "pallas",
+                 interpret=interpret)
 
 
 def n_param_layers(program: Program) -> int:
@@ -332,7 +406,9 @@ def to_dram_params(program: Program, params: list) -> list:
     return out
 
 
-def lower_program(program: Program) -> Callable[[list, jax.Array], jax.Array]:
+def lower_program(program: Program, *, backend: str = "xla",
+                  interpret: bool | None = None
+                  ) -> Callable[[list, jax.Array], jax.Array]:
     """Lower a validated schedule to ``execute(params, x_nhwc) -> y_nhwc``.
 
     ``params`` is the per-layer **DRAM weight image** — pre-transformed to
@@ -340,7 +416,12 @@ def lower_program(program: Program) -> Callable[[list, jax.Array], jax.Array]:
     transform out of the traced function means steady-state calls never
     redo weight work: jit treats params as arguments, so anything computed
     from them inside the trace would re-execute every call.
+
+    ``backend`` selects the per-block PE ("xla" or "pallas", see the module
+    docstring); ``interpret`` is the Pallas interpret-mode override
+    (``None`` = auto off-TPU).
     """
+    backend, interpret = resolve_backend(backend, interpret)
     for cl in program.layers:
         if cl.kind == "conv" and cl.plan.mode == "wino":
             assert cl.spec.r == 3 and cl.spec.s == 3, \
@@ -380,12 +461,14 @@ def lower_program(program: Program) -> Callable[[list, jax.Array], jax.Array]:
             if cl.kind == "fc":
                 x = fc_forward(cl, w_eff, b, x,
                                relu_bits.get((cl.layer_id, 0, 0),
-                                             cl.spec.relu))
+                                             cl.spec.relu),
+                               backend=backend, interpret=interpret)
             else:
                 x = _layer_forward(
                     cl, w_eff, b, x,
                     lambda ih, kg, cl=cl: relu_bits.get((cl.layer_id, ih, kg),
-                                                        cl.spec.relu))
+                                                        cl.spec.relu),
+                    backend=backend, interpret=interpret)
         return x
 
     return execute
@@ -397,11 +480,13 @@ def lower_program(program: Program) -> Callable[[list, jax.Array], jax.Array]:
 
 @dataclasses.dataclass
 class CompiledExecutor:
-    """A jitted executor for one ``(Program, batch, dtype)`` cache entry."""
+    """A jitted executor for one ``(Program, batch, dtype, backend)`` entry."""
     program: Program
     stats: dict[str, int]          # schedule-validation pipeline counters
     fn: Callable                   # jitted execute(params, x)
     _trace_count: list
+    backend: str = "xla"           # resolved PE backend ("xla" | "pallas")
+    interpret: bool | None = None  # resolved Pallas interpret mode
 
     @property
     def trace_count(self) -> int:
@@ -414,11 +499,19 @@ class CompiledExecutor:
 
 
 def compile_executor(program: Program,
-                     stats: dict[str, int] | None = None) -> CompiledExecutor:
-    """Validate (unless pre-validated stats are supplied), lower, and jit."""
+                     stats: dict[str, int] | None = None, *,
+                     backend: str = "xla",
+                     interpret: bool | None = None) -> CompiledExecutor:
+    """Validate (unless pre-validated stats are supplied), lower, and jit.
+
+    ``backend``/``interpret`` select the per-block PE (see
+    :func:`lower_program`); the resolved pair is recorded on the returned
+    executor so cache introspection can tell the paths apart.
+    """
     if stats is None:
         stats = validate_schedule(program)
-    execute = lower_program(program)
+    backend, interpret = resolve_backend(backend, interpret)
+    execute = lower_program(program, backend=backend, interpret=interpret)
     trace_count = [0]
 
     def traced(params, x):
@@ -426,4 +519,5 @@ def compile_executor(program: Program,
         return execute(params, x)
 
     return CompiledExecutor(program=program, stats=dict(stats),
-                            fn=jax.jit(traced), _trace_count=trace_count)
+                            fn=jax.jit(traced), _trace_count=trace_count,
+                            backend=backend, interpret=interpret)

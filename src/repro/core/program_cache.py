@@ -1,8 +1,10 @@
-"""Compiled-program cache: one jitted executor per ``(Program, batch, dtype)``.
+"""Compiled-program cache: one jitted executor per
+``(Program, batch, dtype, backend)``.
 
 Keying rules
 ------------
-The cache key is ``(program.schedule_key(), batch, dtype)``:
+The cache key is ``(program.schedule_key(), batch, dtype, param_dtypes,
+backend, interpret)``:
 
 * ``schedule_key()`` (see ``core/compiler.py``) is a content hash over the
   encoded 128-bit instruction stream plus the per-layer geometry (spec, plan,
@@ -13,6 +15,12 @@ The cache key is ``(program.schedule_key(), batch, dtype)``:
   the trace: jit would silently retrace on a new input shape/dtype or a
   changed param dtype, so they are part of the key to make (re)compilation
   an observable, counted event rather than a hidden stall.
+* ``backend`` ("xla" | "pallas") and the *resolved* Pallas interpret flag
+  join the key because they change the lowering itself — the same schedule
+  lowered through the XLA ops and through the Pallas PE kernels are two
+  different compiled artifacts. ``interpret=None`` is resolved (off-TPU ->
+  interpret mode) *before* keying so an auto-selected fallback and an
+  explicit ``interpret=True`` share one entry.
 
 Schedule validation runs **once per schedule key** (not per entry): executors
 for new batch sizes of an already-validated program reuse the cached
@@ -31,7 +39,12 @@ from collections import OrderedDict
 import jax.numpy as jnp
 
 from repro.core.compiler import Program
-from repro.core.executor import CompiledExecutor, compile_executor, validate_schedule
+from repro.core.executor import (
+    CompiledExecutor,
+    compile_executor,
+    resolve_backend,
+    validate_schedule,
+)
 
 
 @dataclasses.dataclass
@@ -66,15 +79,20 @@ class ProgramCache:
         return dict(stats)
 
     def get(self, program: Program, *, batch: int, dtype,
-            param_dtypes: tuple = ()) -> CompiledExecutor:
-        """The jitted executor for ``program`` at this batch/dtype (compile on miss).
+            param_dtypes: tuple = (), backend: str = "xla",
+            interpret: bool | None = None) -> CompiledExecutor:
+        """The jitted executor for ``program`` at this batch/dtype/backend
+        (compile on miss).
 
         ``param_dtypes`` (one name per layer's weight) joins the key when
         weights may not share the input dtype — otherwise jit would silently
         retrace on the changed param dtypes behind a counted "hit".
+        ``backend``/``interpret`` select the per-block PE lowering (see
+        ``core/executor.py``) and join the key in resolved form.
         """
+        backend, interpret = resolve_backend(backend, interpret)
         key = (program.schedule_key(), int(batch), jnp.dtype(dtype).name,
-               tuple(param_dtypes))
+               tuple(param_dtypes), backend, interpret)
         with self._lock:
             entry = self._entries.get(key)
             if entry is not None:
@@ -82,7 +100,8 @@ class ProgramCache:
                 self.stats.hits += 1
                 return entry
         stats = self.validate(program)
-        entry = compile_executor(program, stats=stats)
+        entry = compile_executor(program, stats=stats, backend=backend,
+                                 interpret=interpret)
         with self._lock:
             # re-check: a racing thread may have compiled the same key while
             # we were outside the lock — first insert wins so every caller

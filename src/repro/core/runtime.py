@@ -32,6 +32,11 @@ stream: POOL validates its input slot like COMP and produces the pooled
 block; FC additionally checks the weight slot and bias buffer; both flow
 through the same SAVE/flush path, so every layer kind obeys one hazard
 discipline in both execution paths.
+
+Both paths also share one per-block PE dispatch
+(``executor.conv_block_forward`` / ``executor.fc_forward``), so the
+``backend="xla" | "pallas"`` knob selects the same PE implementation whether
+the stream is interpreted per-instruction or lowered to the jitted executor.
 """
 from __future__ import annotations
 
@@ -46,18 +51,15 @@ from repro.core.compiler import CompiledLayer, Program
 from repro.core.executor import (  # noqa: F401  (HazardError re-export)
     HazardError,
     check_param_count,
+    conv_block_forward,
     fc_forward,
     pool_forward,
+    resolve_backend,
     slice_input_rows,
     width_pad,
 )
-from repro.core.hybrid_conv import hybrid_conv2d
 from repro.core.isa import Instruction, Opcode, unpack_fc_dims
-from repro.core.winograd import (
-    pt_for,
-    transform_weights,
-    winograd_apply_pretransformed,
-)
+from repro.core.winograd import transform_weights
 
 
 @dataclasses.dataclass
@@ -67,13 +69,45 @@ class _Slot:
 
 
 class HybridRuntime:
-    """Executes a compiled Program against DRAM-resident params and input."""
+    """Executes a compiled :class:`~repro.core.compiler.Program` against
+    DRAM-resident params and input.
+
+    Parameters
+    ----------
+    program:
+        The compiled instruction stream plus per-layer geometry.
+    backend:
+        PE implementation for CONV/FC blocks — ``"xla"`` (default,
+        GSPMD-partitionable ``lax`` ops) or ``"pallas"`` (the Pallas PE
+        kernels in ``repro.kernels``). Applies to BOTH the cached jitted
+        executor and the strict interpreter, which share one per-block
+        compute helper per backend. ``use_pallas=True`` is the legacy
+        spelling of ``backend="pallas"``.
+    interpret:
+        Pallas interpret-mode override. ``None`` (default) auto-selects:
+        interpret mode everywhere except real TPU hardware, so the same
+        Program runs on a CPU test container. A non-None value with the
+        XLA backend raises ``ValueError`` (it would otherwise be silently
+        meaningless).
+    strict:
+        ``True`` replays the stream per-instruction (hazard-faithful
+        interpreter); default is the validate-once cached jitted executor.
+    cache:
+        A :class:`~repro.core.program_cache.ProgramCache` override;
+        defaults to the process-global cache.
+    """
 
     def __init__(self, program: Program, use_pallas: bool = False,
                  interpret: bool | None = None, strict: bool = False,
-                 cache=None):
+                 cache=None, backend: str | None = None):
+        if backend is None:
+            backend = "pallas" if use_pallas else "xla"
+        # validate eagerly; keep the unresolved pair (the cache resolves
+        # interpret at lookup so TPU-vs-CPU auto-selection stays late-bound)
+        resolve_backend(backend, interpret)
         self.program = program
-        self.use_pallas = use_pallas
+        self.backend = backend
+        self.use_pallas = backend == "pallas"
         self.interpret = interpret
         self.strict = strict
         self._cache = cache
@@ -133,7 +167,8 @@ class HybridRuntime:
         self.stats = self.cache.validate(self.program)
         entry = self.cache.get(
             self.program, batch=batch, dtype=dtype,
-            param_dtypes=tuple(jnp.dtype(w.dtype).name for w, _ in params))
+            param_dtypes=tuple(jnp.dtype(w.dtype).name for w, _ in params),
+            backend=self.backend, interpret=self.interpret)
         return entry, params
 
     def write_input(self, x_nhwc):
@@ -270,7 +305,8 @@ class HybridRuntime:
                     raise HazardError(f"FC L{ins.layer_id}: stale bias buffer")
                 out_blocks[(0, 0)] = fc_forward(
                     cl, wgt_slots[wslot].data, bias_buf.data,
-                    inp_slots[islot].data, ins.relu_flag)
+                    inp_slots[islot].data, ins.relu_flag,
+                    backend=self.backend, interpret=self.interpret)
                 self.stats["fc"] += 1
             elif op == Opcode.SAVE and cl.kind != "conv":
                 if (0, 0) not in out_blocks:
@@ -335,23 +371,13 @@ class HybridRuntime:
         return slice_input_rows(cl, self._input_nhwc(cl), ih)
 
     def _compute(self, cl: CompiledLayer, x_slab, w_grp, bias, ih, kg, ins):
-        spec, plan = cl.spec, cl.plan
         lo, hi = cl.k_groups[kg]
-        b_grp = bias[lo:hi]
-        # horizontal padding only: vertical halo is already materialized
-        # (VALID convs get no width padding at all); shared with the executor
-        wpad = width_pad(cl)
-        if plan.mode == "wino":
-            x_p = jnp.pad(x_slab, ((0, 0), (0, 0), wpad, (0, 0)))
-            blk = winograd_apply_pretransformed(
-                x_p, w_grp, b_grp, plan.m, relu=ins.relu_flag,
-                padding="VALID", out_dtype=x_slab.dtype)
-        else:
-            blk = hybrid_conv2d(
-                x_slab, w_grp, b_grp, mode="spat", dataflow=plan.dataflow,
-                stride=spec.stride, relu=ins.relu_flag,
-                padding=[(0, 0), wpad],
-                use_pallas=False)
+        # one shared per-block PE dispatch (executor.conv_block_forward) so
+        # the interpreter and the lowered executor can never drift — the
+        # backend knob routes both through the same XLA or Pallas PE
+        blk = conv_block_forward(
+            cl, x_slab, w_grp, bias[lo:hi], ins.relu_flag,
+            backend=self.backend, interpret=self.interpret)
         r0, r1 = cl.row_groups[ih]
         return blk[:, :r1 - r0]
 

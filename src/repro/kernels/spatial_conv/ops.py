@@ -1,10 +1,15 @@
-"""Spatial convolution = im2col + the shared GEMM PE (+ fused epilogue).
+"""Spatial convolution = im2col + the Spatial-mode Pallas GEMM PE.
 
 im2col is the LOAD manager's Spatial-mode addressing (Sec. 4.2.3: "directly
 loads input feature maps and broadcasts them to the PE"): an XLA gather that
-produces the (T, R*S*C) patch matrix; the matmul against (R*S*C, K) reshaped
-weights runs on ``kernels/gemm`` with leading batch 1 (all GEMM cores merged
-into one broadcast array, Sec. 4.2.2).
+produces the (T, C*R*S) patch matrix; the matmul against (C*R*S, K) reshaped
+weights runs on the dedicated ``kernels/spatial_conv/kernel.py`` Pallas PE
+(all GEMM cores merged into one broadcast array, Sec. 4.2.2) with the bias /
+ReLU epilogue fused at the accumulator flush.
+
+``padding`` accepts the usual "SAME"/"VALID" strings or an explicit
+``((top, bottom), (left, right))`` pair — the executor's blocked lowering
+slices the vertical halo itself and passes explicit horizontal pads.
 """
 from __future__ import annotations
 
@@ -15,7 +20,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.kernels.common import LANE, SUBLANE, round_up
-from repro.kernels.gemm.kernel import batched_matmul_kernel
+from repro.kernels.spatial_conv.kernel import conv_gemm_kernel
 
 
 @functools.partial(
@@ -28,7 +33,7 @@ def spatial_conv2d(
     bias: jax.Array | None = None,
     *,
     stride: int = 1,
-    padding: str = "SAME",
+    padding="SAME",
     relu: bool = False,
     dataflow: str = "is",
     out_dtype=None,
@@ -39,6 +44,11 @@ def spatial_conv2d(
     r, s, _, k = g_rsck.shape
     if bias is None:
         bias = jnp.zeros((k,), jnp.float32)
+    if not isinstance(padding, str):
+        # explicit ((top, bottom), (left, right)). Must arrive hashable (it
+        # is a jit static arg); coerce any numpy ints to plain ints for the
+        # patches call
+        padding = tuple(tuple(int(v) for v in p) for p in padding)
 
     # im2col: (N, HO, WO, C*R*S), feature dim ordered channel-major (C, R, S)
     patches = lax.conv_general_dilated_patches(
@@ -54,12 +64,12 @@ def spatial_conv2d(
     bk_ = min(round_up(crs, LANE), 512)
     bn = min(round_up(k, LANE), 256)
     tp, crsp, kp = round_up(t, bm), round_up(crs, bk_), round_up(k, bn)
-    a = jnp.pad(a, ((0, tp - t), (0, crsp - crs)))[None]
-    b = jnp.pad(b, ((0, crsp - crs), (0, kp - k)))[None]
-    bias_p = jnp.pad(bias.astype(jnp.float32), (0, kp - k))[None]
+    a = jnp.pad(a, ((0, tp - t), (0, crsp - crs)))
+    b = jnp.pad(b, ((0, crsp - crs), (0, kp - k)))
+    bias_p = jnp.pad(bias.astype(jnp.float32), (0, kp - k))
 
-    y = batched_matmul_kernel(
+    y = conv_gemm_kernel(
         a, b, bias_p, bm=bm, bn=bn, bk=bk_, dataflow=dataflow, relu=relu,
-        out_dtype=jnp.float32, interpret=interpret)[0]          # (Tp, Kp)
+        out_dtype=jnp.float32, interpret=interpret)             # (Tp, Kp)
     y = y[:t, :k].reshape(n, ho, wo, k)
     return y.astype(out_dtype)

@@ -8,7 +8,9 @@ is the shared ``kernels/gemm`` PE with leading batch PT^2.
 from repro.kernels.winograd.ops import (
     input_transform,
     output_transform,
+    winograd_apply_pretransformed_pallas,
     winograd_conv2d,
 )
 
-__all__ = ["input_transform", "output_transform", "winograd_conv2d"]
+__all__ = ["input_transform", "output_transform",
+           "winograd_apply_pretransformed_pallas", "winograd_conv2d"]

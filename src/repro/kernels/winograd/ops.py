@@ -42,6 +42,31 @@ def _pick_tile_blocks(t: int, c: int, k: int) -> tuple[int, int, int]:
     return bt, bc, bk
 
 
+def _pad_for_conv(x_nhwc, rr, ss, padding):
+    """SAME/VALID input padding for a VALID rr x ss conv of the result."""
+    if padding.upper() == "SAME":
+        ph, pw = (rr - 1) // 2, (ss - 1) // 2
+        return jnp.pad(x_nhwc, ((0, 0), (ph, rr - 1 - ph),
+                                (pw, ss - 1 - pw), (0, 0)))
+    if padding.upper() == "VALID":
+        return x_nhwc
+    raise ValueError(padding)
+
+
+def _finish_output(m_acc, bias, *, m, bt, bk, relu, interpret, geom,
+                   ho, wo, k, kp, out_dtype):
+    """Shared SAVE-manager epilogue: Pallas A^T M A (fused bias/ReLU), then
+    the tile scatter/crop back to NHWC. One copy for both entry points so
+    the reshape/crop arithmetic can't drift."""
+    n, nh, nw, t, tp = geom
+    bias_p = jnp.pad(bias.astype(jnp.float32), (0, kp - k))
+    y = output_transform_kernel(m_acc, bias_p, m=m, bt=bt, bk=bk, relu=relu,
+                                out_dtype=jnp.float32, interpret=interpret)
+    y = y[:t].reshape(n, nh, nw, m, m, kp).transpose(0, 1, 3, 2, 4, 5)
+    y = y.reshape(n, nh * m, nw * m, kp)[:, :ho, :wo, :k]
+    return y.astype(out_dtype)
+
+
 def _wino_conv_piece(x, u_flat, m, t_blocks, out_dtype, dataflow, interpret):
     """One r x r sub-kernel's Winograd conv. x already padded+shifted.
 
@@ -89,14 +114,7 @@ def winograd_conv2d(
     if bias is None:
         bias = jnp.zeros((k,), jnp.float32)
 
-    if padding.upper() == "SAME":
-        ph, pw = (rr - 1) // 2, (ss - 1) // 2
-        pad = ((ph, rr - 1 - ph), (pw, ss - 1 - pw))
-    elif padding.upper() == "VALID":
-        pad = ((0, 0), (0, 0))
-    else:
-        raise ValueError(padding)
-    x = jnp.pad(x_nhwc, ((0, 0), pad[0], pad[1], (0, 0)))
+    x = _pad_for_conv(x_nhwc, rr, ss, padding)
     ho, wo = x.shape[1] - rr + 1, x.shape[2] - ss + 1
 
     if (rr, ss) == (R_WINO, R_WINO):
@@ -125,14 +143,62 @@ def winograd_conv2d(
         mm, geom = _wino_conv_piece(xs, u, m, (bt, bc, bk), out_dtype,
                                     dataflow, interpret)
         m_acc = mm if m_acc is None else m_acc + mm       # accumulate in M-space
-    n_, nh, nw, t, tp = geom
 
-    bias_p = jnp.pad(bias.astype(jnp.float32), (0, kp - k))
-    y = output_transform_kernel(m_acc, bias_p, m=m, bt=bt, bk=bk, relu=relu,
-                                out_dtype=jnp.float32, interpret=interpret)
-    y = y[:t].reshape(n_, nh, nw, m, m, kp).transpose(0, 1, 3, 2, 4, 5)
-    y = y.reshape(n_, nh * m, nw * m, kp)[:, :ho, :wo, :k]
-    return y.astype(out_dtype)
+    return _finish_output(m_acc, bias, m=m, bt=bt, bk=bk, relu=relu,
+                          interpret=interpret, geom=geom, ho=ho, wo=wo,
+                          k=k, kp=kp, out_dtype=out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m", "padding", "relu", "dataflow", "out_dtype", "interpret"),
+)
+def winograd_apply_pretransformed_pallas(
+    x_nhwc: jax.Array,
+    u_ptck: jax.Array,      # (PT, PT, C, K) offline-transformed weights
+    bias: jax.Array | None = None,
+    *,
+    m: int = 4,
+    padding: str = "SAME",
+    relu: bool = False,
+    dataflow: str = "is",
+    out_dtype=None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Winograd conv from U-space weights, all three stages on Pallas.
+
+    The executor/runtime COMP path: the paper stores *transformed* weights in
+    DRAM (Sec. 4.2.3), so the PE consumes U directly — no G g G^T at run
+    time. Mirrors ``core.winograd.winograd_apply_pretransformed`` (the XLA
+    reference) stage for stage: tile extract -> ``input_transform_kernel`` ->
+    the PT^2-batched GEMM -> ``output_transform_kernel`` with the bias/ReLU
+    epilogue fused. r = s = 3, stride 1.
+    """
+    out_dtype = out_dtype or x_nhwc.dtype
+    n, h, w, c = x_nhwc.shape
+    pt, _, _, k = u_ptck.shape
+    assert pt == pt_for(m), (pt, m)
+    if bias is None:
+        bias = jnp.zeros((k,), jnp.float32)
+
+    x = _pad_for_conv(x_nhwc, R_WINO, R_WINO, padding)
+    ho, wo = x.shape[1] - R_WINO + 1, x.shape[2] - R_WINO + 1
+
+    # same tile/GEMM pipeline as winograd_conv2d, minus the weight
+    # transform — U comes from DRAM (shared _wino_conv_piece /
+    # _finish_output so the tiling, block-padding and scatter/crop
+    # arithmetic can't drift between the two entry points)
+    t_est = n * (-(-ho // m)) * (-(-wo // m))
+    bt, bc, bk = _pick_tile_blocks(t_est, c, k)
+    cp, kp = round_up(c, bc), round_up(k, bk)
+    u = u_ptck.astype(jnp.float32).reshape(pt * pt, c, k)
+    if (cp, kp) != (c, k):
+        u = jnp.pad(u, ((0, 0), (0, cp - c), (0, kp - k)))
+    mm, geom = _wino_conv_piece(
+        x, u, m, (bt, bc, bk), out_dtype, dataflow, interpret)
+    return _finish_output(mm, bias, m=m, bt=bt, bk=bk, relu=relu,
+                          interpret=interpret, geom=geom, ho=ho, wo=wo,
+                          k=k, kp=kp, out_dtype=out_dtype)
 
 
 def input_transform(tiles, m, **kw):

@@ -96,7 +96,7 @@ CNN_TARGETS = {"tpu": "V5E", "vu9p": "VU9P", "pynq": "PYNQ_Z1"}
 def serve_cnn(arch: str = "vgg16", *, reduced: bool = True, batch: int = 8,
               iters: int = 20, seed: int = 0, compare_interpreter: bool = False,
               segmented: bool = False, target: str = "tpu",
-              session: bool = False):
+              session: bool = False, backend: str = "xla"):
     """CNN inference through the full HybridDNN pipeline — now a thin driver
     over ``repro.api``.
 
@@ -108,6 +108,8 @@ def serve_cnn(arch: str = "vgg16", *, reduced: bool = True, batch: int = 8,
     ``Target`` protocol (``tpu``/``vu9p``/``pynq``). ``segmented=True``
     keeps the legacy multi-Program path for comparison, and ``session=True``
     additionally drives requests through the batching ``ServingSession``.
+    ``backend="pallas"`` serves through the Pallas PE kernels
+    (interpret-mode off-TPU) instead of the XLA lowering.
     """
     from repro import api
     from repro.core import perf_model as pm
@@ -125,10 +127,12 @@ def serve_cnn(arch: str = "vgg16", *, reduced: bool = True, batch: int = 8,
     specs = vgg.network_specs(img=img, scale=scale, n_classes=n_classes)
     t0 = time.monotonic()
     acc = api.Accelerator.build(specs, target=getattr(pm, CNN_TARGETS[target]),
-                                batch=batch, seed=seed, segmented=segmented)
+                                batch=batch, seed=seed, segmented=segmented,
+                                backend=backend)
     t_build = time.monotonic() - t0
     print(acc.summary())
-    print(f"build (DSE+compile+validate): {t_build * 1e3:.0f}ms")
+    print(f"build (DSE+compile+validate): {t_build * 1e3:.0f}ms; "
+          f"PE backend: {backend}")
 
     rng = np.random.default_rng(seed + 1)
     x = jnp.asarray(rng.standard_normal((batch, img, img, 3)), jnp.float32)
@@ -195,13 +199,16 @@ def main():
     ap.add_argument("--session", action="store_true",
                     help="also drive requests through the batching "
                          "ServingSession (host-mesh sharded)")
+    ap.add_argument("--backend", default="xla", choices=("xla", "pallas"),
+                    help="PE implementation the executor lowers through "
+                         "(pallas runs interpret-mode off-TPU)")
     args = ap.parse_args()
     if args.arch.startswith("vgg"):
         y = serve_cnn(args.arch, reduced=args.reduced, batch=args.batch,
                       iters=args.iters,
                       compare_interpreter=args.compare_interpreter,
                       segmented=args.segmented, target=args.target,
-                      session=args.session)
+                      session=args.session, backend=args.backend)
         print("logits:", y.shape)
         return
     toks = serve(args.arch, reduced=args.reduced, batch=args.batch,

@@ -137,7 +137,18 @@ def init_params(key, cfg: ModelConfig | None = None, *, img: int = 224,
 
 def forward(params, x_nhwc, plans: list[LayerPlan], *,
             use_pallas: bool = False, interpret: bool | None = None):
-    """x: (N, img, img, C0) -> logits (N, n_classes)."""
+    """x: (N, img, img, C0) -> logits (N, n_classes).
+
+    ``interpret`` only affects the Pallas kernels, so passing it with
+    ``use_pallas=False`` is a contradiction (the XLA path would silently
+    ignore it and the caller would believe interpret mode was exercised) —
+    that combination raises ``ValueError`` instead.
+    """
+    if not use_pallas and interpret is not None:
+        raise ValueError(
+            f"interpret={interpret!r} has no effect with use_pallas=False — "
+            f"the XLA path would silently ignore it; pass use_pallas=True "
+            f"or drop interpret")
     x = x_nhwc
     ci = 0
     for entry in _VGG16:

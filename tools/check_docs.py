@@ -1,0 +1,130 @@
+#!/usr/bin/env python
+"""Docs health check: markdown link integrity + runnable snippets.
+
+Run from the repo root (CI's fast docs job does):
+
+    PYTHONPATH=src python tools/check_docs.py
+
+Two passes over ``README.md`` and every ``docs/*.md``:
+
+1. **Link check** — every relative markdown link ``[text](target)`` must
+   resolve to an existing file (anchors are stripped; same-file ``#anchor``
+   links must match a heading). External ``http(s)://`` links are not
+   fetched — CI must not flake on the network.
+2. **Snippet check** — every fenced ```` ```python ```` block in the
+   snippet-checked files (``docs/API.md`` and the README) is executed.
+   Blocks run top to bottom in ONE namespace per file, so a later block may
+   use objects an earlier one defined — write docs accordingly. A failing
+   snippet fails CI: the docs may not drift from the code.
+"""
+from __future__ import annotations
+
+import re
+import sys
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+LINK_CHECKED = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+SNIPPET_CHECKED = [ROOT / "README.md", ROOT / "docs" / "API.md"]
+
+# [text](target) — but not images ![..](..) nor in-code backticked text
+_LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+_FENCE_RE = re.compile(r"^```(\w*)\s*$")
+
+
+def _headings(md: str) -> set[str]:
+    """GitHub-style anchor slugs for every heading in ``md``."""
+    out = set()
+    for line in md.splitlines():
+        m = re.match(r"#+\s+(.*)", line)
+        if m:
+            slug = m.group(1).strip().lower()
+            slug = re.sub(r"[`*_]", "", slug)
+            slug = re.sub(r"[^\w\- ]", "", slug).replace(" ", "-")
+            out.add(slug)
+    return out
+
+
+def _strip_fences(md: str) -> str:
+    """Drop fenced code blocks so code-sample brackets aren't 'links'."""
+    out, fenced = [], False
+    for line in md.splitlines():
+        if _FENCE_RE.match(line):
+            fenced = not fenced
+            continue
+        if not fenced:
+            out.append(line)
+    return "\n".join(out)
+
+
+def check_links() -> list[str]:
+    errors = []
+    for path in LINK_CHECKED:
+        md = path.read_text()
+        for target in _LINK_RE.findall(_strip_fences(md)):
+            if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # http:, mailto:, …
+                continue
+            base, _, anchor = target.partition("#")
+            where = f"{path.relative_to(ROOT)} -> {target}"
+            if not base:                                    # same-file anchor
+                if anchor not in _headings(md):
+                    errors.append(f"{where}: no such heading")
+                continue
+            dest = (path.parent / base).resolve()
+            if not dest.exists():
+                errors.append(f"{where}: file not found")
+            elif anchor and dest.suffix == ".md":
+                if anchor not in _headings(dest.read_text()):
+                    errors.append(f"{where}: no such heading in {base}")
+    return errors
+
+
+def _python_blocks(md: str) -> list[tuple[int, str]]:
+    blocks, buf, lang, start = [], [], None, 0
+    for i, line in enumerate(md.splitlines(), 1):
+        m = _FENCE_RE.match(line)
+        if m and lang is None:
+            lang, buf, start = m.group(1), [], i
+        elif m:
+            if lang == "python":
+                blocks.append((start, "\n".join(buf)))
+            lang = None
+        elif lang is not None:
+            buf.append(line)
+    return blocks
+
+
+def check_snippets() -> list[str]:
+    errors = []
+    for path in SNIPPET_CHECKED:
+        ns: dict = {"__name__": "__docs__"}   # one namespace per file
+        for lineno, code in _python_blocks(path.read_text()):
+            t0 = time.monotonic()
+            try:
+                exec(compile(code, f"{path.name}:{lineno}", "exec"), ns)
+            except Exception as e:  # noqa: BLE001 — reported, fails the job
+                errors.append(
+                    f"{path.relative_to(ROOT)} snippet at line {lineno}: "
+                    f"{type(e).__name__}: {e}")
+                break   # later blocks in this file may depend on this one
+            print(f"  ok {path.name}:{lineno} "
+                  f"({time.monotonic() - t0:.1f}s)")
+    return errors
+
+
+def main() -> int:
+    print(f"link check: {', '.join(p.name for p in LINK_CHECKED)}")
+    errors = check_links()
+    print(f"snippet check: {', '.join(p.name for p in SNIPPET_CHECKED)}")
+    errors += check_snippets()
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    print(f"docs check: {'FAIL' if errors else 'OK'} "
+          f"({len(LINK_CHECKED)} files linked-checked, "
+          f"{len(SNIPPET_CHECKED)} snippet-checked)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
