@@ -41,7 +41,9 @@ import dataclasses
 import json
 import threading
 import time
+import warnings
 from collections import deque
+from contextlib import contextmanager
 from concurrent.futures import Future, InvalidStateError
 from typing import Any, Protocol, Sequence, runtime_checkable
 
@@ -56,6 +58,29 @@ from repro.core.hybrid_conv import ConvSpec, FCSpec, PoolSpec
 from repro.core.runtime import HybridRuntime
 
 PROGRAM_FORMAT = "hybriddnn-program/v1"
+
+
+@contextmanager
+def _expected_donation_noise():
+    """ServingSession opts into best-effort input donation: when a bucket's
+    input buffer has no same-shape reuse inside the executor (e.g. the
+    entry layout transform changes its shape immediately), XLA warns at
+    compile time and keeps a copy — expected by design. Suppress exactly
+    that message around the session's own compile sites only, so a user's
+    own ``jax.jit(..., donate_argnums=...)`` diagnostics stay visible.
+
+    ``warnings.catch_warnings`` mutates process-global filter state and is
+    not thread-safe, so this is a no-op off the main thread: a cold bucket
+    compiled lazily in the dispatch worker emits the (harmless, one-time)
+    note rather than risk corrupting a user thread's filter stack."""
+    if threading.current_thread() is not threading.main_thread():
+        yield
+        return
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable",
+            category=UserWarning)
+        yield
 
 
 @runtime_checkable
@@ -122,7 +147,8 @@ def _conv_segments_of(specs) -> list[int]:
 
 def build_segmented_request(specs, plans, params, *, strict: bool = False,
                             cache=None, backend: str = "xla",
-                            interpret: bool | None = None):
+                            interpret: bool | None = None,
+                            opt_level: int = 1):
     """The legacy multi-Program path: one compiled Program per CONV segment,
     host-side 2x2 maxpool glue between segments, and the FC tail outside
     the runtime. Kept as ``Accelerator.build(..., segmented=True)``;
@@ -131,11 +157,14 @@ def build_segmented_request(specs, plans, params, *, strict: bool = False,
     runtimes on the per-instruction interpreter instead of the cached
     jitted executor; ``cache`` overrides the process-global program cache
     for every segment runtime; ``backend``/``interpret`` select the PE
-    implementation for the segment runtimes AND the host-side FC tail."""
-    from repro.core.executor import resolve_backend
+    implementation for the segment runtimes AND the host-side FC tail;
+    ``opt_level`` is the lowering-optimizer level of each segment
+    executor."""
+    from repro.core.executor import resolve_backend, resolve_opt_level
     from repro.core.hybrid_conv import dense, max_pool2d
 
     resolve_backend(backend, interpret)   # reject bad combos before building
+    resolve_opt_level(opt_level)
 
     # params align with the non-pool specs, in network order
     nonpool = [s for s in specs if not isinstance(s, PoolSpec)]
@@ -153,7 +182,8 @@ def build_segmented_request(specs, plans, params, *, strict: bool = False,
         program = compile_network(conv_specs[idx:idx + n],
                                   conv_plans[idx:idx + n])
         rt = HybridRuntime(program, strict=strict, cache=cache,
-                           backend=backend, interpret=interpret)
+                           backend=backend, interpret=interpret,
+                           opt_level=opt_level)
         rt.load_params(conv_params[idx:idx + n])
         runtimes.append(rt)
         n_instr += len(program.instructions)
@@ -244,7 +274,8 @@ class Accelerator:
                  runtime: HybridRuntime | None = None,
                  dse: DSEResult | None = None, segmented: bool = False,
                  segment_runtimes: list | None = None,
-                 backend: str = "xla", interpret: bool | None = None):
+                 backend: str = "xla", interpret: bool | None = None,
+                 opt_level: int = 1):
         self.specs = list(specs)
         self.plans = list(plans)
         self.params = params
@@ -257,6 +288,7 @@ class Accelerator:
         self.segment_runtimes = segment_runtimes
         self.backend = backend
         self.interpret = interpret
+        self.opt_level = opt_level
         self._request = request
 
     # -- construction -------------------------------------------------------
@@ -266,7 +298,8 @@ class Accelerator:
               plans: Sequence[LayerPlan | None] | None = None,
               segmented: bool = False, strict: bool = False,
               cache=None, backend: str = "xla",
-              interpret: bool | None = None) -> "Accelerator":
+              interpret: bool | None = None,
+              opt_level: int = 1) -> "Accelerator":
         """DSE -> compile -> validate, in one call.
 
         ``target`` is any :class:`Target` (``pm.V5E``, ``pm.VU9P``,
@@ -280,8 +313,12 @@ class Accelerator:
         ``backend="pallas"`` routes every CONV/FC block through the Pallas
         PE kernels instead of the XLA ops; ``interpret`` overrides the
         Pallas interpret-mode auto-selection (``None`` = interpret mode
-        everywhere but real TPU). The backend joins the program-cache key,
-        so the same Program serves both backends side by side.
+        everywhere but real TPU). ``opt_level`` selects the lowering
+        optimizer — ``1`` (default) collapses each layer's per-block loop
+        into one whole-layer PE dispatch where provably equivalent, ``0``
+        keeps the literal per-block lowering (the reference). Backend and
+        opt_level both join the program-cache key, so the same Program
+        serves every variant side by side.
         """
         specs = list(specs)
         dse = None
@@ -301,21 +338,24 @@ class Accelerator:
         if segmented:
             request, seg_rts, _ = build_segmented_request(
                 specs, plans, params, strict=strict, cache=cache,
-                backend=backend, interpret=interpret)
+                backend=backend, interpret=interpret, opt_level=opt_level)
             return cls(specs=specs, plans=plans, params=params,
                        request=request, target=target, batch=batch, dse=dse,
                        segmented=True, segment_runtimes=seg_rts,
-                       backend=backend, interpret=interpret)
+                       backend=backend, interpret=interpret,
+                       opt_level=opt_level)
 
         program = compile_network(specs, plans)
         rt = HybridRuntime(program, strict=strict, cache=cache,
-                           backend=backend, interpret=interpret)
+                           backend=backend, interpret=interpret,
+                           opt_level=opt_level)
         rt.load_params(params)
         if not strict:
             rt.cache.validate(program)   # schedule check once, at build time
         return cls(specs=specs, plans=plans, params=params, request=rt.run,
                    target=target, batch=batch, program=program, runtime=rt,
-                   dse=dse, backend=backend, interpret=interpret)
+                   dse=dse, backend=backend, interpret=interpret,
+                   opt_level=opt_level)
 
     # -- inference ----------------------------------------------------------
     def __call__(self, x):
@@ -439,7 +479,8 @@ class Accelerator:
     @classmethod
     def from_program(cls, path: str, *, params: list | None = None,
                      strict: bool = False, cache=None, backend: str = "xla",
-                     interpret: bool | None = None) -> "Accelerator":
+                     interpret: bool | None = None,
+                     opt_level: int = 1) -> "Accelerator":
         """Rebuild an accelerator from :meth:`save_program` output — no DSE.
 
         The layer chain is recompiled from the saved specs/plans and the
@@ -450,9 +491,10 @@ class Accelerator:
         ``params`` is required: saved programs carry no weights, and
         silently substituting random ones would make a reloaded deployment
         serve garbage — pass ``api.random_params(specs, seed)`` explicitly
-        if stand-in weights are what you want. ``backend``/``interpret``
-        select the PE implementation exactly as in :meth:`build` — the
-        saved stream is backend-agnostic, so one artifact deploys to both.
+        if stand-in weights are what you want. ``backend``/``interpret``/
+        ``opt_level`` select the PE implementation and lowering-optimizer
+        level exactly as in :meth:`build` — the saved stream is agnostic to
+        both, so one artifact deploys to every variant.
         """
         if params is None:
             raise ValueError(
@@ -480,14 +522,16 @@ class Accelerator:
                             total_latency=d["total_latency"],
                             candidates_searched=d["candidates_searched"])
         rt = HybridRuntime(program, strict=strict, cache=cache,
-                           backend=backend, interpret=interpret)
+                           backend=backend, interpret=interpret,
+                           opt_level=opt_level)
         rt.load_params(params)
         if not strict:
             rt.cache.validate(program)
         return cls(specs=specs, plans=plans, params=params, request=rt.run,
                    target=doc.get("target"), batch=doc.get("batch", 1),
                    program=program, runtime=rt, dse=dse,
-                   backend=backend, interpret=interpret)
+                   backend=backend, interpret=interpret,
+                   opt_level=opt_level)
 
     # -- serving ------------------------------------------------------------
     def serve(self, **kwargs) -> "ServingSession":
@@ -509,24 +553,70 @@ class SessionStats:
     requests: int = 0        # requests completed
     batches: int = 0         # executor invocations
     padded_rows: int = 0     # zero rows added to reach a bucket size
+    compile_ms: float = 0.0  # trace+compile time (warmup + first use/bucket)
+    # per-request latency samples (submit -> result ready), most recent
+    # window only — enough for steady-state percentiles without unbounded
+    # growth on a long-lived session. Appends (drain thread) and percentile
+    # reads (any caller) share _lat_lock: sorting a deque the drain thread
+    # is appending to would raise "deque mutated during iteration".
+    latencies_ms: deque = dataclasses.field(
+        default_factory=lambda: deque(maxlen=4096))
+    _lat_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False)
+
+    def record_latency(self, ms: float):
+        with self._lat_lock:
+            self.latencies_ms.append(ms)
+
+    def _pct(self, q: float) -> float:
+        with self._lat_lock:
+            xs = sorted(self.latencies_ms)
+        if not xs:
+            return 0.0
+        return xs[min(len(xs) - 1, int(q * len(xs)))]
+
+    def p50_ms(self) -> float:
+        """Median request latency over the recent window."""
+        return self._pct(0.50)
+
+    def p95_ms(self) -> float:
+        """95th-percentile request latency over the recent window."""
+        return self._pct(0.95)
 
 
 class ServingSession:
-    """Padding-bucketed request-batching queue over the cached executor.
+    """Padding-bucketed request-batching queue over the cached executor,
+    with pipelined dispatch.
 
     Callers ``submit()`` single items (H, W, C) or small batches
-    (n, H, W, C) and get a ``Future``; a worker thread coalesces pending
+    (n, H, W, C) and get a ``Future``; a dispatch worker coalesces pending
     requests into device batches of at most ``max_batch`` items, pads each
     batch up to the nearest size in ``buckets`` (so the jit cache holds one
     executor per bucket instead of one per observed batch size), runs the
     accelerator's cached executor directly (no per-request DRAM dict work),
     and scatters the rows back to the futures in submission order.
 
-    The session inherits the accelerator's PE ``backend``: per-bucket
-    executors are fetched through ``HybridRuntime.executor_entry``, which
-    keys the program cache on ``(schedule, bucket, dtype, backend,
-    interpret)`` — an ``Accelerator.build(..., backend="pallas")`` session
-    serves every request through the Pallas PE kernels.
+    The hot path is **pipelined**, the software analog of the paper's
+    LOAD/COMP/SAVE overlap: the dispatch worker launches device batch i+1
+    while batch i is still in flight (JAX dispatch is asynchronous), and a
+    separate drain thread blocks on completed batches and resolves their
+    futures — the host-side numpy staging of one batch overlaps the device
+    compute of the previous one. Staging uses two preallocated numpy
+    buffers per bucket, reused alternately; a buffer is free for refill as
+    soon as its batch is dispatched, because ``jnp.asarray`` copies
+    host->device. Outstanding device batches are hard-capped at 3 (one
+    being synced by the drain thread, one executing, one freshly staged —
+    triple buffering), so the session never runs unboundedly ahead of the
+    device. Per-bucket executors donate their input buffer (the staged
+    device array is never reused), so steady-state batches allocate no
+    fresh activation input.
+
+    The session inherits the accelerator's PE ``backend`` and lowering
+    ``opt_level``: per-bucket executors are fetched through
+    ``HybridRuntime.executor_entry``, which keys the program cache on
+    ``(schedule, bucket, dtype, backend, interpret, opt_level, donate)`` —
+    an ``Accelerator.build(..., backend="pallas")`` session serves every
+    request through the Pallas PE kernels.
 
     ``mesh``: a ``jax.sharding.Mesh`` — device batches whose bucket size
     is a multiple of the device count are sharded along the batch axis over
@@ -534,6 +624,11 @@ class ServingSession:
     NI-instances analog. ``max_wait_ms`` is the batching window: after the
     first pending request the worker waits that long for co-arriving
     requests before launching a partial batch.
+
+    ``stats`` records, besides request/batch counts, the trace+compile time
+    spent on warmup and first-use buckets (``compile_ms``) and a recent
+    window of per-request submit-to-result latencies (``p50_ms()`` /
+    ``p95_ms()``).
     """
 
     def __init__(self, acc: Accelerator, *, max_batch: int = 8,
@@ -554,22 +649,38 @@ class ServingSession:
             raise ValueError(
                 f"buckets {self.buckets} must cover max_batch={max_batch}")
         self.stats = SessionStats()
-        self._single_rank = len(acc.input_shape)
+        # resolve once: input_dtype/input_shape are properties that walk
+        # the param tree — too costly to re-derive on every submit()
+        self._in_dtype = np.dtype(acc.input_dtype)
+        self._in_shape = tuple(acc.input_shape)
+        self._single_rank = len(self._in_shape)
         self._max_wait = max(0.0, max_wait_ms) / 1e3
         self._pending: deque = deque()
         self._cv = threading.Condition()
         self._closed = False
 
         # hot path: one cached executor entry per bucket (validated once,
-        # lowered once per bucket). Falls back to acc(x) for segmented /
-        # strict accelerators.
+        # lowered once per bucket), donating the staged input buffer.
+        # Falls back to acc(x) for segmented / strict accelerators.
         self._entries: dict[int, Any] = {}
         self._params = None
         rt = acc.runtime
         if rt is not None and not rt.strict:
+            # donation is best-effort (see the module-level warnings filter)
             for b in self.buckets:
                 self._entries[b], self._params = rt.executor_entry(
-                    b, acc.input_dtype)
+                    b, acc.input_dtype, donate_input=True)
+
+        # host staging: one pair of numpy buffers per bucket, flipped per
+        # dispatch. Reuse safety rests on jnp.asarray copying host->device
+        # at dispatch time — NOT on buffer pinning: with the in-flight cap
+        # of 3, batch i+2 refills batch i's buffer while batch i may still
+        # be executing from its own device-side copy.
+        self._staging = {
+            b: [np.empty((b, *acc.input_shape),
+                         np.dtype(acc.input_dtype)) for _ in range(2)]
+            for b in self.buckets}
+        self._staging_flip: dict[int, int] = {b: 0 for b in self.buckets}
 
         self._mesh = mesh
         self._x_sharding = None
@@ -598,14 +709,32 @@ class ServingSession:
                 self._x_sharding = jax.NamedSharding(
                     mesh, jax.sharding.PartitionSpec(tuple(mesh.axis_names)))
 
-        if warmup:   # pre-trace every bucket so first requests don't stall
-            for b in self.buckets:
-                z = jnp.zeros((b, *acc.input_shape), acc.input_dtype)
-                jax.block_until_ready(self._run_bucket(z))
+        # completion pipeline: dispatched-but-unresolved batches, FIFO.
+        # The bound counts every outstanding device batch — the one the
+        # drain thread is syncing, one executing, and one freshly staged —
+        # the classic triple-buffer pipeline. The drainer holds its slot
+        # until the host sync completes, so this is a hard device-memory
+        # cap, not a soft target.
+        self._inflight: deque = deque()
+        self._inflight_cv = threading.Condition()
+        self._max_inflight = 3
 
-        self._thread = threading.Thread(
+        self._warm: set[int] = set()
+        if warmup:   # pre-trace every bucket so first requests don't stall
+            with _expected_donation_noise():
+                for b in self.buckets:
+                    z = jnp.zeros((b, *acc.input_shape), acc.input_dtype)
+                    t0 = time.monotonic()
+                    jax.block_until_ready(self._run_bucket(z))
+                    self.stats.compile_ms += (time.monotonic() - t0) * 1e3
+                    self._warm.add(b)
+
+        self._dispatch_thread = threading.Thread(
             target=self._worker, daemon=True, name="hybriddnn-serving")
-        self._thread.start()
+        self._drain_thread = threading.Thread(
+            target=self._drainer, daemon=True, name="hybriddnn-serving-drain")
+        self._dispatch_thread.start()
+        self._drain_thread.start()
 
     # -- client side --------------------------------------------------------
     def submit(self, x) -> Future:
@@ -613,9 +742,9 @@ class ServingSession:
         item's logits for single-item requests, a batch for batched ones).
 
         The request is staged host-side (numpy): no jax dispatch happens on
-        the caller's thread — the worker launches one device call per
-        coalesced bucket."""
-        x = np.asarray(x, np.dtype(self.acc.input_dtype))
+        the caller's thread — the dispatch worker launches one device call
+        per coalesced bucket."""
+        x = np.asarray(x, self._in_dtype)
         if x.ndim == self._single_rank:
             x, single = x[None], True
         elif x.ndim == self._single_rank + 1:
@@ -623,14 +752,14 @@ class ServingSession:
         else:
             raise ValueError(
                 f"request rank {x.ndim} does not match input shape "
-                f"{self.acc.input_shape} (+ optional batch dim)")
+                f"{self._in_shape} (+ optional batch dim)")
         if not 1 <= x.shape[0] <= self.max_batch:
             raise ValueError(
                 f"request batch {x.shape[0]} must be between 1 and "
                 f"max_batch={self.max_batch}")
-        if tuple(x.shape[1:]) != self.acc.input_shape:
+        if tuple(x.shape[1:]) != self._in_shape:
             # reject here, not in the worker: a malformed item would fail
-            # the batch concatenate and poison every co-batched request
+            # the batch assembly and poison every co-batched request
             raise ValueError(
                 f"request item shape {tuple(x.shape[1:])} does not match "
                 f"the accelerator input shape {self.acc.input_shape}")
@@ -638,7 +767,7 @@ class ServingSession:
         with self._cv:
             if self._closed:
                 raise RuntimeError("ServingSession is closed")
-            self._pending.append((x, single, fut))
+            self._pending.append((x, single, fut, time.monotonic()))
             self._cv.notify()
         return fut
 
@@ -655,7 +784,8 @@ class ServingSession:
         with self._cv:
             self._closed = True
             self._cv.notify_all()
-        self._thread.join()
+        self._dispatch_thread.join()     # drains pending, enqueues sentinel
+        self._drain_thread.join()        # resolves every in-flight batch
 
     def __enter__(self):
         return self
@@ -664,7 +794,7 @@ class ServingSession:
         self.close()
         return False
 
-    # -- worker side --------------------------------------------------------
+    # -- dispatch side ------------------------------------------------------
     def _take_group(self):
         """Collect pending requests into one device batch (<= max_batch)."""
         with self._cv:
@@ -677,9 +807,8 @@ class ServingSession:
             while True:
                 while (self._pending
                        and n + self._pending[0][0].shape[0] <= self.max_batch):
-                    x, single, fut = self._pending.popleft()
-                    group.append((x, single, fut))
-                    n += x.shape[0]
+                    group.append(self._pending.popleft())
+                    n += group[-1][0].shape[0]
                 if n >= self.max_batch or self._pending or self._closed:
                     break                # full, head won't fit, or draining
                 timeout = deadline - time.monotonic()
@@ -697,44 +826,111 @@ class ServingSession:
             return entry(self._params, x)
         return self.acc(x)
 
-    def _run_group(self, group, n):
-        # assemble and scatter in numpy: per-op jax dispatch dominates at
-        # this granularity (8 expand_dims + concat + 8 slices per batch),
-        # so the queue would otherwise run slower than the direct loop it
-        # exists to beat. Costs one host sync per device batch.
-        xs = [x for x, _, _ in group]
-        x = xs[0] if len(xs) == 1 else np.concatenate(xs, axis=0)
+    def _dispatch_group(self, group, n):
+        """Stage one device batch and launch it — no host sync.
+
+        Assembly is numpy into a preallocated double-buffered staging
+        array: per-op jax dispatch dominates at this granularity (8
+        expand_dims + concat + 8 slices per batch), so the queue would
+        otherwise run slower than the direct loop it exists to beat.
+        Returns the in-flight device result; the drain thread syncs it.
+        """
         bucket = next(b for b in self.buckets if b >= n)
-        if bucket > n:
-            x = np.concatenate(
-                [x, np.zeros((bucket - n, *x.shape[1:]), x.dtype)])
-            self.stats.padded_rows += bucket - n
-        y = np.asarray(self._run_bucket(jnp.asarray(x)))
-        # count the batch BEFORE resolving futures: callers blocked on
-        # result() read stats as soon as the last future fires
-        self.stats.batches += 1
-        self.stats.requests += len(group)
+        buf = self._staging[bucket][self._staging_flip[bucket]]
+        self._staging_flip[bucket] ^= 1
         off = 0
-        for xi, single, fut in group:
-            k = xi.shape[0]
-            try:
-                fut.set_result(y[off] if single else y[off:off + k])
-            except InvalidStateError:
-                pass    # caller cancelled mid-flight; drop only their rows
-            off += k
+        for xi, _, _, _ in group:
+            buf[off:off + xi.shape[0]] = xi
+            off += xi.shape[0]
+        if bucket > n:
+            buf[n:] = 0
+            self.stats.padded_rows += bucket - n
+        first_use = bucket not in self._warm
+        t0 = time.monotonic()
+        # jnp.asarray copies host->device, so the staging buffer is free to
+        # be refilled for the next dispatch as soon as this call returns
+        if first_use:
+            with _expected_donation_noise():   # compile happens in this call
+                y = self._run_bucket(jnp.asarray(buf))
+            self.stats.compile_ms += (time.monotonic() - t0) * 1e3
+            self._warm.add(bucket)
+        else:
+            y = self._run_bucket(jnp.asarray(buf))
+        return y
 
     def _worker(self):
+        """Dispatch loop: batch i+1 is staged and launched while batch i is
+        still executing on the device (the drain thread owns completion)."""
         while True:
             group, n = self._take_group()
             if group is None:
+                with self._inflight_cv:       # closed: wake the drain thread
+                    self._inflight.append(None)
+                    self._inflight_cv.notify_all()
                 return
+            # acquire the pipeline slot BEFORE launching, so at most
+            # _max_inflight device batches are ever outstanding (only this
+            # thread appends, so the bound holds after the lock is dropped)
+            with self._inflight_cv:
+                while len(self._inflight) >= self._max_inflight:
+                    self._inflight_cv.wait()
             try:
-                self._run_group(group, n)
+                y = self._dispatch_group(group, n)
             except Exception as e:  # noqa: BLE001 — surface via the futures
-                for _, _, fut in group:
-                    try:
-                        if not fut.done():
-                            fut.set_exception(e)
-                    except InvalidStateError:
-                        pass    # cancelled in the done()/set race
+                self._fail_group(group, e)
+                continue
+            with self._inflight_cv:
+                self._inflight.append((group, y))
+                self._inflight_cv.notify_all()
+
+    # -- completion side ----------------------------------------------------
+    def _drainer(self):
+        """Completion loop: block on the oldest in-flight batch, scatter its
+        rows back to the futures in submission order. The batch is PEEKED,
+        synced, and only then popped — releasing the dispatch slot before
+        the host sync would let a third batch launch (and its staging
+        buffer be refilled) while this one may still be executing, breaking
+        the documented in-flight bound of ``_max_inflight``."""
+        while True:
+            with self._inflight_cv:
+                while not self._inflight:
+                    self._inflight_cv.wait()
+                item = self._inflight[0]         # peek: slot stays occupied
+            if item is None:
+                return
+            group, y = item
+            exc = None
+            try:
+                y_np = np.asarray(y)             # the one host sync per batch
+            except Exception as e:  # noqa: BLE001 — device error surfaces here
+                exc = e
+            with self._inflight_cv:              # batch done: free the slot
+                self._inflight.popleft()         # only this thread pops
+                self._inflight_cv.notify_all()
+            if exc is not None:
+                self._fail_group(group, exc)
+                continue
+            # count the batch BEFORE resolving futures: callers blocked on
+            # result() read stats as soon as the last future fires
+            self.stats.batches += 1
+            self.stats.requests += len(group)
+            done_t = time.monotonic()
+            off = 0
+            for xi, single, fut, t_submit in group:
+                k = xi.shape[0]
+                self.stats.record_latency((done_t - t_submit) * 1e3)
+                try:
+                    fut.set_result(y_np[off] if single else y_np[off:off + k])
+                except InvalidStateError:
+                    pass    # caller cancelled mid-flight; drop only their rows
+                off += k
+
+    @staticmethod
+    def _fail_group(group, e):
+        for _, _, fut, _ in group:
+            try:
+                if not fut.done():
+                    fut.set_exception(e)
+            except InvalidStateError:
+                pass    # cancelled in the done()/set race
 

@@ -51,6 +51,28 @@ changes — and are asserted equal (to tolerance) over full reduced VGG16 in
 ``tests/test_backend_pallas.py``. POOL blocks always lower through
 ``lax.reduce_window``: pooling is comparisons, not PE MACs, in the paper's
 architecture (Sec. 4.2). See ``docs/ARCHITECTURE.md``.
+
+Lowering optimizer (``opt_level``): the literal per-block lowering above is
+faithful to the COMP stream but wasteful as a *software* dataflow — every
+block re-materializes its vertical halo (``jnp.pad`` + slice) and the
+per-(row, k) blocks reassemble through fusion-blocking ``concatenate``
+chains, so XLA sees G_H x G_K small convolutions per layer instead of one.
+``opt_level=1`` (the default) runs :func:`analyze_program` before tracing:
+a CONV layer whose blocks are *provably equivalent* to one whole-layer
+dispatch — every COMP block carries the same RELU bit, the k-groups
+contiguously tile [0, K), the row groups contiguously tile the output
+height (halos are always spec-derived, see :func:`slice_input_rows`) —
+collapses to a single PE call over the full weight image. A layer whose
+RELU bits differ between blocks cannot fuse (the stream is authoritative);
+when its k-groups are equal-sized it lowers to a stacked-weight batched
+form (one vmapped PE call + a static per-block RELU mask) instead of the
+concat chain, and anything else falls back to the literal blocked lowering.
+``opt_level=0`` keeps the literal lowering everywhere — the reference the
+optimizer is tested against. The chosen level joins the program-cache key,
+so fused and blocked executors of one Program coexist. On this container's
+CPU backend the fused lowering is bitwise-equal to the blocked one (and to
+the strict interpreter) — asserted in ``tests/test_opt_lowering.py`` and
+measured in the ``runtime/fused_vs_blocked`` bench row.
 """
 from __future__ import annotations
 
@@ -59,6 +81,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import layouts
 from repro.core.compiler import CompiledLayer, Program
@@ -77,6 +100,16 @@ class HazardError(RuntimeError):
 
 
 BACKENDS = ("xla", "pallas")
+OPT_LEVELS = (0, 1)
+
+
+def resolve_opt_level(opt_level: int) -> int:
+    """Validate the lowering-optimizer level (0 = literal per-block
+    lowering, 1 = fused whole-layer lowering where provably equivalent)."""
+    if opt_level not in OPT_LEVELS:
+        raise ValueError(
+            f"unknown opt_level {opt_level!r}: expected one of {OPT_LEVELS}")
+    return int(opt_level)
 
 
 def resolve_backend(backend: str, interpret: bool | None
@@ -251,8 +284,19 @@ def slice_input_rows(cl: CompiledLayer, x_nhwc: jax.Array, ih: int) -> jax.Array
     delegates here) so the two paths can never drift. Everything is
     Python-int static, so the slice lowers to a plain XLA slice.
     """
-    spec = cl.spec
     r0, r1 = cl.row_groups[ih]
+    return slice_input_span(cl, x_nhwc, r0, r1)
+
+
+def slice_input_span(cl: CompiledLayer, x_nhwc: jax.Array,
+                     r0: int, r1: int) -> jax.Array:
+    """Input rows (plus spec-derived halo) for output rows ``[r0, r1)``.
+
+    The fused lowering calls this with the whole output height — the same
+    arithmetic a single-row-group plan would produce, which is what makes
+    whole-layer fusion provably equivalent to the blocked assembly.
+    """
+    spec = cl.spec
     pad = (spec.r - 1) // 2 if spec.padding.upper() == "SAME" else 0
     in_lo = r0 * spec.stride - pad
     in_hi = (r1 - 1) * spec.stride + spec.r - pad
@@ -307,9 +351,161 @@ def conv_block_forward(cl: CompiledLayer, x_slab: jax.Array,
         out_dtype=dtype)
 
 
+# ---------------------------------------------------------------------------
+# Lowering optimizer: per-layer block-structure analysis (opt_level=1)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerLowering:
+    """The optimizer's verdict for one CONV layer.
+
+    ``kind``:
+
+    * ``"fused"``  — one whole-layer PE dispatch (uniform RELU bit across
+      every COMP block, k-groups contiguously tile [0, K), row groups
+      contiguously tile the output height). ``relu`` holds the uniform bit.
+    * ``"stacked"`` — RELU bits differ between blocks but the groups still
+      tile contiguously and the k-groups are equal-sized: one vmapped PE
+      call over stacked weight groups, RELU applied through a static
+      per-block mask (``relu_blocks[kg][ih]``) — no concat chain.
+    * ``"block"``  — not provably reducible (non-contiguous groups from a
+      hand-built stream, unequal k-group sizes with mixed RELU bits, or the
+      Pallas backend where vmapping the PE kernel is not supported): keep
+      the literal per-block lowering. ``reason`` says why.
+    """
+    kind: str
+    relu: bool | None = None
+    relu_blocks: tuple[tuple[bool, ...], ...] | None = None
+    reason: str = ""
+
+
+def _tiles_contiguously(groups, total: int) -> bool:
+    lo = 0
+    for a, b in groups:
+        if a != lo or b <= a:
+            return False
+        lo = b
+    return lo == total
+
+
+def _stream_overrides(program: Program):
+    """Per-block RELU bits and POOL configs, read off the instruction
+    stream — the stream is authoritative over the compiled specs."""
+    relu_bits: dict[tuple[int, int, int], bool] = {}
+    pool_cfg: dict[int, tuple[int, int]] = {}
+    for ins in program.instructions:
+        if ins.opcode == Opcode.COMP:
+            ih = ins.size & 0xFFF
+            kg = (ins.size >> 12) & 0xFFF
+            relu_bits[(ins.layer_id, ih, kg)] = ins.relu_flag
+        elif ins.opcode == Opcode.FC:
+            relu_bits[(ins.layer_id, 0, 0)] = ins.relu_flag
+        elif ins.opcode == Opcode.POOL:
+            pool_cfg[ins.layer_id] = (ins.pool_window, ins.pool_stride)
+    return relu_bits, pool_cfg
+
+
+def analyze_layer(cl: CompiledLayer, relu_of, *,
+                  backend: str = "xla") -> LayerLowering:
+    """Decide how one CONV layer may lower under ``opt_level=1``.
+
+    ``relu_of(ih, kg)`` is the effective RELU bit of that COMP block (the
+    stream's bit, falling back to the spec for blocks the stream omits).
+    Fusion is claimed only when the whole-layer dispatch is provably the
+    same math as the blocked assembly; anything unprovable keeps the
+    literal lowering.
+    """
+    ho, _ = cl.spec.out_hw
+    if not _tiles_contiguously(cl.row_groups, ho):
+        return LayerLowering("block", reason="row groups do not tile H")
+    if not _tiles_contiguously(cl.k_groups, cl.spec.k):
+        return LayerLowering("block", reason="k-groups do not tile K")
+    bits = {(ih, kg): bool(relu_of(ih, kg))
+            for ih in range(len(cl.row_groups))
+            for kg in range(len(cl.k_groups))}
+    uniq = set(bits.values())
+    if len(uniq) == 1:
+        return LayerLowering("fused", relu=uniq.pop())
+    if backend == "pallas":
+        return LayerLowering(
+            "block", reason="mixed RELU bits: Pallas PE is not vmapped")
+    sizes = {hi - lo for lo, hi in cl.k_groups}
+    if len(sizes) != 1:
+        return LayerLowering(
+            "block", reason="mixed RELU bits over unequal k-group sizes")
+    relu_blocks = tuple(
+        tuple(bits[(ih, kg)] for ih in range(len(cl.row_groups)))
+        for kg in range(len(cl.k_groups)))
+    return LayerLowering("stacked", relu_blocks=relu_blocks,
+                         reason="mixed RELU bits")
+
+
+def analyze_program(program: Program, *, backend: str = "xla",
+                    relu_bits: dict | None = None
+                    ) -> dict[int, LayerLowering]:
+    """The optimizer pass: one :class:`LayerLowering` verdict per CONV
+    layer (POOL and FC blocks are already single dispatches). Pure static
+    analysis over the instruction stream + compiled geometry — runs once
+    per lowering, before any tracing. ``relu_bits`` lets a caller that
+    already decoded the stream (``lower_program``) share the one walk."""
+    if relu_bits is None:
+        relu_bits, _ = _stream_overrides(program)
+    out = {}
+    for cl in program.layers:
+        if cl.kind != "conv":
+            continue
+        out[cl.layer_id] = analyze_layer(
+            cl,
+            lambda ih, kg, cl=cl: relu_bits.get((cl.layer_id, ih, kg),
+                                                cl.spec.relu),
+            backend=backend)
+    return out
+
+
+def _layer_forward_fused(cl: CompiledLayer, w_eff: jax.Array,
+                         bias: jax.Array, x: jax.Array, relu: bool, *,
+                         backend: str, interpret: bool | None) -> jax.Array:
+    """One whole-layer PE dispatch — the blocked assembly collapsed to a
+    single virtual block covering all rows and the full weight image."""
+    ho, _ = cl.spec.out_hw
+    x_slab = slice_input_span(cl, x, 0, ho)
+    blk = conv_block_forward(cl, x_slab, w_eff, bias, relu,
+                             backend=backend, interpret=interpret)
+    return blk[:, :ho]
+
+
+def _layer_forward_stacked(cl: CompiledLayer, w_eff: jax.Array,
+                           bias: jax.Array, x: jax.Array,
+                           lowering: LayerLowering, *, backend: str,
+                           interpret: bool | None) -> jax.Array:
+    """Stacked-weight batched form: one vmapped PE call over the k-groups
+    plus a static per-block RELU mask — replaces the concat chain for
+    layers whose RELU bits differ between blocks."""
+    ho, _ = cl.spec.out_hw
+    n_kg = len(cl.k_groups)
+    kg_sz = cl.k_groups[0][1] - cl.k_groups[0][0]
+    x_slab = slice_input_span(cl, x, 0, ho)
+    # (..., K) -> (G_K, ..., kg_sz): contiguous k-groups become the vmap axis
+    w_st = jnp.moveaxis(w_eff.reshape(*w_eff.shape[:-1], n_kg, kg_sz), -2, 0)
+    b_st = bias.reshape(n_kg, kg_sz)
+    blks = jax.vmap(lambda w, b: conv_block_forward(
+        cl, x_slab, w, b, False, backend=backend, interpret=interpret)
+    )(w_st, b_st)                                   # (G_K, N, H', W, kg_sz)
+    blks = blks[:, :, :ho]
+    mask = np.zeros((n_kg, ho), bool)               # static: trace constant
+    for kg in range(n_kg):
+        for ih, (r0, r1) in enumerate(cl.row_groups):
+            mask[kg, r0:r1] = lowering.relu_blocks[kg][ih]
+    blks = jnp.where(jnp.asarray(mask)[:, None, :, None, None],
+                     jnp.maximum(blks, 0), blks)
+    y = jnp.moveaxis(blks, 0, -2)                   # (N, ho, W, G_K, kg_sz)
+    return y.reshape(*y.shape[:-2], n_kg * kg_sz)
+
+
 def _layer_forward(cl: CompiledLayer, w_eff: jax.Array, bias: jax.Array,
                    x_stored: jax.Array, relu_of, *, backend: str = "xla",
-                   interpret: bool | None = None) -> jax.Array:
+                   interpret: bool | None = None,
+                   lowering: LayerLowering | None = None) -> jax.Array:
     """One layer as blocked compute over the compiled (row, k) groups.
 
     ``w_eff`` is the DRAM-resident weight image: U-space ``(PT, PT, C, K)``
@@ -317,23 +513,35 @@ def _layer_forward(cl: CompiledLayer, w_eff: jax.Array, bias: jax.Array,
     ``HybridRuntime.load_params`` stores. ``relu_of(ih, kg)`` is the COMP
     instruction's RELU bit for that block (the stream is authoritative, not
     the spec — the interpreter obeys ``ins.relu_flag`` and so must we).
+    ``lowering`` is the optimizer's verdict (``None`` = the literal blocked
+    lowering, the ``opt_level=0`` reference).
     """
     spec = cl.spec
     x = layouts.load_view(x_stored, cl.inp_layout, hw=(spec.h, spec.w))
     dtype = x_stored.dtype
 
-    row_slabs = []
-    for ih, (r0, r1) in enumerate(cl.row_groups):
-        x_slab = slice_input_rows(cl, x, ih)
-        k_blocks = []
-        for kg, (lo, hi) in enumerate(cl.k_groups):
-            blk = conv_block_forward(
-                cl, x_slab, w_eff[..., lo:hi], bias[lo:hi], relu_of(ih, kg),
-                backend=backend, interpret=interpret)
-            k_blocks.append(blk[:, :r1 - r0].astype(dtype))
-        row_slabs.append(k_blocks[0] if len(k_blocks) == 1
-                         else jnp.concatenate(k_blocks, axis=-1))
-    y = row_slabs[0] if len(row_slabs) == 1 else jnp.concatenate(row_slabs, 1)
+    if lowering is not None and lowering.kind == "fused":
+        y = _layer_forward_fused(cl, w_eff, bias, x, lowering.relu,
+                                 backend=backend,
+                                 interpret=interpret).astype(dtype)
+    elif lowering is not None and lowering.kind == "stacked":
+        y = _layer_forward_stacked(cl, w_eff, bias, x, lowering,
+                                   backend=backend,
+                                   interpret=interpret).astype(dtype)
+    else:
+        row_slabs = []
+        for ih, (r0, r1) in enumerate(cl.row_groups):
+            x_slab = slice_input_rows(cl, x, ih)
+            k_blocks = []
+            for kg, (lo, hi) in enumerate(cl.k_groups):
+                blk = conv_block_forward(
+                    cl, x_slab, w_eff[..., lo:hi], bias[lo:hi],
+                    relu_of(ih, kg), backend=backend, interpret=interpret)
+                k_blocks.append(blk[:, :r1 - r0].astype(dtype))
+            row_slabs.append(k_blocks[0] if len(k_blocks) == 1
+                             else jnp.concatenate(k_blocks, axis=-1))
+        y = (row_slabs[0] if len(row_slabs) == 1
+             else jnp.concatenate(row_slabs, 1))
     if cl.out_layout == "wino":
         y = layouts.save_transform(y, "wino", cl.out_m)
     return y
@@ -407,7 +615,7 @@ def to_dram_params(program: Program, params: list) -> list:
 
 
 def lower_program(program: Program, *, backend: str = "xla",
-                  interpret: bool | None = None
+                  interpret: bool | None = None, opt_level: int = 1
                   ) -> Callable[[list, jax.Array], jax.Array]:
     """Lower a validated schedule to ``execute(params, x_nhwc) -> y_nhwc``.
 
@@ -419,9 +627,13 @@ def lower_program(program: Program, *, backend: str = "xla",
 
     ``backend`` selects the per-block PE ("xla" or "pallas", see the module
     docstring); ``interpret`` is the Pallas interpret-mode override
-    (``None`` = auto off-TPU).
+    (``None`` = auto off-TPU). ``opt_level=1`` (default) runs the lowering
+    optimizer (:func:`analyze_program`) and emits the fused / stacked forms
+    for layers where they are provably equivalent; ``opt_level=0`` keeps
+    the literal per-block lowering everywhere.
     """
     backend, interpret = resolve_backend(backend, interpret)
+    opt_level = resolve_opt_level(opt_level)
     for cl in program.layers:
         if cl.kind == "conv" and cl.plan.mode == "wino":
             assert cl.spec.r == 3 and cl.spec.s == 3, \
@@ -430,17 +642,10 @@ def lower_program(program: Program, *, backend: str = "xla",
     # the stream's COMP/FC RELU bits and POOL window/stride are the
     # authority (the compiler sets them from the spec, but hand-built or
     # decoded streams may differ per block)
-    relu_bits: dict[tuple[int, int, int], bool] = {}
-    pool_cfg: dict[int, tuple[int, int]] = {}
-    for ins in program.instructions:
-        if ins.opcode == Opcode.COMP:
-            ih = ins.size & 0xFFF
-            kg = (ins.size >> 12) & 0xFFF
-            relu_bits[(ins.layer_id, ih, kg)] = ins.relu_flag
-        elif ins.opcode == Opcode.FC:
-            relu_bits[(ins.layer_id, 0, 0)] = ins.relu_flag
-        elif ins.opcode == Opcode.POOL:
-            pool_cfg[ins.layer_id] = (ins.pool_window, ins.pool_stride)
+    relu_bits, pool_cfg = _stream_overrides(program)
+    lowerings = (analyze_program(program, backend=backend,
+                                 relu_bits=relu_bits)
+                 if opt_level >= 1 else {})
 
     def execute(params: list, x_nhwc: jax.Array) -> jax.Array:
         cl0 = program.layers[0]
@@ -468,7 +673,8 @@ def lower_program(program: Program, *, backend: str = "xla",
                     cl, w_eff, b, x,
                     lambda ih, kg, cl=cl: relu_bits.get((cl.layer_id, ih, kg),
                                                         cl.spec.relu),
-                    backend=backend, interpret=interpret)
+                    backend=backend, interpret=interpret,
+                    lowering=lowerings.get(cl.layer_id))
         return x
 
     return execute
@@ -480,13 +686,16 @@ def lower_program(program: Program, *, backend: str = "xla",
 
 @dataclasses.dataclass
 class CompiledExecutor:
-    """A jitted executor for one ``(Program, batch, dtype, backend)`` entry."""
+    """A jitted executor for one ``(Program, batch, dtype, backend,
+    opt_level, donate_input)`` entry."""
     program: Program
     stats: dict[str, int]          # schedule-validation pipeline counters
     fn: Callable                   # jitted execute(params, x)
     _trace_count: list
     backend: str = "xla"           # resolved PE backend ("xla" | "pallas")
     interpret: bool | None = None  # resolved Pallas interpret mode
+    opt_level: int = 1             # lowering-optimizer level (0 = literal)
+    donate_input: bool = False     # x buffer donated through jax.jit
 
     @property
     def trace_count(self) -> int:
@@ -501,23 +710,34 @@ class CompiledExecutor:
 def compile_executor(program: Program,
                      stats: dict[str, int] | None = None, *,
                      backend: str = "xla",
-                     interpret: bool | None = None) -> CompiledExecutor:
+                     interpret: bool | None = None,
+                     opt_level: int = 1,
+                     donate_input: bool = False) -> CompiledExecutor:
     """Validate (unless pre-validated stats are supplied), lower, and jit.
 
-    ``backend``/``interpret`` select the per-block PE (see
-    :func:`lower_program`); the resolved pair is recorded on the returned
-    executor so cache introspection can tell the paths apart.
+    ``backend``/``interpret`` select the per-block PE and ``opt_level`` the
+    lowering-optimizer level (see :func:`lower_program`); the resolved
+    values are recorded on the returned executor so cache introspection can
+    tell the paths apart. ``donate_input=True`` donates the activation
+    buffer (``x``) through ``jax.jit`` — only safe when the caller never
+    reuses the array it passed in (the pipelined ``ServingSession`` stages
+    a fresh device array per batch, so it opts in; the general ``run`` path
+    must not, since callers commonly re-invoke with the same input).
     """
     if stats is None:
         stats = validate_schedule(program)
     backend, interpret = resolve_backend(backend, interpret)
-    execute = lower_program(program, backend=backend, interpret=interpret)
+    opt_level = resolve_opt_level(opt_level)
+    execute = lower_program(program, backend=backend, interpret=interpret,
+                            opt_level=opt_level)
     trace_count = [0]
 
     def traced(params, x):
         trace_count[0] += 1     # Python side effect: fires at trace time only
         return execute(params, x)
 
-    return CompiledExecutor(program=program, stats=dict(stats),
-                            fn=jax.jit(traced), _trace_count=trace_count,
-                            backend=backend, interpret=interpret)
+    return CompiledExecutor(
+        program=program, stats=dict(stats),
+        fn=jax.jit(traced, donate_argnums=(1,) if donate_input else ()),
+        _trace_count=trace_count, backend=backend, interpret=interpret,
+        opt_level=opt_level, donate_input=bool(donate_input))

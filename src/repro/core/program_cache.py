@@ -1,10 +1,10 @@
 """Compiled-program cache: one jitted executor per
-``(Program, batch, dtype, backend)``.
+``(Program, batch, dtype, backend, opt_level, donate)``.
 
 Keying rules
 ------------
 The cache key is ``(program.schedule_key(), batch, dtype, param_dtypes,
-backend, interpret)``:
+backend, interpret, opt_level, donate_input)``:
 
 * ``schedule_key()`` (see ``core/compiler.py``) is a content hash over the
   encoded 128-bit instruction stream plus the per-layer geometry (spec, plan,
@@ -21,10 +21,22 @@ backend, interpret)``:
   different compiled artifacts. ``interpret=None`` is resolved (off-TPU ->
   interpret mode) *before* keying so an auto-selected fallback and an
   explicit ``interpret=True`` share one entry.
+* ``opt_level`` (0 = literal per-block lowering, 1 = the lowering
+  optimizer's fused/stacked forms — see ``core/executor.py``) joins the key
+  for the same reason: the two levels are different compiled artifacts, and
+  keeping both keyed lets the reference lowering serve side by side with
+  the optimized one (the property tests rely on exactly this).
+* ``donate_input`` joins the key because donation is part of the jitted
+  function's signature — a donating executor invalidates the caller's
+  input buffer, so it must never be handed to a caller that didn't ask.
 
 Schedule validation runs **once per schedule key** (not per entry): executors
 for new batch sizes of an already-validated program reuse the cached
-validation stats. Entries are LRU-evicted beyond ``maxsize``.
+validation stats. Entries are LRU-evicted beyond ``maxsize``; the validation
+side table is bounded too — when the last executor entry of a schedule is
+evicted its validation stats go with it, and the table itself is LRU-capped
+at ``validated_maxsize`` so validate-only callers cannot grow it without
+limit.
 
 Full-network Programs (POOL/FC opcodes) need no special keying: the encoded
 stream and per-layer geometry already cover the new layer kinds, so the key
@@ -43,6 +55,7 @@ from repro.core.executor import (
     CompiledExecutor,
     compile_executor,
     resolve_backend,
+    resolve_opt_level,
     validate_schedule,
 )
 
@@ -52,47 +65,83 @@ class CacheStats:
     hits: int = 0
     misses: int = 0
     evictions: int = 0
+    validated_evictions: int = 0    # validation-stat entries dropped
 
 
 class ProgramCache:
     """LRU cache of :class:`CompiledExecutor` keyed by (schedule, batch, dtype)."""
 
-    def __init__(self, maxsize: int = 64):
+    def __init__(self, maxsize: int = 64, validated_maxsize: int | None = None):
         self.maxsize = maxsize
+        # the validation side table holds one small counters dict per
+        # schedule; 4x the entry budget comfortably covers every schedule
+        # with live entries plus validate-only callers, while still bounding
+        # a pathological stream of distinct programs
+        self.validated_maxsize = (4 * maxsize if validated_maxsize is None
+                                  else validated_maxsize)
         self.stats = CacheStats()
         self._entries: OrderedDict[tuple, CompiledExecutor] = OrderedDict()
-        self._validated: dict[str, dict[str, int]] = {}
+        self._validated: OrderedDict[str, dict[str, int]] = OrderedDict()
         self._lock = threading.Lock()
 
     def __len__(self) -> int:
         return len(self._entries)
+
+    @property
+    def validated_size(self) -> int:
+        """Schedules with cached validation stats (bounded, see class docs)."""
+        return len(self._validated)
 
     def validate(self, program: Program) -> dict[str, int]:
         """Hazard-check ``program`` once per schedule key; return counters."""
         key = program.schedule_key()
         with self._lock:
             stats = self._validated.get(key)
+            if stats is not None:
+                self._validated.move_to_end(key)
         if stats is None:
             stats = validate_schedule(program)   # raises HazardError
             with self._lock:
                 self._validated[key] = stats
+                self._validated.move_to_end(key)
+                self._evict_validated_locked()
         return dict(stats)
+
+    def _evict_validated_locked(self):
+        """LRU-bound the validation side table; never drop a schedule that
+        still has live executor entries (re-validating it would be wasted
+        work and would skew the once-per-schedule contract)."""
+        if len(self._validated) <= self.validated_maxsize:
+            return
+        live = {k[0] for k in self._entries}
+        for skey in list(self._validated):
+            if len(self._validated) <= self.validated_maxsize:
+                break
+            if skey in live:
+                continue
+            del self._validated[skey]
+            self.stats.validated_evictions += 1
 
     def get(self, program: Program, *, batch: int, dtype,
             param_dtypes: tuple = (), backend: str = "xla",
-            interpret: bool | None = None) -> CompiledExecutor:
-        """The jitted executor for ``program`` at this batch/dtype/backend
-        (compile on miss).
+            interpret: bool | None = None, opt_level: int = 1,
+            donate_input: bool = False) -> CompiledExecutor:
+        """The jitted executor for ``program`` at this
+        batch/dtype/backend/opt_level (compile on miss).
 
         ``param_dtypes`` (one name per layer's weight) joins the key when
         weights may not share the input dtype — otherwise jit would silently
         retrace on the changed param dtypes behind a counted "hit".
-        ``backend``/``interpret`` select the per-block PE lowering (see
-        ``core/executor.py``) and join the key in resolved form.
+        ``backend``/``interpret`` select the per-block PE lowering,
+        ``opt_level`` the lowering-optimizer level, and ``donate_input``
+        whether the executor donates the activation buffer (see
+        ``core/executor.py``); all join the key in resolved form.
         """
         backend, interpret = resolve_backend(backend, interpret)
+        opt_level = resolve_opt_level(opt_level)
         key = (program.schedule_key(), int(batch), jnp.dtype(dtype).name,
-               tuple(param_dtypes), backend, interpret)
+               tuple(param_dtypes), backend, interpret, opt_level,
+               bool(donate_input))
         with self._lock:
             entry = self._entries.get(key)
             if entry is not None:
@@ -101,7 +150,8 @@ class ProgramCache:
                 return entry
         stats = self.validate(program)
         entry = compile_executor(program, stats=stats, backend=backend,
-                                 interpret=interpret)
+                                 interpret=interpret, opt_level=opt_level,
+                                 donate_input=donate_input)
         with self._lock:
             # re-check: a racing thread may have compiled the same key while
             # we were outside the lock — first insert wins so every caller
@@ -113,8 +163,15 @@ class ProgramCache:
             self._entries[key] = entry
             self.stats.misses += 1
             while len(self._entries) > self.maxsize:
-                self._entries.popitem(last=False)
+                old_key, _ = self._entries.popitem(last=False)
                 self.stats.evictions += 1
+                # evict the schedule's validation stats alongside its last
+                # executor entry — a dead schedule must not pin host memory
+                skey = old_key[0]
+                if (skey in self._validated
+                        and not any(k[0] == skey for k in self._entries)):
+                    del self._validated[skey]
+                    self.stats.validated_evictions += 1
         return entry
 
     def clear(self):

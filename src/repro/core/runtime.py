@@ -55,6 +55,7 @@ from repro.core.executor import (  # noqa: F401  (HazardError re-export)
     fc_forward,
     pool_forward,
     resolve_backend,
+    resolve_opt_level,
     slice_input_rows,
     width_pad,
 )
@@ -89,6 +90,13 @@ class HybridRuntime:
         Program runs on a CPU test container. A non-None value with the
         XLA backend raises ``ValueError`` (it would otherwise be silently
         meaningless).
+    opt_level:
+        Lowering-optimizer level for the cached jitted executor: ``1``
+        (default) fuses each layer's per-block loop into a whole-layer PE
+        dispatch where provably equivalent; ``0`` keeps the literal
+        per-block lowering (the reference). The strict interpreter is
+        per-instruction by definition and ignores the knob. Joins the
+        program-cache key.
     strict:
         ``True`` replays the stream per-instruction (hazard-faithful
         interpreter); default is the validate-once cached jitted executor.
@@ -99,7 +107,8 @@ class HybridRuntime:
 
     def __init__(self, program: Program, use_pallas: bool = False,
                  interpret: bool | None = None, strict: bool = False,
-                 cache=None, backend: str | None = None):
+                 cache=None, backend: str | None = None,
+                 opt_level: int = 1):
         if backend is None:
             backend = "pallas" if use_pallas else "xla"
         # validate eagerly; keep the unresolved pair (the cache resolves
@@ -109,6 +118,7 @@ class HybridRuntime:
         self.backend = backend
         self.use_pallas = backend == "pallas"
         self.interpret = interpret
+        self.opt_level = resolve_opt_level(opt_level)
         self.strict = strict
         self._cache = cache
         self.dram: dict[int, Any] = {}
@@ -153,13 +163,17 @@ class HybridRuntime:
         return [(self.dram[cl.wgt_addr], self.dram[cl.bias_addr])
                 for cl in self.program.layers if cl.kind != "pool"]
 
-    def executor_entry(self, batch: int, dtype):
+    def executor_entry(self, batch: int, dtype, *,
+                       donate_input: bool = False):
         """The cached jitted executor + DRAM weight image for (batch, dtype).
 
         The serving hot path: a caller holding a fixed parameter set (e.g.
         ``api.ServingSession``) invokes ``entry(params, x)`` directly,
         skipping the per-request DRAM dict writes ``run`` performs. Schedule
-        validation still runs (once per schedule key, cached)."""
+        validation still runs (once per schedule key, cached).
+        ``donate_input=True`` hands back an executor that donates the
+        activation buffer — only for callers that never reuse the array
+        they pass (the pipelined serving queue)."""
         if self.strict:
             raise RuntimeError(
                 "strict interpreter mode has no cached executor entry")
@@ -168,7 +182,8 @@ class HybridRuntime:
         entry = self.cache.get(
             self.program, batch=batch, dtype=dtype,
             param_dtypes=tuple(jnp.dtype(w.dtype).name for w, _ in params),
-            backend=self.backend, interpret=self.interpret)
+            backend=self.backend, interpret=self.interpret,
+            opt_level=self.opt_level, donate_input=donate_input)
         return entry, params
 
     def write_input(self, x_nhwc):

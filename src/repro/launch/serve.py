@@ -96,7 +96,8 @@ CNN_TARGETS = {"tpu": "V5E", "vu9p": "VU9P", "pynq": "PYNQ_Z1"}
 def serve_cnn(arch: str = "vgg16", *, reduced: bool = True, batch: int = 8,
               iters: int = 20, seed: int = 0, compare_interpreter: bool = False,
               segmented: bool = False, target: str = "tpu",
-              session: bool = False, backend: str = "xla"):
+              session: bool = False, backend: str = "xla",
+              opt_level: int = 1):
     """CNN inference through the full HybridDNN pipeline — now a thin driver
     over ``repro.api``.
 
@@ -107,9 +108,11 @@ def serve_cnn(arch: str = "vgg16", *, reduced: bool = True, batch: int = 8,
     interpreter. ``target`` picks the DSE backend through the unified
     ``Target`` protocol (``tpu``/``vu9p``/``pynq``). ``segmented=True``
     keeps the legacy multi-Program path for comparison, and ``session=True``
-    additionally drives requests through the batching ``ServingSession``.
-    ``backend="pallas"`` serves through the Pallas PE kernels
-    (interpret-mode off-TPU) instead of the XLA lowering.
+    additionally drives requests through the batching (pipelined-dispatch)
+    ``ServingSession``. ``backend="pallas"`` serves through the Pallas PE
+    kernels (interpret-mode off-TPU) instead of the XLA lowering;
+    ``opt_level=0`` disables the lowering optimizer (literal per-block
+    lowering — the reference the fused default is tested against).
     """
     from repro import api
     from repro.core import perf_model as pm
@@ -128,11 +131,11 @@ def serve_cnn(arch: str = "vgg16", *, reduced: bool = True, batch: int = 8,
     t0 = time.monotonic()
     acc = api.Accelerator.build(specs, target=getattr(pm, CNN_TARGETS[target]),
                                 batch=batch, seed=seed, segmented=segmented,
-                                backend=backend)
+                                backend=backend, opt_level=opt_level)
     t_build = time.monotonic() - t0
     print(acc.summary())
     print(f"build (DSE+compile+validate): {t_build * 1e3:.0f}ms; "
-          f"PE backend: {backend}")
+          f"PE backend: {backend}; opt_level: {opt_level}")
 
     rng = np.random.default_rng(seed + 1)
     x = jnp.asarray(rng.standard_normal((batch, img, img, 3)), jnp.float32)
@@ -163,7 +166,10 @@ def serve_cnn(arch: str = "vgg16", *, reduced: bool = True, batch: int = 8,
             dt = time.monotonic() - t0
             print(f"ServingSession: {n_req} requests in {dt * 1e3:.1f}ms "
                   f"({n_req / dt:.1f} req/s, {s.stats.batches} device "
-                  f"batches, {s.stats.padded_rows} padded rows)")
+                  f"batches, {s.stats.padded_rows} padded rows; "
+                  f"latency p50 {s.stats.p50_ms():.2f}ms "
+                  f"p95 {s.stats.p95_ms():.2f}ms; "
+                  f"compile {s.stats.compile_ms:.0f}ms)")
     if compare_interpreter:
         strict_request = acc.strict_request()
         jax.block_until_ready(strict_request(x))   # warm XLA op caches
@@ -202,13 +208,19 @@ def main():
     ap.add_argument("--backend", default="xla", choices=("xla", "pallas"),
                     help="PE implementation the executor lowers through "
                          "(pallas runs interpret-mode off-TPU)")
+    ap.add_argument("--opt-level", type=int, default=1, choices=(0, 1),
+                    help="lowering-optimizer level: 1 fuses each layer's "
+                         "per-block loop into one PE dispatch where "
+                         "provably equivalent; 0 keeps the literal "
+                         "per-block lowering")
     args = ap.parse_args()
     if args.arch.startswith("vgg"):
         y = serve_cnn(args.arch, reduced=args.reduced, batch=args.batch,
                       iters=args.iters,
                       compare_interpreter=args.compare_interpreter,
                       segmented=args.segmented, target=args.target,
-                      session=args.session, backend=args.backend)
+                      session=args.session, backend=args.backend,
+                      opt_level=args.opt_level)
         print("logits:", y.shape)
         return
     toks = serve(args.arch, reduced=args.reduced, batch=args.batch,

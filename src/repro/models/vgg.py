@@ -111,9 +111,40 @@ def default_plans(specs: list[ConvSpec] | None = None, *,
     return target.run_dse(specs, batch=batch).plans
 
 
+def accelerator(*, img: int = 224, scale: int = 1, n_classes: int = 1000,
+                target=None, batch: int = 8, seed: int = 0,
+                backend: str = "xla", interpret: bool | None = None,
+                opt_level: int = 1, **kwargs):
+    """One-call VGG16 accelerator: ``network_specs`` ->
+    ``api.Accelerator.build`` with every executor knob surfaced —
+    ``backend`` (PE implementation), ``interpret`` (Pallas interpret-mode
+    override) and ``opt_level`` (lowering optimizer; 0 = literal per-block
+    reference) thread through to the cached jitted executor end-to-end.
+    Extra keywords pass straight to ``Accelerator.build``."""
+    from repro import api
+    from repro.core import perf_model as pm
+    specs = network_specs(img=img, scale=scale, n_classes=n_classes)
+    return api.Accelerator.build(
+        specs, target if target is not None else pm.V5E, batch=batch,
+        seed=seed, backend=backend, interpret=interpret,
+        opt_level=opt_level, **kwargs)
+
+
 def init_params(key, cfg: ModelConfig | None = None, *, img: int = 224,
                 scale: int = 1, n_classes: int = 1000,
                 dtype=jnp.float32):
+    """Raw VGG16 param pytree for :func:`forward` (not the compiled path).
+
+    ``cfg`` carries no VGG sizing information, so a non-None value would be
+    silently ignored — callers who pass one would believe the config shaped
+    the model. Raise instead (the ``interpret=`` precedent); size the model
+    with the explicit ``img``/``scale``/``n_classes`` keywords.
+    """
+    if cfg is not None:
+        raise ValueError(
+            "vgg.init_params does not derive shapes from a ModelConfig — "
+            "pass img=/scale=/n_classes= explicitly (cfg would be "
+            "silently ignored)")
     specs = conv_specs(img, scale)
     ks = jax.random.split(key, len(specs) + 3)
     convs = []

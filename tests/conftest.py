@@ -16,3 +16,24 @@ def pytest_configure(config):
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+def flip_first_comp(program, layer_id: int = 0):
+    """Invert exactly one COMP block's RELU bit -> a non-uniform stream
+    that the lowering optimizer must NOT fuse. Shared by the opt-lowering
+    unit tests and the hypothesis property suite so the stream-rewriting
+    logic cannot drift between them."""
+    import dataclasses
+
+    from repro.core.isa import Opcode
+
+    out, done = [], False
+    for ins in program.instructions:
+        if (not done and ins.opcode == Opcode.COMP
+                and ins.layer_id == layer_id):
+            out.append(dataclasses.replace(ins, relu_flag=not ins.relu_flag))
+            done = True
+        else:
+            out.append(ins)
+    assert done, f"no COMP instruction for layer {layer_id}"
+    return type(program)(out, program.layers, program.dram_size_words)

@@ -180,3 +180,59 @@ def test_error_feedback_telescopes(seed, steps):
         total_dec = total_dec + dequantize_int8(q, scale)
     np.testing.assert_allclose(np.asarray(total_dec + err),
                                np.asarray(total_g), rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# Lowering optimizer: opt_level=1 == opt_level=0 == strict interpreter on
+# randomized block structures; non-uniform RELU streams must not fuse
+# --------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    h=st.sampled_from([6, 8, 10, 12]), c=st.integers(1, 4),
+    k=st.integers(2, 10),
+    g_h=st.integers(1, 4), g_k=st.integers(1, 4),
+    mode=st.sampled_from(["spat", "wino"]),
+    dataflow=st.sampled_from(["is", "ws"]),
+    flip=st.booleans(), seed=st.integers(0, 2 ** 16),
+)
+def test_opt_levels_agree_on_random_block_structures(
+        h, c, k, g_h, g_k, mode, dataflow, flip, seed):
+    """For randomized geometry/grouping (and randomly non-uniform RELU
+    streams via one flipped COMP bit), the fused/stacked lowering equals
+    the literal per-block reference and the strict interpreter; a stream
+    with mixed RELU bits never reports 'fused' for the touched layer."""
+    from conftest import flip_first_comp
+    from repro.core.executor import (
+        analyze_program,
+        lower_program,
+        to_dram_params,
+        validate_schedule,
+    )
+    from repro.core.runtime import run_program
+
+    spec = ConvSpec("c1", h, h, c, k, relu=True)
+    prog = compile_network([spec], [LayerPlan(mode, dataflow, 2, g_k, g_h)])
+    if flip:
+        prog = flip_first_comp(prog)
+    key = jax.random.PRNGKey(seed)
+    kw, kb, kx = jax.random.split(key, 3)
+    params = [(jax.random.normal(kw, (3, 3, c, k)) * 0.2,
+               jax.random.normal(kb, (k,)) * 0.1)]
+    x = jax.random.normal(kx, (1, h, h, c))
+    verdict = analyze_program(prog)[0]
+    n_blocks = (len(prog.layers[0].row_groups)
+                * len(prog.layers[0].k_groups))
+    if flip and n_blocks > 1:
+        assert verdict.kind != "fused"
+    else:
+        assert verdict.kind == "fused"
+    dram = to_dram_params(prog, params)
+    validate_schedule(prog)
+    y1 = lower_program(prog, opt_level=1)(dram, x)
+    y0 = lower_program(prog, opt_level=0)(dram, x)
+    ys = run_program(prog, params, x, strict=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y0),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(ys),
+                               rtol=1e-4, atol=1e-4)

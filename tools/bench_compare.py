@@ -1,0 +1,200 @@
+#!/usr/bin/env python
+"""Benchmark-artifact guard: schema-check ``BENCH_*.json`` and diff fresh
+rows against the committed file — the nightly regression tripwire.
+
+    PYTHONPATH=src python tools/bench_compare.py BENCH_table4_vgg16.json \
+        --against git:HEAD --tol 0.5
+
+Two passes:
+
+1. **Schema check** — the file must be a JSON list of row dicts, every row
+   carries string ``bench``/``name`` keys and JSON-scalar values, and rows
+   with a known ``name`` carry that row's required metric keys (so a bench
+   refactor cannot silently drop the metric CI archives). Always runs;
+   failures exit non-zero.
+2. **Regression diff** (with ``--against``) — rows are matched by ``name``
+   against the baseline file (a path, or ``git:<ref>`` to read the version
+   committed at ``<ref>``). Every shared numeric metric is reported. For
+   the *ratio* metrics (speedups, rps ratios — machine-load-independent by
+   construction), a drop of more than ``--tol`` fraction below the baseline
+   fails the run; raw wall-clock/rps values are reported but never gated —
+   CI runners are too noisy for absolute thresholds. ``max_abs_diff`` is
+   gated absolutely: a row whose numerical-parity evidence worsens past
+   ``--max-abs-diff`` (default 1e-3) fails regardless of the baseline.
+
+A baseline that does not exist (file missing at the ref — e.g. a brand-new
+bench) skips the diff for that file with a note; the schema check still
+applies.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+# required metric keys per known row name — the contract between the bench
+# writers and the CI artifact consumers
+ROW_SCHEMAS: dict[str, set[str]] = {
+    "runtime/jit_vs_interpreter": {"interp_ms", "jit_ms", "speedup",
+                                   "max_abs_diff"},
+    "runtime/single_vs_segmented": {"single_program_ms", "segmented_ms",
+                                    "speedup", "max_abs_diff"},
+    "runtime/fused_vs_blocked": {"fused_ms", "blocked_ms", "speedup",
+                                 "fused_trace_compile_ms",
+                                 "blocked_trace_compile_ms",
+                                 "fused_jaxpr_ops", "blocked_jaxpr_ops",
+                                 "jaxpr_op_reduction", "max_abs_diff"},
+    "serving/batched_queue": {"session_rps", "direct_b1_rps",
+                              "session_vs_direct_batched",
+                              "session_vs_direct_single", "compile_ms",
+                              "latency_p50_ms", "latency_p95_ms",
+                              "max_abs_diff"},
+    "runtime/pallas_vs_xla": {"xla_ms", "pallas_ms", "pallas_over_xla",
+                              "max_abs_diff"},
+}
+
+# higher-is-better ratio metrics: stable across machines, so they gate
+RATIO_KEYS = ("speedup", "jaxpr_op_reduction", "session_vs_direct_batched",
+              "session_vs_direct_single", "hybrid_speedup")
+
+
+def check_schema(path: Path) -> list[str]:
+    errors = []
+    try:
+        rows = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable or not JSON: {e}"]
+    if not isinstance(rows, list) or not rows:
+        return [f"{path}: expected a non-empty JSON list of row dicts"]
+    for i, row in enumerate(rows):
+        where = f"{path}[{i}]"
+        if not isinstance(row, dict):
+            errors.append(f"{where}: not a dict")
+            continue
+        for key in ("bench", "name"):
+            if not isinstance(row.get(key), str):
+                errors.append(f"{where}: missing/non-string {key!r}")
+        for k, v in row.items():
+            if not isinstance(v, (str, int, float, bool)):
+                errors.append(f"{where}: key {k!r} has non-scalar "
+                              f"value {type(v).__name__}")
+        name = row.get("name")
+        if not isinstance(name, str):
+            continue        # already reported; an unhashable name (e.g. a
+                            # list) would crash the ROW_SCHEMAS lookup
+        missing = ROW_SCHEMAS.get(name, set()) - set(row)
+        if missing:
+            errors.append(f"{where} ({row.get('name')}): missing required "
+                          f"metric keys {sorted(missing)}")
+    return errors
+
+
+def _load_baseline(path: Path, against: str):
+    if against.startswith("git:"):
+        ref = against[4:] or "HEAD"
+        proc = subprocess.run(
+            ["git", "show", f"{ref}:{path.as_posix()}"],
+            capture_output=True, text=True, cwd=path.parent or ".")
+        if proc.returncode != 0:
+            # only a genuinely-absent path is a benign skip (new bench);
+            # any other git failure (not a repo, bad ref, absolute path,
+            # shallow clone) means the tripwire is misconfigured and must
+            # FAIL rather than silently gate nothing
+            stderr = proc.stderr.strip()
+            if ("does not exist" in stderr
+                    or "exists on disk, but not in" in stderr):
+                return None, None, f"{path} not present at {ref} (new bench?)"
+            return None, f"git show {ref}:{path} failed: {stderr}", None
+        try:
+            return json.loads(proc.stdout), None, None
+        except json.JSONDecodeError as e:
+            return None, f"{path} at {ref} is not JSON: {e}", None
+    base = Path(against)
+    if not base.exists():
+        return None, f"baseline {base} does not exist", None
+    return json.loads(base.read_text()), None, None
+
+
+def diff_rows(path: Path, against: str, tol: float,
+              max_abs_diff: float) -> list[str]:
+    baseline, error, skip_note = _load_baseline(path, against)
+    if error is not None:
+        return [error]
+    if baseline is None:
+        print(f"  diff skipped: {skip_note}")
+        return []
+    base_by_name = {r.get("name"): r for r in baseline}
+    errors = []
+    fresh_rows = json.loads(path.read_text())
+    # a baseline row that disappears entirely is itself a regression — a
+    # refactor must not silently drop a metric CI archives
+    dropped = set(base_by_name) - {r.get("name") for r in fresh_rows}
+    for name in sorted(dropped):
+        errors.append(f"{path}: baseline row {name!r} is missing from the "
+                      f"fresh artifact (bench dropped?)")
+    for row in fresh_rows:
+        name = row.get("name")
+        base = base_by_name.get(name)
+        if base is None:
+            print(f"  {name}: new row (no baseline)")
+            continue
+        for k, v in sorted(row.items()):
+            bv = base.get(k)
+            if not isinstance(v, (int, float)) or isinstance(v, bool) \
+                    or not isinstance(bv, (int, float)):
+                continue
+            delta = v - bv
+            print(f"  {name}.{k}: {bv} -> {v} ({delta:+.3g})")
+            if k in RATIO_KEYS and bv > 0 and v < bv * (1.0 - tol):
+                errors.append(
+                    f"{path}: {name}.{k} regressed {bv} -> {v} "
+                    f"(> {tol:.0%} below baseline)")
+            if k == "max_abs_diff" and v > max(bv, max_abs_diff):
+                errors.append(
+                    f"{path}: {name}.max_abs_diff worsened {bv} -> {v} "
+                    f"(numerical-parity evidence)")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*", default=None,
+                    help="artifact files (default: BENCH_*.json in cwd)")
+    ap.add_argument("--against", default=None,
+                    help="baseline: a path, or git:<ref> for the committed "
+                         "version (e.g. git:HEAD)")
+    ap.add_argument("--tol", type=float, default=0.5,
+                    help="allowed fractional drop in ratio metrics before "
+                         "the diff fails (default 0.5 — CI runners are "
+                         "noisy; ratios are load-independent but not "
+                         "noise-free)")
+    ap.add_argument("--max-abs-diff", type=float, default=1e-3,
+                    help="absolute ceiling for max_abs_diff growth")
+    args = ap.parse_args()
+    files = [Path(f) for f in args.files] or sorted(
+        Path(".").glob("BENCH_*.json"))
+    if not files:
+        print("ERROR: no BENCH_*.json artifacts found", file=sys.stderr)
+        return 1
+    errors = []
+    for path in files:
+        print(f"schema check: {path}")
+        file_errors = check_schema(path)
+        # gate the diff on THIS file's schema only — a malformed sibling
+        # artifact must not suppress another file's regression check
+        if args.against and not file_errors:
+            print(f"diff vs {args.against}:")
+            file_errors += diff_rows(path, args.against, args.tol,
+                                     args.max_abs_diff)
+        errors += file_errors
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    print(f"bench check: {'FAIL' if errors else 'OK'} "
+          f"({len(files)} artifact file(s))")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
