@@ -78,6 +78,7 @@ def run() -> list[dict]:
     runtime_rows += run_fused_vs_blocked()
     runtime_rows += run_serving_queue()
     runtime_rows += run_pallas_vs_xla()
+    runtime_rows += run_resnet18_single_program()
     _write_artifact(runtime_rows)
     return rows + runtime_rows
 
@@ -340,6 +341,53 @@ def run_pallas_vs_xla(*, img: int = 32, scale: int = 16, batch: int = 2,
         "pallas_ms": round(t_pal * 1e3, 2),
         "pallas_over_xla": round(t_pal / t_xla, 2),
         "max_abs_diff": float(jnp.max(jnp.abs(y_xla - y_pal))),
+    }]
+
+
+def run_resnet18_single_program(*, img: int = 64, scale: int = 8,
+                                batch: int = 2, iters: int = 10
+                                ) -> list[dict]:
+    """Residual-workload row: the reduced ResNet-18 (20 CONV + 8 ELTWISE_ADD
+    + 1 POOL + 1 FC, skip tensors held live across each block by the DRAM
+    planner) as ONE Program on the cached jitted executor — steady-state
+    wall clock and GOPS, with the strict per-instruction interpreter and the
+    spec-chain reference oracle as the numerical cross-checks.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.runtime import HybridRuntime
+    from repro.models import resnet
+
+    specs = resnet.resnet18_specs(img, scale, n_classes=10)
+    t0 = time.monotonic()
+    acc = resnet.accelerator(img=img, scale=scale, n_classes=10, batch=batch)
+    t_build = time.monotonic() - t0
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (batch, img, img, 3)), jnp.float32)
+
+    y = jax.block_until_ready(acc(x))
+    t0 = time.monotonic()
+    for _ in range(iters):
+        y = jax.block_until_ready(acc(x))
+    t_exec = (time.monotonic() - t0) / iters
+
+    strict = HybridRuntime(acc.program, strict=True)
+    strict.load_params(acc.params)
+    y_strict = strict.run(x)
+    y_ref = resnet.reference_forward(acc.params, x, specs)
+    macs = sum(s.macs for s in specs)
+    return [{
+        "bench": "table4_vgg16", "name": "runtime/resnet18_single_program",
+        "config": f"img{img}_scale{scale}_batch{batch}",
+        "n_instructions": acc.n_instructions,
+        "n_eltwise": sum(strict.stats[k] for k in ("eltwise",)),
+        "build_ms": round(t_build * 1e3, 1),
+        "exec_ms": round(t_exec * 1e3, 2),
+        "gops": round(2 * macs * batch / 1e9 / t_exec, 1),
+        "strict_bitwise": bool(jnp.array_equal(y, y_strict)),
+        "max_abs_diff_ref": float(jnp.max(jnp.abs(y - y_ref))),
     }]
 
 

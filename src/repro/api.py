@@ -54,7 +54,13 @@ import numpy as np
 from repro.core import perf_model as pm
 from repro.core.compiler import NO_PLAN, LayerPlan, Program, compile_network
 from repro.core.dse import DSEResult, FPGACandidate, TPUCandidate
-from repro.core.hybrid_conv import ConvSpec, FCSpec, PoolSpec
+from repro.core.hybrid_conv import (
+    ConvSpec,
+    DepthwiseSpec,
+    EltwiseSpec,
+    FCSpec,
+    PoolSpec,
+)
 from repro.core.runtime import HybridRuntime
 
 PROGRAM_FORMAT = "hybriddnn-program/v1"
@@ -96,8 +102,9 @@ class Target(Protocol):
 
 
 def random_params(specs: Sequence[Any], seed: int = 0) -> list:
-    """Random ``[(w, b), ...]`` for every parameterized layer (CONV + FC),
-    fan-in scaled — the stand-in for trained weights throughout the repo."""
+    """Random ``[(w, b), ...]`` for every parameterized layer (CONV, FC and
+    DEPTHWISE; POOL and ELTWISE carry no params), fan-in scaled — the
+    stand-in for trained weights throughout the repo."""
     rng = np.random.default_rng(seed)
     params = []
     for s in specs:
@@ -105,6 +112,10 @@ def random_params(specs: Sequence[Any], seed: int = 0) -> list:
             w = jnp.asarray(rng.standard_normal((s.r, s.s, s.c, s.k)),
                             jnp.float32) * (s.r * s.s * s.c) ** -0.5
             params.append((w, jnp.zeros((s.k,), jnp.float32)))
+        elif isinstance(s, DepthwiseSpec):
+            w = jnp.asarray(rng.standard_normal((s.r, s.s, 1, s.c)),
+                            jnp.float32) * (s.r * s.s) ** -0.5
+            params.append((w, jnp.zeros((s.c,), jnp.float32)))
         elif isinstance(s, FCSpec):
             w = jnp.asarray(rng.standard_normal((s.d_in, s.d_out)),
                             jnp.float32) * s.d_in ** -0.5
@@ -121,7 +132,18 @@ def _conv_segments_of(specs) -> list[int]:
     descriptive error instead of an opaque crash downstream."""
     segments, run, seen_fc = [], 0, False
     for s in specs:
+        if isinstance(s, (EltwiseSpec, DepthwiseSpec)):
+            raise ValueError(
+                f"segmented path: {type(s).__name__} {s.name!r} — residual "
+                f"adds and depthwise convs need the single-Program path "
+                f"(segmented=False); the legacy glue only handles "
+                f"(CONV+ POOL)+ FC*")
         if isinstance(s, ConvSpec):
+            if s.inp_from is not None:
+                raise ValueError(
+                    f"segmented path: CONV {s.name!r} reroutes its input "
+                    f"(inp_from={s.inp_from}) — skip wiring needs the "
+                    f"single-Program path (segmented=False)")
             if seen_fc:
                 raise ValueError("segmented path: CONV after the FC tail")
             run += 1
@@ -208,12 +230,13 @@ def build_segmented_request(specs, plans, params, *, strict: bool = False,
 # Program (de)serialization helpers
 # ---------------------------------------------------------------------------
 
-_SPEC_KINDS = {"conv": ConvSpec, "pool": PoolSpec, "fc": FCSpec}
+_SPEC_KINDS = {"conv": ConvSpec, "pool": PoolSpec, "fc": FCSpec,
+               "eltwise": EltwiseSpec, "dw": DepthwiseSpec}
 
 
 def _spec_to_dict(spec) -> dict:
-    kind = ("pool" if isinstance(spec, PoolSpec)
-            else "fc" if isinstance(spec, FCSpec) else "conv")
+    kind = next(k for k, cls in _SPEC_KINDS.items()
+                if type(spec) is cls)
     return {"kind": kind, **dataclasses.asdict(spec)}
 
 
@@ -415,14 +438,15 @@ class Accelerator:
         # from_program-restored accelerator carries
         tname = (self.target if isinstance(self.target, str)
                  else getattr(self.target, "name", None)) or "-"
-        kind_of = {ConvSpec: "conv", PoolSpec: "pool", FCSpec: "fc"}
+        kind_of = {ConvSpec: "conv", PoolSpec: "pool", FCSpec: "fc",
+                   EltwiseSpec: "eltwise", DepthwiseSpec: "dw"}
         head = (f"{len(self.specs)} layers as "
                 + (f"{len(self.segment_runtimes)} segment Programs + host "
                    f"glue" if self.segmented else
                    f"ONE Program ({self.n_instructions} instructions)"))
         lines = [f"Accelerator[{tname}]: {head}",
                  f"  {self._hw_desc()}, batch={self.batch}",
-                 f"  {'layer':<12}{'kind':<6}{'mode':<6}{'df':<4}"
+                 f"  {'layer':<12}{'kind':<9}{'mode':<6}{'df':<4}"
                  f"{'m':>2}{'g_h':>5}{'g_k':>5}  {'latency':>11}{'share':>8}"]
         lats = self.dse.layer_latencies if self.dse else None
         total = self.dse.total_latency if self.dse else None
@@ -436,7 +460,7 @@ class Accelerator:
             lat = _fmt_t(lats[i]) if lats else "          -"
             share = (f"{100 * lats[i] / total:6.1f}%"
                      if lats and total else "      -")
-            lines.append(f"  {s.name:<12}{kind:<6}{mode:<6}{df:<4}"
+            lines.append(f"  {s.name:<12}{kind:<9}{mode:<6}{df:<4}"
                          f"{m:>2}{gh:>5}{gk:>5}  {lat}{share}")
         if total is not None:
             macs = sum(s.macs for s in self.specs)

@@ -1,12 +1,25 @@
 """HybridDNN compiler: DNN graph + DSE plan -> 128-bit instruction stream.
 
 ``compile_network`` accepts the FULL layer sequence of a model — ``ConvSpec``
-CONV layers, ``PoolSpec`` maxpools, and ``FCSpec`` fully-connected layers —
+CONV layers, ``PoolSpec`` maxpools, ``FCSpec`` fully-connected layers,
+``EltwiseSpec`` residual adds, and ``DepthwiseSpec`` depthwise convolutions —
 and lowers it into ONE instruction stream (one ``Program``). The compiler
 fully controls data movement (Sec. 4.1): DRAM buffer planning runs across
 what used to be per-CONV-segment boundaries, POOL layers are a
-LOAD_INP/POOL/SAVE block, and FC layers a LOAD_BIAS/LOAD_INP/LOAD_WGT/FC/SAVE
+LOAD_INP/POOL/SAVE block, FC layers a LOAD_BIAS/LOAD_INP/LOAD_WGT/FC/SAVE
+block, ELTWISE layers a two-source LOAD_INP/LOAD_INP/ELTWISE_ADD/SAVE block,
+and DEPTHWISE layers a LOAD_BIAS/LOAD_INP/LOAD_WGT/DEPTHWISE_CONV/SAVE
 block, all under the same handshake-FIFO hazard discipline as CONV.
+
+The network is no longer a straight line: a ``ConvSpec`` may reroute its
+input (``inp_from`` — ResNet projection shortcuts read the block input) and
+an ``EltwiseSpec`` names a second source (``skip_from``). DRAM activation
+planning is therefore liveness-driven: every activation buffer lives until
+its LAST consumer (which keeps a skip tensor live across the whole residual
+block) and is then recycled through an exact-fit free list, so the
+high-water mark stays close to the straight-line bump allocator's. Weights
+and biases are written once by ``load_params`` before execution and are
+never recycled — an activation may not alias them.
 
 For CONV layers it implements the operation partition of Sec. 4.2.4 and the
 IS/WS loop orders of Figure 4:
@@ -35,8 +48,21 @@ import math
 
 import numpy as np
 
-from repro.core.hybrid_conv import ConvSpec, FCSpec, PoolSpec
-from repro.core.isa import Instruction, Opcode, encode_stream, pack_fc_dims
+from repro.core.hybrid_conv import (
+    ConvSpec,
+    DepthwiseSpec,
+    EltwiseSpec,
+    FCSpec,
+    PoolSpec,
+    same_pad,
+)
+from repro.core.isa import (
+    Instruction,
+    Opcode,
+    encode_stream,
+    pack_dw_geom,
+    pack_fc_dims,
+)
 from repro.core.layouts import layout_for_mode
 from repro.core.winograd import R_WINO, pt_for
 
@@ -53,7 +79,7 @@ class LayerPlan:
 
 @dataclasses.dataclass(frozen=True)
 class CompiledLayer:
-    spec: ConvSpec | PoolSpec | FCSpec
+    spec: ConvSpec | PoolSpec | FCSpec | EltwiseSpec | DepthwiseSpec
     plan: LayerPlan
     layer_id: int
     inp_addr: int               # DRAM base of this layer's input fmap
@@ -66,7 +92,19 @@ class CompiledLayer:
     # derived group geometry
     row_groups: tuple[tuple[int, int], ...]   # output-row ranges per group
     k_groups: tuple[tuple[int, int], ...]     # output-channel ranges
-    kind: str = "conv"          # "conv" | "pool" | "fc"
+    kind: str = "conv"          # "conv" | "pool" | "fc" | "eltwise" | "dw"
+    # dataflow wiring (skip connections / rerouted inputs)
+    inp_src: int = -2           # producer layer id of the primary input
+    #                             (-1 = network input; -2 = "previous layer",
+    #                             the legacy sentinel for layers built
+    #                             without explicit wiring)
+    skip_src: int = -2          # ELTWISE only: producer of the skip operand
+    skip_addr: int = -1         # ELTWISE only: DRAM base of the skip operand
+    skip_layout: str = "spat"   # layout the skip operand is stored in
+
+    def primary_src(self) -> int:
+        """Producer layer id of the primary input (-1 = network input)."""
+        return self.layer_id - 1 if self.inp_src == -2 else self.inp_src
 
 
 @dataclasses.dataclass
@@ -97,7 +135,8 @@ class Program:
             for cl in self.layers:
                 h.update(repr((cl.kind, cl.spec, cl.plan, cl.row_groups,
                                cl.k_groups, cl.inp_layout, cl.out_layout,
-                               cl.out_m)).encode())
+                               cl.out_m, cl.inp_src, cl.skip_src,
+                               cl.skip_layout)).encode())
             self._schedule_key = h.hexdigest()
         return self._schedule_key
 
@@ -128,7 +167,8 @@ def _wgt_words(spec: ConvSpec, plan: LayerPlan, k_lo: int, k_hi: int) -> int:
 
 def _inp_words(spec: ConvSpec, row_lo: int, row_hi: int) -> int:
     """Input rows needed for output rows [row_lo, row_hi) incl. halo."""
-    pad = (spec.r - 1) // 2 if spec.padding.upper() == "SAME" else 0
+    pad = (same_pad(spec.h, spec.r, spec.stride)[0]
+           if spec.padding.upper() == "SAME" else 0)
     in_lo = max(0, row_lo * spec.stride - pad)
     in_hi = min(spec.h, (row_hi - 1) * spec.stride + spec.r - pad)
     return (in_hi - in_lo) * spec.w * spec.c
@@ -139,7 +179,36 @@ def _kind(spec) -> str:
         return "pool"
     if isinstance(spec, FCSpec):
         return "fc"
+    if isinstance(spec, EltwiseSpec):
+        return "eltwise"
+    if isinstance(spec, DepthwiseSpec):
+        return "dw"
     return "conv"
+
+
+def _sources(lid: int, spec) -> list[int]:
+    """Producer layer ids layer ``lid`` reads (-1 = network input).
+
+    The first entry is always the primary input; an ``EltwiseSpec``
+    additionally reads its ``skip_from`` operand.
+    """
+    if isinstance(spec, ConvSpec) and spec.inp_from is not None:
+        srcs = [spec.inp_from]
+    else:
+        srcs = [lid - 1]
+    if isinstance(spec, EltwiseSpec):
+        srcs.append(spec.skip_from)
+    return srcs
+
+
+def _out_shape(spec) -> tuple[int, int, int] | None:
+    """(ho, wo, channels) of a layer's output fmap; None for FC (a vector
+    output cannot feed a skip connection or a rerouted conv)."""
+    if isinstance(spec, FCSpec):
+        return None
+    ho, wo = spec.out_hw
+    ch = spec.k if isinstance(spec, ConvSpec) else spec.c
+    return (ho, wo, ch)
 
 
 # fixed plan for layers the DSE does not parameterize (pool/fc); the DSE
@@ -149,21 +218,27 @@ NO_PLAN = LayerPlan("spat", "is")
 
 
 def compile_network(
-    specs: list[ConvSpec | PoolSpec | FCSpec],
+    specs: list[ConvSpec | PoolSpec | FCSpec | EltwiseSpec | DepthwiseSpec],
     plans: list[LayerPlan | None],
     *,
     input_layout: str | None = None,
 ) -> Program:
-    """Compile a full layer chain (CONV / POOL / FC) into ONE instruction
-    stream.
+    """Compile a full layer chain (CONV / POOL / FC / ELTWISE / DEPTHWISE)
+    into ONE instruction stream.
 
-    ``plans`` aligns with ``specs``; entries for POOL/FC layers are ignored
+    ``plans`` aligns with ``specs``; entries for non-CONV layers are ignored
     (``None`` is accepted). The LOAD module only performs identity loads
     (Sec. 4.3), so the network input must be stored in the layout of layer
     0's mode — the runtime's ``write_input`` does that host-side conversion.
-    SAVE always writes the layout the *next consumer* wants: a CONV or POOL
-    followed by a Winograd-mode CONV stores tile-major WINO; anything
-    followed by POOL/FC stores SPAT.
+    SAVE always writes the layout the *next consumer* wants: tile-major WINO
+    only when the sole consumer is the sequential next CONV in Winograd
+    mode; outputs with a skip/rerouted consumer (or a POOL/FC/ELTWISE/DW
+    successor) store SPAT.
+
+    DRAM activation buffers are liveness-planned: each fmap lives until its
+    LAST consumer (an ``EltwiseSpec.skip_from`` or ``ConvSpec.inp_from``
+    reference extends the producer's lifetime across the residual block),
+    then its address range is recycled through an exact-fit free list.
     """
     assert len(specs) == len(plans)
     plans = [NO_PLAN if _kind(s) != "conv" else p
@@ -171,9 +246,46 @@ def compile_network(
     if input_layout is None:
         input_layout = (layout_for_mode(plans[0].mode)
                         if _kind(specs[0]) == "conv" else "spat")
+
+    # -- dataflow graph: sources, consumers, liveness -------------------
+    consumers: dict[int, list[int]] = {}
+    for lid, spec in enumerate(specs):
+        srcs = _sources(lid, spec)
+        # the primary source is explicitly wired only via ConvSpec.inp_from;
+        # every extra source (an EltwiseSpec skip) is explicit by definition
+        explicit = [isinstance(spec, ConvSpec) and spec.inp_from is not None]
+        explicit += [True] * (len(srcs) - 1)
+        for src, exp in zip(srcs, explicit):
+            if not -1 <= src < lid:
+                raise ValueError(
+                    f"layer {lid} ({spec.name!r}) reads layer {src}: "
+                    f"sources must be earlier layers (-1 = network input)")
+            if exp and src >= 0 and _out_shape(specs[src]) is None:
+                raise ValueError(
+                    f"layer {lid} ({spec.name!r}) reads FC layer {src} "
+                    f"({specs[src].name!r}): an FC output cannot feed a "
+                    f"skip/rerouted fmap consumer")
+            consumers.setdefault(src, []).append(lid)
+    last_use = {src: max(lids) for src, lids in consumers.items()}
+
+    def src_shape(src: int) -> tuple[int, int, int] | None:
+        if src == -1:
+            s0 = specs[0]
+            return None if _kind(s0) == "fc" else (s0.h, s0.w, s0.c)
+        return _out_shape(specs[src])
+
+    def check_operand(lid: int, spec, src: int, operand: str):
+        have = src_shape(src)
+        want = (spec.h, spec.w, spec.c)
+        if have != want:
+            raise ValueError(
+                f"layer {lid} ({spec.name!r}) {operand} reads layer {src} "
+                f"shaped {have}, expected {want}")
+
     instrs: list[Instruction] = []
     layers: list[CompiledLayer] = []
     alloc = 0
+    free: list[tuple[int, int]] = []    # recycled activation (addr, words)
 
     def bump(words: int) -> int:
         nonlocal alloc
@@ -181,33 +293,61 @@ def compile_network(
         alloc += words
         return base
 
+    def alloc_act(words: int) -> int:
+        # exact-fit reuse of DEAD activation buffers only. Weights/biases
+        # always bump: load_params writes them once before execution, so a
+        # run-time activation write may never alias them.
+        for i, (addr, w) in enumerate(free):
+            if w == words:
+                free.pop(i)
+                return addr
+        return bump(words)
+
     def out_layout_for(lid: int) -> tuple[str, int]:
-        """Layout SAVE(lid) writes = what layer lid+1's LOAD wants."""
-        if lid + 1 >= len(specs) or _kind(specs[lid + 1]) != "conv":
-            return "spat", 0
-        nxt = plans[lid + 1]
-        layout = layout_for_mode(nxt.mode)
-        return layout, (nxt.m if layout == "wino" else 0)
+        """Layout SAVE(lid) writes = what the consumer's LOAD wants."""
+        cons = consumers.get(lid, [])
+        if (cons == [lid + 1] and _kind(specs[lid + 1]) == "conv"
+                and specs[lid + 1].inp_from is None):
+            nxt = plans[lid + 1]
+            layout = layout_for_mode(nxt.mode)
+            return layout, (nxt.m if layout == "wino" else 0)
+        return "spat", 0
 
     # allocate DRAM: input of layer 0, then per layer (weights, bias, output)
     s0 = specs[0]
-    inp_addr = bump(s0.d_in if _kind(s0) == "fc" else s0.h * s0.w * s0.c)
-    inp_layout = input_layout
+    in_words = s0.d_in if _kind(s0) == "fc" else s0.h * s0.w * s0.c
+    # produced[src] = (addr, words, stored layout) of every fmap a
+    # not-yet-executed consumer may still read; entries are popped when
+    # their last consumer retires, so a stale read is a loud KeyError
+    produced: dict[int, tuple[int, int, str]] = {
+        -1: (bump(in_words), in_words, input_layout)}
 
     for lid, (spec, plan) in enumerate(zip(specs, plans)):
         kind = _kind(spec)
         out_layout, out_m = out_layout_for(lid)
+        psrc = _sources(lid, spec)[0]
+        if kind == "conv" and spec.inp_from is not None:
+            check_operand(lid, spec, psrc, "input (inp_from)")
+        inp_addr, _, inp_layout = produced[psrc]
+
+        def finish(cl: CompiledLayer, words: int):
+            """Register the layer + its output fmap, retire dead sources."""
+            layers.append(cl)
+            produced[lid] = (cl.out_addr, words, cl.out_layout)
+            for src in set(_sources(lid, spec)):
+                if last_use.get(src) == lid:
+                    addr, w, _ = produced.pop(src)
+                    free.append((addr, w))
 
         if kind == "pool":
             ho, wo = spec.out_hw
-            out_addr = bump(ho * wo * spec.c)
+            out_addr = alloc_act(ho * wo * spec.c)
             cl = CompiledLayer(
                 spec=spec, plan=plan, layer_id=lid, kind="pool",
                 inp_addr=inp_addr, wgt_addr=-1, bias_addr=-1,
                 out_addr=out_addr, inp_layout=inp_layout,
-                out_layout=out_layout, out_m=out_m,
+                out_layout=out_layout, out_m=out_m, inp_src=psrc,
                 row_groups=((0, ho),), k_groups=((0, spec.c),))
-            layers.append(cl)
             instrs.append(Instruction(
                 Opcode.LOAD_INP, buff_base=0, dram_base=inp_addr,
                 size=spec.h * spec.w * spec.c, layer_id=lid))
@@ -217,20 +357,19 @@ def compile_network(
             instrs.append(Instruction(
                 Opcode.SAVE, buff_base=0, dram_base=out_addr,
                 layout_out_wino=(out_layout == "wino"), layer_id=lid))
-            inp_addr, inp_layout = out_addr, out_layout
+            finish(cl, ho * wo * spec.c)
             continue
 
         if kind == "fc":
             wgt_addr = bump(spec.d_in * spec.d_out)
             bias_addr = bump(spec.d_out)
-            out_addr = bump(spec.d_out)
+            out_addr = alloc_act(spec.d_out)
             cl = CompiledLayer(
                 spec=spec, plan=plan, layer_id=lid, kind="fc",
                 inp_addr=inp_addr, wgt_addr=wgt_addr, bias_addr=bias_addr,
                 out_addr=out_addr, inp_layout=inp_layout,
-                out_layout="spat", out_m=0,
+                out_layout="spat", out_m=0, inp_src=psrc,
                 row_groups=((0, 1),), k_groups=((0, spec.d_out),))
-            layers.append(cl)
             instrs.append(Instruction(
                 Opcode.LOAD_BIAS, buff_base=0, dram_base=bias_addr,
                 size=spec.d_out, layer_id=lid))
@@ -246,13 +385,80 @@ def compile_network(
             instrs.append(Instruction(
                 Opcode.SAVE, buff_base=0, dram_base=out_addr,
                 relu_flag=spec.relu, layer_id=lid))
-            inp_addr, inp_layout = out_addr, "spat"
+            finish(cl, spec.d_out)
+            continue
+
+        if kind == "eltwise":
+            ssrc = spec.skip_from
+            check_operand(lid, spec, psrc, "primary operand")
+            check_operand(lid, spec, ssrc, "skip operand")
+            skip_addr, _, skip_layout = produced[ssrc]
+            n_el = spec.h * spec.w * spec.c
+            out_addr = alloc_act(n_el)
+            cl = CompiledLayer(
+                spec=spec, plan=plan, layer_id=lid, kind="eltwise",
+                inp_addr=inp_addr, wgt_addr=-1, bias_addr=-1,
+                out_addr=out_addr, inp_layout=inp_layout,
+                out_layout=out_layout, out_m=out_m,
+                inp_src=psrc, skip_src=ssrc, skip_addr=skip_addr,
+                skip_layout=skip_layout,
+                row_groups=((0, spec.h),), k_groups=((0, spec.c),))
+            # two-source block: primary in input slot 0 (tag (lid, 0)),
+            # skip in input slot 1 (tag (lid, 1)); the ELTWISE word names
+            # both slots in BUFF_BASE and the skip DRAM base in word2 so
+            # the stream is a self-checking two-operand read
+            instrs.append(Instruction(
+                Opcode.LOAD_INP, buff_base=(0 << 1) | 0,
+                dram_base=inp_addr, size=n_el, layer_id=lid))
+            instrs.append(Instruction(
+                Opcode.LOAD_INP, buff_base=(1 << 1) | 1,
+                dram_base=skip_addr, size=n_el, layer_id=lid))
+            instrs.append(Instruction(
+                Opcode.ELTWISE_ADD, buff_base=0 | (1 << 1),
+                dram_base=skip_addr, size=n_el,
+                relu_flag=spec.relu, layer_id=lid))
+            instrs.append(Instruction(
+                Opcode.SAVE, buff_base=0, dram_base=out_addr,
+                layout_out_wino=(out_layout == "wino"),
+                relu_flag=spec.relu, layer_id=lid))
+            finish(cl, n_el)
+            continue
+
+        if kind == "dw":
+            ho, wo = spec.out_hw
+            wgt_addr = bump(spec.r * spec.s * spec.c)
+            bias_addr = bump(spec.c)
+            out_addr = alloc_act(ho * wo * spec.c)
+            cl = CompiledLayer(
+                spec=spec, plan=plan, layer_id=lid, kind="dw",
+                inp_addr=inp_addr, wgt_addr=wgt_addr, bias_addr=bias_addr,
+                out_addr=out_addr, inp_layout=inp_layout,
+                out_layout=out_layout, out_m=out_m, inp_src=psrc,
+                row_groups=((0, ho),), k_groups=((0, spec.c),))
+            instrs.append(Instruction(
+                Opcode.LOAD_BIAS, buff_base=0, dram_base=bias_addr,
+                size=spec.c, layer_id=lid))
+            instrs.append(Instruction(
+                Opcode.LOAD_INP, buff_base=0, dram_base=inp_addr,
+                size=spec.h * spec.w * spec.c, layer_id=lid))
+            instrs.append(Instruction(
+                Opcode.LOAD_WGT, buff_base=0, dram_base=wgt_addr,
+                size=spec.r * spec.s * spec.c, layer_id=lid))
+            instrs.append(Instruction(
+                Opcode.DEPTHWISE_CONV, buff_base=0,
+                size=pack_dw_geom(spec.r, spec.s, spec.stride),
+                relu_flag=spec.relu, layer_id=lid))
+            instrs.append(Instruction(
+                Opcode.SAVE, buff_base=0, dram_base=out_addr,
+                layout_out_wino=(out_layout == "wino"),
+                relu_flag=spec.relu, layer_id=lid))
+            finish(cl, ho * wo * spec.c)
             continue
 
         ho, wo = spec.out_hw
         wgt_addr = bump(_wgt_words(spec, plan, 0, spec.k))
         bias_addr = bump(spec.k)
-        out_addr = bump(ho * wo * spec.k)
+        out_addr = alloc_act(ho * wo * spec.k)
 
         align = plan.m if plan.mode == "wino" else 1
         row_groups = tuple(_split(ho, plan.g_h, align))
@@ -262,8 +468,8 @@ def compile_network(
             spec=spec, plan=plan, layer_id=lid,
             inp_addr=inp_addr, wgt_addr=wgt_addr, bias_addr=bias_addr,
             out_addr=out_addr, inp_layout=inp_layout, out_layout=out_layout,
-            out_m=out_m, row_groups=row_groups, k_groups=k_groups)
-        layers.append(cl)
+            out_m=out_m, inp_src=psrc,
+            row_groups=row_groups, k_groups=k_groups)
 
         wino_f = plan.mode == "wino"
         ws = plan.dataflow == "ws"
@@ -313,7 +519,6 @@ def compile_network(
                     instrs.append(comp(ih, kg, ih % 2, kg % 2))
                     instrs.append(save(ih, kg))  # (row, K-group) block
 
-        inp_addr = out_addr
-        inp_layout = out_layout
+        finish(cl, ho * wo * spec.k)
 
     return Program(instructions=instrs, layers=layers, dram_size_words=alloc)

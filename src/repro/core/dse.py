@@ -23,7 +23,8 @@ from typing import Sequence
 
 from repro.core import perf_model as pm
 from repro.core.compiler import NO_PLAN, LayerPlan
-from repro.core.hybrid_conv import ConvSpec, FCSpec, PoolSpec
+from repro.core.hybrid_conv import (ConvSpec, DepthwiseSpec, EltwiseSpec,
+                                    FCSpec, PoolSpec)
 from repro.core.winograd import pt_for
 
 
@@ -106,8 +107,11 @@ def _fpga_layer_best(t: pm.FPGATarget, cand: FPGACandidate,
     return best
 
 
+LayerSpec = ConvSpec | PoolSpec | FCSpec | EltwiseSpec | DepthwiseSpec
+
+
 def run_fpga_dse(t: pm.FPGATarget,
-                 specs: Sequence[ConvSpec | PoolSpec | FCSpec]) -> DSEResult:
+                 specs: Sequence[LayerSpec]) -> DSEResult:
     if not specs:
         raise DSEError("FPGA DSE: empty layer list — nothing to plan")
     cands = enumerate_fpga_candidates(t)
@@ -131,6 +135,12 @@ def run_fpga_dse(t: pm.FPGATarget,
             elif isinstance(spec, FCSpec):
                 plan, lat = NO_PLAN, pm.fpga_fc_latency(
                     t_inst, spec, cand.pi, cand.po, cand.pt)
+            elif isinstance(spec, EltwiseSpec):
+                plan, lat = NO_PLAN, pm.fpga_eltwise_latency(
+                    t_inst, spec, cand.pi, cand.pt)
+            elif isinstance(spec, DepthwiseSpec):
+                plan, lat = NO_PLAN, pm.fpga_dw_latency(
+                    t_inst, spec, cand.pi, cand.pt)
             else:
                 plan, lat = _fpga_layer_best(t_inst, cand, spec)
             plans.append(plan)
@@ -198,7 +208,7 @@ def _tpu_layer_best(t: pm.TPUTarget, cand: TPUCandidate, spec: ConvSpec,
     return best
 
 
-def run_tpu_dse(specs: Sequence[ConvSpec | PoolSpec | FCSpec], batch: int = 1,
+def run_tpu_dse(specs: Sequence[LayerSpec], batch: int = 1,
                 t: pm.TPUTarget = pm.V5E) -> DSEResult:
     if not specs:
         raise DSEError("TPU DSE: empty layer list — nothing to plan")
@@ -218,6 +228,10 @@ def run_tpu_dse(specs: Sequence[ConvSpec | PoolSpec | FCSpec], batch: int = 1,
             elif isinstance(spec, FCSpec):
                 plan, lat = NO_PLAN, pm.tpu_fc_latency(
                     t, spec, batch, blocks=(cand.bm, cand.bk, cand.bn))
+            elif isinstance(spec, EltwiseSpec):
+                plan, lat = NO_PLAN, pm.tpu_eltwise_latency(t, spec, batch)
+            elif isinstance(spec, DepthwiseSpec):
+                plan, lat = NO_PLAN, pm.tpu_dw_latency(t, spec, batch)
             else:
                 plan, lat = _tpu_layer_best(t, cand, spec, batch)
             plans.append(plan)

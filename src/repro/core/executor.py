@@ -85,8 +85,14 @@ import numpy as np
 
 from repro.core import layouts
 from repro.core.compiler import CompiledLayer, Program
-from repro.core.hybrid_conv import dense, hybrid_conv2d, max_pool2d
-from repro.core.isa import Opcode, unpack_fc_dims
+from repro.core.hybrid_conv import (
+    dense,
+    depthwise_conv2d,
+    hybrid_conv2d,
+    max_pool2d,
+    same_pad,
+)
+from repro.core.isa import Opcode, unpack_dw_geom, unpack_fc_dims
 from repro.core.winograd import transform_weights, winograd_apply_pretransformed
 
 
@@ -141,8 +147,8 @@ def resolve_backend(backend: str, interpret: bool | None
 
 def _fresh_stats() -> dict[str, int]:
     return {"load_inp": 0, "load_wgt": 0, "load_bias": 0,
-            "comp": 0, "pool": 0, "fc": 0, "save": 0,
-            "inp_words": 0, "wgt_words": 0}
+            "comp": 0, "pool": 0, "fc": 0, "eltwise": 0, "dw": 0,
+            "save": 0, "inp_words": 0, "wgt_words": 0}
 
 
 # ---------------------------------------------------------------------------
@@ -247,6 +253,51 @@ def validate_schedule(program: Program) -> dict[str, int]:
                 raise HazardError(f"FC L{ins.layer_id}: stale bias buffer")
             out_blocks.add((0, 0))
             stats["fc"] += 1
+        elif op == Opcode.ELTWISE_ADD:
+            pslot = ins.buff_base & 1
+            sslot = (ins.buff_base >> 1) & 1
+            n_el = cl.spec.h * cl.spec.w * cl.spec.c
+            if ins.size != n_el:
+                raise HazardError(
+                    f"ELTWISE L{ins.layer_id}: word3 element count "
+                    f"{ins.size} disagrees with compiled spec ({n_el})")
+            if ins.dram_base != cl.skip_addr:
+                raise HazardError(
+                    f"ELTWISE L{ins.layer_id}: word2 skip base "
+                    f"{ins.dram_base} disagrees with compiled skip operand "
+                    f"({cl.skip_addr})")
+            if inp_tags[pslot] != (ins.layer_id, 0):
+                raise HazardError(
+                    f"ELTWISE L{ins.layer_id}: primary input slot {pslot} "
+                    f"holds {inp_tags[pslot]}")
+            if inp_tags[sslot] != (ins.layer_id, 1):
+                raise HazardError(
+                    f"ELTWISE L{ins.layer_id}: skip input slot {sslot} "
+                    f"holds {inp_tags[sslot]}")
+            out_blocks.add((0, 0))
+            stats["eltwise"] += 1
+        elif op == Opcode.DEPTHWISE_CONV:
+            islot = ins.buff_base & 1
+            wslot = (ins.buff_base >> 1) & 1
+            geom = unpack_dw_geom(ins.size)
+            if geom != (cl.spec.r, cl.spec.s, cl.spec.stride):
+                raise HazardError(
+                    f"DEPTHWISE L{ins.layer_id}: word3 geometry {geom} "
+                    f"disagrees with compiled spec "
+                    f"({cl.spec.r}, {cl.spec.s}, {cl.spec.stride})")
+            if inp_tags[islot] != (ins.layer_id, 0):
+                raise HazardError(
+                    f"DEPTHWISE L{ins.layer_id}: input slot {islot} holds "
+                    f"{inp_tags[islot]}")
+            if wgt_tags[wslot] != (ins.layer_id, 0):
+                raise HazardError(
+                    f"DEPTHWISE L{ins.layer_id}: weight slot {wslot} holds "
+                    f"{wgt_tags[wslot]}")
+            if bias_tag != (ins.layer_id,):
+                raise HazardError(
+                    f"DEPTHWISE L{ins.layer_id}: stale bias buffer")
+            out_blocks.add((0, 0))
+            stats["dw"] += 1
         elif op == Opcode.SAVE:
             ih = ins.size & 0xFFF
             kg = (ins.size >> 12) & 0xFFF
@@ -297,7 +348,8 @@ def slice_input_span(cl: CompiledLayer, x_nhwc: jax.Array,
     whole-layer fusion provably equivalent to the blocked assembly.
     """
     spec = cl.spec
-    pad = (spec.r - 1) // 2 if spec.padding.upper() == "SAME" else 0
+    pad = (same_pad(spec.h, spec.r, spec.stride)[0]
+           if spec.padding.upper() == "SAME" else 0)
     in_lo = r0 * spec.stride - pad
     in_hi = (r1 - 1) * spec.stride + spec.r - pad
     pad_top = max(0, -in_lo)
@@ -311,8 +363,7 @@ def slice_input_span(cl: CompiledLayer, x_nhwc: jax.Array,
 def width_pad(cl: CompiledLayer) -> tuple[int, int]:
     """Horizontal conv padding (vertical halo is materialized by the slice)."""
     if cl.spec.padding.upper() == "SAME":
-        pad_w = (cl.spec.s - 1) // 2
-        return (pad_w, cl.spec.s - 1 - pad_w)
+        return same_pad(cl.spec.w, cl.spec.s, cl.spec.stride)
     return (0, 0)
 
 
@@ -343,11 +394,15 @@ def conv_block_forward(cl: CompiledLayer, x_slab: jax.Array,
         return winograd_apply_pretransformed(
             x_p, w_grp, b_grp, plan.m, relu=relu,
             padding="VALID", out_dtype=dtype)
+    # the XLA lowering is dataflow-oblivious (and hybrid_conv2d now rejects
+    # a dataflow/interpret that cannot take effect), so only forward the
+    # plan's dataflow to the Pallas PE
+    pallas = backend == "pallas"
     return hybrid_conv2d(
         x_slab, w_grp, b_grp, mode="spat",
-        dataflow=plan.dataflow, stride=spec.stride,
+        dataflow=plan.dataflow if pallas else "is", stride=spec.stride,
         relu=relu, padding=((0, 0), wpad),
-        use_pallas=backend == "pallas", interpret=interpret,
+        use_pallas=pallas, interpret=interpret,
         out_dtype=dtype)
 
 
@@ -372,6 +427,9 @@ class LayerLowering:
       hand-built stream, unequal k-group sizes with mixed RELU bits, or the
       Pallas backend where vmapping the PE kernel is not supported): keep
       the literal per-block lowering. ``reason`` says why.
+    * ``"single"`` — the opcode is already one dispatch by construction
+      (ELTWISE_ADD two-source add, DEPTHWISE_CONV grouped conv): nothing to
+      fuse, the verdict is explicit so the optimizer's coverage is total.
     """
     kind: str
     relu: bool | None = None
@@ -398,7 +456,8 @@ def _stream_overrides(program: Program):
             ih = ins.size & 0xFFF
             kg = (ins.size >> 12) & 0xFFF
             relu_bits[(ins.layer_id, ih, kg)] = ins.relu_flag
-        elif ins.opcode == Opcode.FC:
+        elif ins.opcode in (Opcode.FC, Opcode.ELTWISE_ADD,
+                            Opcode.DEPTHWISE_CONV):
             relu_bits[(ins.layer_id, 0, 0)] = ins.relu_flag
         elif ins.opcode == Opcode.POOL:
             pool_cfg[ins.layer_id] = (ins.pool_window, ins.pool_stride)
@@ -443,15 +502,27 @@ def analyze_layer(cl: CompiledLayer, relu_of, *,
 def analyze_program(program: Program, *, backend: str = "xla",
                     relu_bits: dict | None = None
                     ) -> dict[int, LayerLowering]:
-    """The optimizer pass: one :class:`LayerLowering` verdict per CONV
-    layer (POOL and FC blocks are already single dispatches). Pure static
-    analysis over the instruction stream + compiled geometry — runs once
-    per lowering, before any tracing. ``relu_bits`` lets a caller that
-    already decoded the stream (``lower_program``) share the one walk."""
+    """The optimizer pass: one :class:`LayerLowering` verdict per layer
+    that lowers through the PE — CONV layers get the fused/stacked/block
+    analysis; ELTWISE and DEPTHWISE layers get an explicit ``"single"``
+    verdict (one dispatch by construction; POOL and FC likewise but
+    predate the verdict table and stay implicit). Pure static analysis
+    over the instruction stream + compiled geometry — runs once per
+    lowering, before any tracing. ``relu_bits`` lets a caller that already
+    decoded the stream (``lower_program``) share the one walk."""
     if relu_bits is None:
         relu_bits, _ = _stream_overrides(program)
     out = {}
     for cl in program.layers:
+        if cl.kind == "eltwise":
+            out[cl.layer_id] = LayerLowering(
+                "single", reason="ELTWISE_ADD is one two-source dispatch")
+            continue
+        if cl.kind == "dw":
+            out[cl.layer_id] = LayerLowering(
+                "single", reason="DEPTHWISE_CONV is one grouped-conv "
+                                 "dispatch")
+            continue
         if cl.kind != "conv":
             continue
         out[cl.layer_id] = analyze_layer(
@@ -577,17 +648,52 @@ def fc_forward(cl: CompiledLayer, w: jax.Array, bias: jax.Array,
                  interpret=interpret)
 
 
+def eltwise_forward(cl: CompiledLayer, x_stored: jax.Array,
+                    skip_stored: jax.Array, relu: bool) -> jax.Array:
+    """One ELTWISE_ADD block: two identity LOAD views -> add (+ ReLU).
+
+    ``x_stored``/``skip_stored`` are the producers' STORED tensors (the
+    compiler records each operand's layout on the CompiledLayer); like POOL,
+    the add is element-parallel VPU work on both backends. Shared by the
+    interpreter and the lowered executor so the residual-add math can never
+    drift between paths.
+    """
+    hw = (cl.spec.h, cl.spec.w)
+    a = layouts.load_view(x_stored, cl.inp_layout, hw=hw)
+    b = layouts.load_view(skip_stored, cl.skip_layout, hw=hw)
+    y = a.astype(jnp.float32) + b.astype(jnp.float32)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y.astype(x_stored.dtype)
+
+
+def depthwise_forward(cl: CompiledLayer, w: jax.Array, bias: jax.Array,
+                      x_stored: jax.Array, relu: bool) -> jax.Array:
+    """One DEPTHWISE_CONV block: identity LOAD view -> per-channel conv.
+
+    Depthwise conv is VPU work, not an MXU GEMM — like POOL it lowers
+    through the same XLA grouped-conv op on both backends (see
+    docs/ARCHITECTURE.md). Shared by the interpreter and the lowered
+    executor.
+    """
+    x = layouts.load_view(x_stored, cl.inp_layout, hw=(cl.spec.h, cl.spec.w))
+    return depthwise_conv2d(
+        x, w, bias, stride=cl.spec.stride, padding=cl.spec.padding,
+        relu=relu, out_dtype=x_stored.dtype)
+
+
 def n_param_layers(program: Program) -> int:
-    """Layers that carry (w, bias) params — CONV and FC; POOL has none."""
-    return sum(cl.kind != "pool" for cl in program.layers)
+    """Layers that carry (w, bias) params — CONV, FC and DEPTHWISE; POOL
+    and ELTWISE have none."""
+    return sum(cl.kind not in ("pool", "eltwise") for cl in program.layers)
 
 
 def check_param_count(program: Program, params: list):
     if len(params) != n_param_layers(program):
         raise ValueError(
             f"expected {n_param_layers(program)} (w, bias) entries — one per "
-            f"CONV/FC layer in network order, POOL layers carry no params — "
-            f"got {len(params)}")
+            f"CONV/FC/DEPTHWISE layer in network order, POOL and ELTWISE "
+            f"layers carry no params — got {len(params)}")
 
 
 def to_dram_params(program: Program, params: list) -> list:
@@ -603,7 +709,7 @@ def to_dram_params(program: Program, params: list) -> list:
     out = []
     it = iter(params)
     for cl in program.layers:
-        if cl.kind == "pool":
+        if cl.kind in ("pool", "eltwise"):
             continue
         w, b = next(it)
         if cl.kind == "conv" and cl.plan.mode == "wino":
@@ -647,35 +753,65 @@ def lower_program(program: Program, *, backend: str = "xla",
                                  relu_bits=relu_bits)
                  if opt_level >= 1 else {})
 
+    # dataflow wiring, resolved statically: which producer each layer reads
+    # (the stash below holds every tensor a not-yet-executed consumer still
+    # needs — a skip tensor stays live across its residual block exactly as
+    # the compiler's DRAM planner keeps it live) and when each producer's
+    # entry retires (so the traced stash mirrors the planner's liveness
+    # instead of pinning every activation to the end of the network)
+    last_use: dict[int, int] = {}
+    for cl in program.layers:
+        srcs = {cl.primary_src()}
+        if cl.kind == "eltwise":
+            srcs.add(cl.skip_src)
+        for src in srcs:
+            last_use[src] = cl.layer_id
+
     def execute(params: list, x_nhwc: jax.Array) -> jax.Array:
         cl0 = program.layers[0]
         x = x_nhwc
         if cl0.inp_layout == "wino":
             x = layouts.save_transform(x, "wino", cl0.plan.m)
+        stash: dict[int, jax.Array] = {-1: x}   # produced, still-live fmaps
         pi = 0
+        y = x
         for cl in program.layers:
+            x_in = stash[cl.primary_src()]
+            relu00 = relu_bits.get((cl.layer_id, 0, 0), cl.spec.relu) \
+                if cl.kind != "pool" else False
             if cl.kind == "pool":
                 window, stride = pool_cfg.get(
                     cl.layer_id, (cl.spec.window, cl.spec.stride))
-                x = pool_forward(cl, x, window, stride)
-                if cl.out_layout == "wino":
-                    x = layouts.save_transform(x, "wino", cl.out_m)
-                continue
-            w_eff, b = params[pi]
-            pi += 1
-            if cl.kind == "fc":
-                x = fc_forward(cl, w_eff, b, x,
-                               relu_bits.get((cl.layer_id, 0, 0),
-                                             cl.spec.relu),
+                y = pool_forward(cl, x_in, window, stride)
+            elif cl.kind == "eltwise":
+                y = eltwise_forward(cl, x_in, stash[cl.skip_src], relu00)
+            elif cl.kind == "fc":
+                w_eff, b = params[pi]
+                pi += 1
+                y = fc_forward(cl, w_eff, b, x_in, relu00,
                                backend=backend, interpret=interpret)
+            elif cl.kind == "dw":
+                w_eff, b = params[pi]
+                pi += 1
+                y = depthwise_forward(cl, w_eff, b, x_in, relu00)
             else:
-                x = _layer_forward(
-                    cl, w_eff, b, x,
+                w_eff, b = params[pi]
+                pi += 1
+                y = _layer_forward(
+                    cl, w_eff, b, x_in,
                     lambda ih, kg, cl=cl: relu_bits.get((cl.layer_id, ih, kg),
                                                         cl.spec.relu),
                     backend=backend, interpret=interpret,
                     lowering=lowerings.get(cl.layer_id))
-        return x
+            # _layer_forward applies the SAVE-side layout reorder itself;
+            # the single-dispatch kinds store what the consumer's LOAD wants
+            if cl.kind != "conv" and cl.out_layout == "wino":
+                y = layouts.save_transform(y, "wino", cl.out_m)
+            stash[cl.layer_id] = y
+            for src in list(stash):
+                if last_use.get(src, -2) <= cl.layer_id and src != cl.layer_id:
+                    del stash[src]
+        return y
 
     return execute
 

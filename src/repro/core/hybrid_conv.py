@@ -26,9 +26,32 @@ Mode = Literal["spat", "wino"]
 Dataflow = Literal["is", "ws"]
 
 
+def same_pad(size: int, k: int, stride: int) -> tuple[int, int]:
+    """XLA/TF "SAME" padding for one spatial dim: ``(pad_lo, pad_hi)``.
+
+    The rule is stride-aware — ``total = (ceil(size/stride) - 1) * stride
+    + k - size``, low half rounded DOWN — so for an even input under
+    stride 2 the padding is asymmetric (e.g. h=32, r=3, stride=2 gives
+    (0, 1), NOT the stride-1 rule's (1, 1)). Every place that re-derives
+    the conv halo (executor row slicing, compiler LOAD_INP sizing) must
+    use this helper, or strided layers shift by a pixel against the
+    ``lax.conv_general_dilated`` numerics.
+    """
+    out = -(-size // stride)
+    total = max((out - 1) * stride + k - size, 0)
+    return total // 2, total - total // 2
+
+
 @dataclasses.dataclass(frozen=True)
 class ConvSpec:
-    """Static description of one CONV layer (the DSE/compiler currency)."""
+    """Static description of one CONV layer (the DSE/compiler currency).
+
+    ``inp_from`` reroutes the layer's input: it is the absolute index (in
+    the network spec list) of the layer whose OUTPUT this conv reads, or -1
+    for the network input; ``None`` (the default) reads the previous layer
+    as usual. ResNet projection shortcuts need this — the 1x1 downsample
+    conv reads the block INPUT, not the main path's last output.
+    """
     name: str
     h: int                  # input spatial height
     w: int
@@ -39,6 +62,7 @@ class ConvSpec:
     stride: int = 1
     padding: str = "SAME"
     relu: bool = True
+    inp_from: int | None = None
 
     @property
     def out_hw(self) -> tuple[int, int]:
@@ -53,8 +77,12 @@ class ConvSpec:
         return self.k * self.c * self.r * self.s * ho * wo
 
     def wino_eligible(self, m: int = 4) -> bool:
-        """Winograd mode requires stride 1 (paper Sec. 4.2.1)."""
-        return self.stride == 1 and self.r >= 1 and self.s >= 1
+        """Winograd mode requires stride 1 AND an implemented F(m, r)
+        transform: the transform set covers m in {2, 4} with r == s == 3
+        (paper Sec. 4.2.1/5.1), so a 1x1 projection or 5x5 kernel must take
+        the spatial mode in the compiled stack."""
+        return (self.stride == 1 and m in wino.SUPPORTED_M
+                and self.r == wino.R_WINO and self.s == wino.R_WINO)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +104,62 @@ class PoolSpec:
     @property
     def macs(self) -> int:
         return 0            # comparisons, not MACs — excluded from GOPS
+
+
+@dataclasses.dataclass(frozen=True)
+class EltwiseSpec:
+    """Static description of one residual element-wise add (ELTWISE_ADD).
+
+    ``skip_from`` is the absolute index (in the network spec list) of the
+    layer whose OUTPUT is the skip operand, or -1 for the network input.
+    The primary operand is — as for every layer — the previous layer's
+    output. The compiler's DRAM planner keeps the skip tensor live from its
+    producer to this add.
+    """
+    name: str
+    h: int                  # operand spatial height
+    w: int
+    c: int                  # operand channels (both sources match)
+    skip_from: int = -1
+    relu: bool = True
+
+    @property
+    def out_hw(self) -> tuple[int, int]:
+        return (self.h, self.w)
+
+    @property
+    def macs(self) -> int:
+        return 0            # adds, not MACs — excluded from GOPS
+
+
+@dataclasses.dataclass(frozen=True)
+class DepthwiseSpec:
+    """Static description of one depthwise CONV layer (DEPTHWISE_CONV).
+
+    One (r, s) filter per channel — HWIO kernel shaped (r, s, 1, c) with
+    ``feature_group_count = c`` — so k == c by construction.
+    """
+    name: str
+    h: int                  # input spatial height
+    w: int
+    c: int                  # channels (output channels == c)
+    r: int = 3
+    s: int = 3
+    stride: int = 1
+    padding: str = "SAME"
+    relu: bool = True
+
+    @property
+    def out_hw(self) -> tuple[int, int]:
+        if self.padding.upper() == "SAME":
+            return (-(-self.h // self.stride), -(-self.w // self.stride))
+        return ((self.h - self.r) // self.stride + 1,
+                (self.w - self.s) // self.stride + 1)
+
+    @property
+    def macs(self) -> int:
+        ho, wo = self.out_hw
+        return self.c * self.r * self.s * ho * wo
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,6 +192,19 @@ def hybrid_conv2d(
 ) -> jax.Array:
     """Run one convolution on the hybrid PE in the requested mode."""
     out_dtype = out_dtype or x_nhwc.dtype
+    if not use_pallas:
+        # the XLA paths are dataflow-oblivious and never interpret-mode; a
+        # non-default value here would be silently ignored (same contract as
+        # vgg.forward's interpret= check)
+        if dataflow != "is":
+            raise ValueError(
+                f"dataflow={dataflow!r} has no effect with use_pallas=False "
+                f"(the XLA lowering is dataflow-oblivious); pass "
+                f"use_pallas=True or drop dataflow=")
+        if interpret is not None:
+            raise ValueError(
+                "interpret= only affects the Pallas kernels; pass "
+                "use_pallas=True or drop interpret=")
     if mode == "wino":
         if stride != 1:
             raise ValueError("Winograd mode requires stride 1")
@@ -140,9 +237,47 @@ def hybrid_conv2d(
     raise ValueError(f"unknown mode {mode!r}")
 
 
+def depthwise_conv2d(
+    x_nhwc: jax.Array,
+    g_rs1c: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    stride: int = 1,
+    padding: str = "SAME",
+    relu: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """Depthwise convolution: one (r, s) filter per channel.
+
+    Kernel is HWIO shaped (r, s, 1, c) with ``feature_group_count = c``.
+    Like POOL, depthwise conv is element-parallel VPU work, not an MXU GEMM
+    — it lowers through the same XLA op on both backends rather than the
+    Pallas GEMM PE (see docs/ARCHITECTURE.md).
+    """
+    out_dtype = out_dtype or x_nhwc.dtype
+    r, s, one, c = g_rs1c.shape
+    if one != 1 or c != x_nhwc.shape[-1]:
+        raise ValueError(
+            f"depthwise kernel must be (r, s, 1, C={x_nhwc.shape[-1]}), "
+            f"got {g_rs1c.shape}")
+    y = lax.conv_general_dilated(
+        x_nhwc.astype(jnp.float32), g_rs1c.astype(jnp.float32),
+        (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y.astype(out_dtype)
+
+
 def max_pool2d(x_nhwc: jax.Array, window: int = 2, stride: int = 2) -> jax.Array:
-    init = jnp.array(-jnp.inf, x_nhwc.dtype) if jnp.issubdtype(
-        x_nhwc.dtype, jnp.floating) else jnp.iinfo(x_nhwc.dtype).min
+    # the init value must be a scalar OF THE OPERAND DTYPE — a raw Python
+    # int makes reduce_window raise "inconsistent dtypes" on integer inputs
+    init = jnp.asarray(
+        -jnp.inf if jnp.issubdtype(x_nhwc.dtype, jnp.floating)
+        else jnp.iinfo(x_nhwc.dtype).min, x_nhwc.dtype)
     return lax.reduce_window(
         x_nhwc, init, lax.max,
         (1, window, window, 1), (1, stride, stride, 1), "VALID")
@@ -152,6 +287,10 @@ def dense(x: jax.Array, w_ck: jax.Array, bias: jax.Array | None = None,
           relu: bool = False, use_pallas: bool = False,
           interpret: bool | None = None) -> jax.Array:
     """FC layer; routes through the shared GEMM PE when use_pallas."""
+    if not use_pallas and interpret is not None:
+        raise ValueError(
+            "interpret= only affects the Pallas GEMM; pass use_pallas=True "
+            "or drop interpret=")
     if use_pallas:
         from repro.kernels.gemm import matmul
         y = matmul(x, w_ck, out_dtype=jnp.float32, interpret=interpret)

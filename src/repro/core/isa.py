@@ -1,13 +1,16 @@
 """The 128-bit customized instruction set (Sec. 4.1, Figure 2), full-network.
 
-Seven opcodes — LOAD_INP, LOAD_WGT, LOAD_BIAS, COMP, SAVE, POOL, FC — each
-encoded in 128 bits (four little-endian uint32 words). Every instruction
-carries a WINO_FLAG indicating the current CONV mode; LOAD/SAVE instructions
-carry BUFF_BASE / DRAM_BASE so the compiler fully controls data movement and
-can realize IS or WS dataflow purely in the instruction stream (Sec. 4.2.4).
-POOL and FC extend the CONV ISA so a whole model — CONVs, interleaved
-maxpools, and the FC classifier tail — compiles into ONE instruction stream
-(one ``Program``), with no host-side glue between layers.
+Nine opcodes — LOAD_INP, LOAD_WGT, LOAD_BIAS, COMP, SAVE, POOL, FC,
+ELTWISE_ADD, DEPTHWISE_CONV — each encoded in 128 bits (four little-endian
+uint32 words). Every instruction carries a WINO_FLAG indicating the current
+CONV mode; LOAD/SAVE instructions carry BUFF_BASE / DRAM_BASE so the compiler
+fully controls data movement and can realize IS or WS dataflow purely in the
+instruction stream (Sec. 4.2.4). POOL and FC extend the CONV ISA so a whole
+model — CONVs, interleaved maxpools, and the FC classifier tail — compiles
+into ONE instruction stream (one ``Program``), with no host-side glue between
+layers. ELTWISE_ADD and DEPTHWISE_CONV extend it beyond straight-line VGG
+chains: residual (skip-connection) adds with TWO DRAM source operands kept
+live by the compiler's planner, and depthwise convolutions.
 
 Bit layout (word:bit, little-endian within the 128-bit word):
 
@@ -16,12 +19,24 @@ Bit layout (word:bit, little-endian within the 128-bit word):
          [15:8] M_TILE (Winograd m) — POOL reuses this byte as
                 [11:8] POOL_WINDOW, [15:12] POOL_STRIDE
          [31:16] LAYER_ID
-  word1: BUFF_BASE  (32b on-chip buffer word address / ping-pong slot)
-  word2: DRAM_BASE  (32b external-memory word address)
+  word1: BUFF_BASE  (32b on-chip buffer word address / ping-pong slot;
+                     ELTWISE_ADD: [0] primary slot, [1] skip slot)
+  word2: DRAM_BASE  (32b external-memory word address; ELTWISE_ADD: the
+                     skip operand's DRAM base — the second source is named
+                     in the compute word so the two-source read is explicit
+                     in the stream, not implied by load order)
   word3: SIZE       (32b transfer size in words; COMP: group index;
-                     FC: [15:0] D_IN, [31:16] D_OUT — see pack_fc_dims)
+                     FC: [15:0] D_IN, [31:16] D_OUT — see pack_fc_dims;
+                     ELTWISE_ADD: element count of each source operand;
+                     DEPTHWISE_CONV: [7:0] R, [15:8] S, [23:16] STRIDE —
+                     see pack_dw_geom)
 
-Opcode values 0 and 8..15 are reserved: ``decode`` rejects them with a
+The two LOAD_INPs feeding an ELTWISE_ADD use the ordinary ping-pong slot
+tags: the primary operand loads into slot 0 (buff_base bit0 = 0) and the
+skip operand into slot 1 (buff_base bit0 = 1), so the hazard discipline that
+guards CONV row groups guards residual adds unchanged.
+
+Opcode values 0 and 10..15 are reserved: ``decode`` rejects them with a
 ``ValueError`` naming the offending word. The encode/decode pair is
 bit-exact and round-trip tested (hypothesis).
 """
@@ -41,6 +56,8 @@ class Opcode(enum.IntEnum):
     SAVE = 5
     POOL = 6
     FC = 7
+    ELTWISE_ADD = 8
+    DEPTHWISE_CONV = 9
 
 
 def pack_fc_dims(d_in: int, d_out: int) -> int:
@@ -52,6 +69,19 @@ def pack_fc_dims(d_in: int, d_out: int) -> int:
 
 def unpack_fc_dims(size: int) -> tuple[int, int]:
     return size & 0xFFFF, (size >> 16) & 0xFFFF
+
+
+def pack_dw_geom(r: int, s: int, stride: int) -> int:
+    """DEPTHWISE_CONV word3: [7:0] R, [15:8] S, [23:16] STRIDE."""
+    if not (0 < r < 1 << 8 and 0 < s < 1 << 8 and 0 < stride < 1 << 8):
+        raise ValueError(
+            f"depthwise geometry ({r}, {s}, stride={stride}) must be "
+            f"positive 8-bit values")
+    return r | (s << 8) | (stride << 16)
+
+
+def unpack_dw_geom(size: int) -> tuple[int, int, int]:
+    return size & 0xFF, (size >> 8) & 0xFF, (size >> 16) & 0xFF
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,7 +135,7 @@ def decode(words: np.ndarray) -> Instruction:
     """uint32[4] -> Instruction.
 
     Raises ``ValueError`` naming the offending word for reserved /
-    out-of-range opcode values (0, 8..15) rather than surfacing the bare
+    out-of-range opcode values (0, 10..15) rather than surfacing the bare
     enum error.
     """
     w0, buff, dram, size = (int(w) for w in np.asarray(words, np.uint32))

@@ -22,7 +22,13 @@ from __future__ import annotations
 import dataclasses
 import math
 
-from repro.core.hybrid_conv import ConvSpec, FCSpec, PoolSpec
+from repro.core.hybrid_conv import (
+    ConvSpec,
+    DepthwiseSpec,
+    EltwiseSpec,
+    FCSpec,
+    PoolSpec,
+)
 from repro.core.winograd import R_WINO, pt_for
 
 
@@ -169,6 +175,28 @@ def fpga_pool_latency(t: FPGATarget, s: PoolSpec, pi: int, pt: int) -> float:
     ho, wo = s.out_hw
     words = s.c * s.h * s.w + s.c * ho * wo
     return words / min(t.bw, t.freq * pi * pt)
+
+
+def fpga_eltwise_latency(t: FPGATarget, s: EltwiseSpec,
+                         pi: int, pt: int) -> float:
+    """ELTWISE_ADD streams TWO source fmaps in and one out through the
+    LOAD/SAVE datapath (Eq. 10/11 analog); the adder array keeps up with
+    the stream, so the layer is pure external-memory traffic."""
+    words = 3 * s.h * s.w * s.c
+    return words / min(t.bw, t.freq * pi * pt)
+
+
+def fpga_dw_latency(t: FPGATarget, s: DepthwiseSpec,
+                    pi: int, pt: int) -> float:
+    """DEPTHWISE_CONV has no output-channel reuse (one filter per channel),
+    so only the PI*PT input-parallel lanes apply — the PO dimension of the
+    MAC array idles. Latency is max(compute on PI*PT MACs, streaming the
+    input + decimated output maps)."""
+    ho, wo = s.out_hw
+    t_cp = s.macs / (t.freq * pi * pt)
+    words = s.h * s.w * s.c + s.r * s.s * s.c + ho * wo * s.c
+    t_mem = words / min(t.bw, t.freq * pi * pt)
+    return max(t_cp, t_mem)
 
 
 def fpga_fc_latency(t: FPGATarget, s: FCSpec, pi, po, pt) -> float:
@@ -322,6 +350,25 @@ def tpu_pool_latency(t: TPUTarget, s: PoolSpec, batch: int = 1) -> float:
     bytes_ = (batch * s.h * s.w * s.c + batch * ho * wo * s.c) * t.bytes_per_word
     flops = batch * ho * wo * s.c * s.window * s.window
     return max(bytes_ / t.hbm_bw, flops / t.vpu_flops)
+
+
+def tpu_eltwise_latency(t: TPUTarget, s: EltwiseSpec,
+                        batch: int = 1) -> float:
+    """ELTWISE_ADD on TPU is HBM-bound: read two fmaps, write one; the
+    per-element add runs on the VPU and never dominates."""
+    n = batch * s.h * s.w * s.c
+    return max(3 * n * t.bytes_per_word / t.hbm_bw, n / t.vpu_flops)
+
+
+def tpu_dw_latency(t: TPUTarget, s: DepthwiseSpec, batch: int = 1) -> float:
+    """DEPTHWISE_CONV on TPU is VPU work (feature_group_count=C defeats the
+    MXU's contraction — there is no channel reduction to feed the systolic
+    array), bounded below by streaming the maps through HBM."""
+    ho, wo = s.out_hw
+    flops = 2.0 * batch * s.macs
+    bytes_ = (batch * (s.h * s.w + ho * wo) * s.c
+              + s.r * s.s * s.c) * t.bytes_per_word
+    return max(flops / t.vpu_flops, bytes_ / t.hbm_bw)
 
 
 def tpu_fc_latency(t: TPUTarget, s: FCSpec, batch: int = 1,

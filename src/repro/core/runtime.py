@@ -26,10 +26,13 @@ weights live in DRAM pre-transformed to U-space (Sec. 4.2.3), so LOAD_WGT
 traffic matches Eq. 9. The SAVE stage applies the layout reorder for the next
 layer's mode (Sec. 4.3) once the layer's last block lands.
 
-The full-network ISA (POOL/FC opcodes) runs a whole model — CONVs,
-interleaved maxpools, and the FC classifier tail — from ONE instruction
-stream: POOL validates its input slot like COMP and produces the pooled
-block; FC additionally checks the weight slot and bias buffer; both flow
+The full-network ISA (POOL/FC/ELTWISE_ADD/DEPTHWISE_CONV opcodes) runs a
+whole model — CONVs, maxpools, residual adds, depthwise convs and the FC
+classifier tail — from ONE instruction stream: POOL validates its input
+slot like COMP and produces the pooled block; FC and DEPTHWISE_CONV
+additionally check the weight slot and bias buffer; ELTWISE_ADD checks TWO
+input slots (primary in slot tag (L, 0), the planner-kept skip operand in
+(L, 1)) plus its word2 skip DRAM base and word3 element count; all flow
 through the same SAVE/flush path, so every layer kind obeys one hazard
 discipline in both execution paths.
 
@@ -50,8 +53,11 @@ from repro.core import layouts
 from repro.core.compiler import CompiledLayer, Program
 from repro.core.executor import (  # noqa: F401  (HazardError re-export)
     HazardError,
+    _fresh_stats,
     check_param_count,
     conv_block_forward,
+    depthwise_forward,
+    eltwise_forward,
     fc_forward,
     pool_forward,
     resolve_backend,
@@ -59,7 +65,12 @@ from repro.core.executor import (  # noqa: F401  (HazardError re-export)
     slice_input_rows,
     width_pad,
 )
-from repro.core.isa import Instruction, Opcode, unpack_fc_dims
+from repro.core.isa import (
+    Instruction,
+    Opcode,
+    unpack_dw_geom,
+    unpack_fc_dims,
+)
 from repro.core.winograd import transform_weights
 
 
@@ -123,10 +134,9 @@ class HybridRuntime:
         self._cache = cache
         self.dram: dict[int, Any] = {}
         self._raw_params: list[tuple[Any, Any]] | None = None
-        # pipeline statistics (4-stage pipeline occupancy model)
-        self.stats = {"load_inp": 0, "load_wgt": 0, "load_bias": 0,
-                      "comp": 0, "pool": 0, "fc": 0, "save": 0,
-                      "inp_words": 0, "wgt_words": 0}
+        # pipeline statistics (4-stage pipeline occupancy model) — same
+        # counter keys as the executor's schedule-validation pass
+        self.stats = _fresh_stats()
 
     @property
     def cache(self):
@@ -138,13 +148,13 @@ class HybridRuntime:
     # -- DRAM management ----------------------------------------------------
     def load_params(self, params: list[tuple[Any, Any]]):
         """params: [(w, bias), ...] — one entry per *parameterized* layer
-        (CONV and FC, in network order; POOL layers carry no params).
-        Winograd CONV layers store U-space weights."""
+        (CONV, FC and DEPTHWISE, in network order; POOL and ELTWISE layers
+        carry no params). Winograd CONV layers store U-space weights."""
         check_param_count(self.program, params)
         self._raw_params = [tuple(p) for p in params]
         it = iter(params)
         for cl in self.program.layers:
-            if cl.kind == "pool":
+            if cl.kind in ("pool", "eltwise"):
                 continue
             w, b = next(it)
             if cl.kind == "conv" and cl.plan.mode == "wino":
@@ -161,7 +171,8 @@ class HybridRuntime:
         if self._raw_params is None:
             raise RuntimeError("load_params must be called first")
         return [(self.dram[cl.wgt_addr], self.dram[cl.bias_addr])
-                for cl in self.program.layers if cl.kind != "pool"]
+                for cl in self.program.layers
+                if cl.kind not in ("pool", "eltwise")]
 
     def executor_entry(self, batch: int, dtype, *,
                        donate_input: bool = False):
@@ -248,10 +259,13 @@ class HybridRuntime:
                 self.stats["load_bias"] += 1
             elif op == Opcode.LOAD_INP:
                 ih, slot = ins.buff_base >> 1, ins.buff_base & 1
-                if cl.kind in ("pool", "fc"):
-                    # identity load of the stored tensor; pool_forward /
-                    # fc_forward apply the layout view themselves
-                    data = self.dram[cl.inp_addr]
+                if cl.kind in ("pool", "fc", "dw", "eltwise"):
+                    # identity load of the stored tensor (the forward
+                    # helpers apply the layout view themselves); ELTWISE
+                    # reads TWO operands, each by the DRAM base its own
+                    # LOAD_INP names — primary (ih 0) from cl.inp_addr,
+                    # skip (ih 1) from the planner-kept cl.skip_addr
+                    data = self.dram[ins.dram_base]
                 else:
                     data = self._load_input_group(cl, ih)
                 inp_slots[slot] = _Slot((ins.layer_id, ih), data)
@@ -323,6 +337,55 @@ class HybridRuntime:
                     inp_slots[islot].data, ins.relu_flag,
                     backend=self.backend, interpret=self.interpret)
                 self.stats["fc"] += 1
+            elif op == Opcode.ELTWISE_ADD:
+                pslot = ins.buff_base & 1
+                sslot = (ins.buff_base >> 1) & 1
+                n_el = cl.spec.h * cl.spec.w * cl.spec.c
+                if ins.size != n_el:
+                    raise HazardError(
+                        f"ELTWISE L{ins.layer_id}: word3 element count "
+                        f"{ins.size} disagrees with compiled spec ({n_el})")
+                if ins.dram_base != cl.skip_addr:
+                    raise HazardError(
+                        f"ELTWISE L{ins.layer_id}: word2 skip base "
+                        f"{ins.dram_base} disagrees with compiled skip "
+                        f"operand ({cl.skip_addr})")
+                if inp_slots[pslot].tag != (ins.layer_id, 0):
+                    raise HazardError(
+                        f"ELTWISE L{ins.layer_id}: primary input slot "
+                        f"{pslot} holds {inp_slots[pslot].tag}")
+                if inp_slots[sslot].tag != (ins.layer_id, 1):
+                    raise HazardError(
+                        f"ELTWISE L{ins.layer_id}: skip input slot {sslot} "
+                        f"holds {inp_slots[sslot].tag}")
+                out_blocks[(0, 0)] = eltwise_forward(
+                    cl, inp_slots[pslot].data, inp_slots[sslot].data,
+                    ins.relu_flag)
+                self.stats["eltwise"] += 1
+            elif op == Opcode.DEPTHWISE_CONV:
+                islot = ins.buff_base & 1
+                wslot = (ins.buff_base >> 1) & 1
+                geom = unpack_dw_geom(ins.size)
+                if geom != (cl.spec.r, cl.spec.s, cl.spec.stride):
+                    raise HazardError(
+                        f"DEPTHWISE L{ins.layer_id}: word3 geometry {geom} "
+                        f"disagrees with compiled spec "
+                        f"({cl.spec.r}, {cl.spec.s}, {cl.spec.stride})")
+                if inp_slots[islot].tag != (ins.layer_id, 0):
+                    raise HazardError(
+                        f"DEPTHWISE L{ins.layer_id}: input slot {islot} "
+                        f"holds {inp_slots[islot].tag}")
+                if wgt_slots[wslot].tag != (ins.layer_id, 0):
+                    raise HazardError(
+                        f"DEPTHWISE L{ins.layer_id}: weight slot {wslot} "
+                        f"holds {wgt_slots[wslot].tag}")
+                if bias_buf.tag != (ins.layer_id,):
+                    raise HazardError(
+                        f"DEPTHWISE L{ins.layer_id}: stale bias buffer")
+                out_blocks[(0, 0)] = depthwise_forward(
+                    cl, wgt_slots[wslot].data, bias_buf.data,
+                    inp_slots[islot].data, ins.relu_flag)
+                self.stats["dw"] += 1
             elif op == Opcode.SAVE and cl.kind != "conv":
                 if (0, 0) not in out_blocks:
                     raise HazardError(

@@ -72,6 +72,10 @@ _F4_AT = np.array(
 
 _MATRICES = {2: (_F2_BT, _F2_G, _F2_AT), 4: (_F4_BT, _F4_G, _F4_AT)}
 
+# the implemented F(m, 3) transform set — the DSE's eligibility source of
+# truth (ConvSpec.wino_eligible)
+SUPPORTED_M = tuple(sorted(_MATRICES))
+
 
 @functools.lru_cache(None)
 def transform_matrices(m: int, dtype=jnp.float32):

@@ -10,6 +10,8 @@ cached, jitted executor (the paper's Fig. 1 flow end-to-end):
 
   PYTHONPATH=src python -m repro.launch.serve --arch vgg16 --reduced \
       --batch 8 --iters 20
+  PYTHONPATH=src python -m repro.launch.serve --model resnet18 --reduced \
+      --batch 4 --iters 20
 """
 from __future__ import annotations
 
@@ -117,17 +119,27 @@ def serve_cnn(arch: str = "vgg16", *, reduced: bool = True, batch: int = 8,
     from repro import api
     from repro.core import perf_model as pm
     from repro.core.program_cache import default_cache
-    from repro.models import vgg
+    from repro.models import resnet, vgg
 
-    if arch != "vgg16":
+    if arch not in ("vgg16", "resnet18"):
         raise ValueError(f"CNN serving supports 'vgg16' (the paper's case "
-                         f"study), got {arch!r}")
+                         f"study) and 'resnet18' (the residual workload), "
+                         f"got {arch!r}")
     if target not in CNN_TARGETS:
         raise ValueError(f"--target must be one of {sorted(CNN_TARGETS)}")
+    if segmented and arch == "resnet18":
+        raise ValueError(
+            "--segmented is the legacy conv-segment path (host-side maxpool "
+            "glue between linear CONV runs) — a residual topology has no "
+            "such segmentation; resnet18 serves single-Program only")
     iters = max(1, iters)
     img, scale = (64, 8) if reduced else (224, 1)
     n_classes = 10 if reduced else 1000
-    specs = vgg.network_specs(img=img, scale=scale, n_classes=n_classes)
+    if arch == "resnet18":
+        specs = resnet.resnet18_specs(img=img, scale=scale,
+                                      n_classes=n_classes)
+    else:
+        specs = vgg.network_specs(img=img, scale=scale, n_classes=n_classes)
     t0 = time.monotonic()
     acc = api.Accelerator.build(specs, target=getattr(pm, CNN_TARGETS[target]),
                                 batch=batch, seed=seed, segmented=segmented,
@@ -185,7 +197,8 @@ def serve_cnn(arch: str = "vgg16", *, reduced: bool = True, batch: int = 8,
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    # --model is the CNN-serving spelling of the same knob (resnet18/vgg16)
+    ap.add_argument("--arch", "--model", dest="arch", required=True)
     # BooleanOptionalAction so --no-reduced actually reaches full-size mode
     # (a bare store_true with default=True made it unreachable)
     ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
@@ -214,7 +227,7 @@ def main():
                          "provably equivalent; 0 keeps the literal "
                          "per-block lowering")
     args = ap.parse_args()
-    if args.arch.startswith("vgg"):
+    if args.arch.startswith("vgg") or args.arch.startswith("resnet"):
         y = serve_cnn(args.arch, reduced=args.reduced, batch=args.batch,
                       iters=args.iters,
                       compare_interpreter=args.compare_interpreter,

@@ -102,6 +102,45 @@ def test_wino_stride_ineligible():
     assert r.plans[0].mode == "spat"
 
 
+def test_wino_kernel_ineligible_1x1_projection():
+    """Regression: ``wino_eligible`` used to ignore its ``m`` argument AND
+    the kernel size (a vacuous ``r >= 1`` check), so the DSE would plan
+    ``wino`` for a ResNet 1x1 projection conv — whose F(m, 3) transform
+    does not exist. A 1x1 (or 5x5) conv must plan ``spat`` on every target,
+    and ``wino_eligible`` must reject unsupported tile sizes."""
+    proj = ConvSpec("proj", 16, 16, 8, 16, r=1, s=1, stride=2, relu=False)
+    five = ConvSpec("k5", 16, 16, 4, 8, r=5, s=5)
+    for spec in (proj, five):
+        assert not spec.wino_eligible(2) and not spec.wino_eligible(4)
+        for target in (pm.VU9P, pm.PYNQ_Z1):
+            r = run_fpga_dse(target, [spec])
+            assert r.plans[0].mode == "spat", (spec.name, target.name)
+        rt = run_tpu_dse([spec], batch=2)
+        assert rt.plans[0].mode == "spat", spec.name
+    # m outside the implemented transform set {2, 4} is ineligible even for
+    # the canonical 3x3 stride-1 layer
+    ok = ConvSpec("c3", 16, 16, 4, 8)
+    assert ok.wino_eligible(2) and ok.wino_eligible(4)
+    assert not ok.wino_eligible(3) and not ok.wino_eligible(6)
+
+
+def test_dse_plans_residual_specs():
+    """EltwiseSpec/DepthwiseSpec ride through both DSE paths: NO_PLAN rows,
+    nonzero latency contribution (candidates rank on the FULL network)."""
+    from repro.core.hybrid_conv import DepthwiseSpec, EltwiseSpec
+    specs = [ConvSpec("c1", 16, 16, 3, 8),
+             EltwiseSpec("e1", 16, 16, 8, skip_from=-1),
+             DepthwiseSpec("d1", 16, 16, 8)]
+    for run in (lambda s: run_fpga_dse(pm.VU9P, s),
+                lambda s: run_tpu_dse(s, batch=2)):
+        r = run(specs)
+        assert len(r.plans) == 3
+        assert r.plans[1].mode != "wino" and r.plans[2].mode != "wino"
+        assert all(lat > 0 for lat in r.layer_latencies)
+        conv_only = run([specs[0]])
+        assert r.total_latency > conv_only.total_latency
+
+
 def test_tpu_dse_vmem_constraint():
     r = run_tpu_dse(conv_specs(), batch=8)
     from repro.core.dse import enumerate_tpu_candidates

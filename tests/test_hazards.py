@@ -213,3 +213,124 @@ def test_pool_fc_good_stream_passes_both_paths():
     y = rt.run(x)                      # no raise
     assert y.shape == (1, 6)
     assert rt.stats == stats
+
+
+# ---------------------------------------------------------------------------
+# ELTWISE_ADD / DEPTHWISE_CONV hazard discipline (residual-workload ISA)
+# ---------------------------------------------------------------------------
+
+def _residual_net():
+    """conv -> conv -> eltwise(skip=conv0) -> depthwise: both new opcodes,
+    including the two-source ELTWISE block whose skip operand the DRAM
+    planner keeps live past the intervening conv."""
+    from repro.core.hybrid_conv import DepthwiseSpec, EltwiseSpec
+    specs = [ConvSpec("c1", 8, 8, 3, 4, relu=True),
+             ConvSpec("c2", 8, 8, 4, 4, relu=False),
+             EltwiseSpec("e1", 8, 8, 4, skip_from=0),
+             DepthwiseSpec("d1", 8, 8, 4)]
+    plans = [LayerPlan("spat", "is"), LayerPlan("spat", "is"), None, None]
+    params = []
+    for i, s in enumerate(specs):
+        kw, kb = jax.random.split(jax.random.PRNGKey(i), 2)
+        if isinstance(s, ConvSpec):
+            params.append((
+                jax.random.normal(kw, (s.r, s.s, s.c, s.k), jnp.float32) * 0.2,
+                jax.random.normal(kb, (s.k,), jnp.float32) * 0.1))
+        elif isinstance(s, DepthwiseSpec):
+            params.append((
+                jax.random.normal(kw, (s.r, s.s, 1, s.c), jnp.float32) * 0.2,
+                jax.random.normal(kb, (s.c,), jnp.float32) * 0.1))
+    x = jax.random.normal(jax.random.PRNGKey(7), (1, 8, 8, 3), jnp.float32)
+    return specs, plans, params, x
+
+
+def _mutate_residual(prog: Program, name: str) -> Program:
+    import dataclasses
+
+    from repro.core.isa import pack_dw_geom
+
+    ins = list(prog.instructions)
+    if name == "eltwise_before_primary_load":
+        # drop the primary-operand LOAD_INP (slot 0, tag (2, 0))
+        ins = [s for s in ins
+               if not (s.opcode == Opcode.LOAD_INP and s.layer_id == 2
+                       and s.buff_base == (0 << 1 | 0))]
+    elif name == "eltwise_before_skip_load":
+        # drop the skip-operand LOAD_INP (slot 1, tag (2, 1))
+        ins = [s for s in ins
+               if not (s.opcode == Opcode.LOAD_INP and s.layer_id == 2
+                       and s.buff_base == (1 << 1 | 1))]
+    elif name == "eltwise_wrong_word3_count":
+        ins = [dataclasses.replace(s, size=s.size + 1)
+               if s.opcode == Opcode.ELTWISE_ADD else s for s in ins]
+    elif name == "eltwise_wrong_skip_base":
+        # word2 must name the compiled skip operand's DRAM base — pointing
+        # it elsewhere is a malformed stream, not a silent wrong add
+        ins = [dataclasses.replace(s, dram_base=s.dram_base + 1)
+               if s.opcode == Opcode.ELTWISE_ADD else s for s in ins]
+    elif name == "eltwise_save_before_add":
+        ins = [s for s in ins if s.opcode != Opcode.ELTWISE_ADD]
+    elif name == "dw_before_load_inp":
+        ins = [s for s in ins
+               if not (s.opcode == Opcode.LOAD_INP and s.layer_id == 3)]
+    elif name == "dw_before_load_wgt":
+        ins = [s for s in ins
+               if not (s.opcode == Opcode.LOAD_WGT and s.layer_id == 3)]
+    elif name == "dw_with_stale_bias":
+        ins = [s for s in ins
+               if not (s.opcode == Opcode.LOAD_BIAS and s.layer_id == 3)]
+    elif name == "dw_wrong_word3_geom":
+        ins = [dataclasses.replace(s, size=pack_dw_geom(5, 5, 1))
+               if s.opcode == Opcode.DEPTHWISE_CONV else s for s in ins]
+    elif name == "dw_save_before_dw":
+        ins = [s for s in ins if s.opcode != Opcode.DEPTHWISE_CONV]
+    else:
+        raise ValueError(name)
+    return Program(ins, prog.layers, prog.dram_size_words)
+
+
+RESIDUAL_HAZARDS = ["eltwise_before_primary_load", "eltwise_before_skip_load",
+                    "eltwise_wrong_word3_count", "eltwise_wrong_skip_base",
+                    "eltwise_save_before_add", "dw_before_load_inp",
+                    "dw_before_load_wgt", "dw_with_stale_bias",
+                    "dw_wrong_word3_geom", "dw_save_before_dw"]
+
+
+@pytest.mark.parametrize("hazard", RESIDUAL_HAZARDS)
+def test_residual_interpreter_raises(hazard):
+    specs, plans, params, x = _residual_net()
+    bad = _mutate_residual(compile_network(specs, plans), hazard)
+    rt = HybridRuntime(bad, strict=True)
+    rt.load_params(params)
+    with pytest.raises(HazardError):
+        rt.run(x)
+
+
+@pytest.mark.parametrize("hazard", RESIDUAL_HAZARDS)
+def test_residual_validation_pass_raises(hazard):
+    specs, plans, params, x = _residual_net()
+    bad = _mutate_residual(compile_network(specs, plans), hazard)
+    with pytest.raises(HazardError):
+        validate_schedule(bad)
+
+
+@pytest.mark.parametrize("hazard", RESIDUAL_HAZARDS)
+def test_residual_jitted_path_raises_before_compute(hazard):
+    specs, plans, params, x = _residual_net()
+    bad = _mutate_residual(compile_network(specs, plans), hazard)
+    rt = HybridRuntime(bad)
+    rt.load_params(params)
+    with pytest.raises(HazardError):
+        rt.run(x)
+
+
+def test_residual_good_stream_passes_both_paths():
+    specs, plans, params, x = _residual_net()
+    prog = compile_network(specs, plans)
+    stats = validate_schedule(prog)    # no raise
+    assert stats["eltwise"] == 1 and stats["dw"] == 1
+    rt = HybridRuntime(prog, strict=True)
+    rt.load_params(params)
+    y = rt.run(x)                      # no raise
+    assert y.shape == (1, 8, 8, 4)
+    assert rt.stats == stats

@@ -105,7 +105,7 @@ def test_decode_reserved_opcode_names_bad_word():
     offending word, not a bare enum error."""
     import numpy as np
     from repro.core.isa import decode
-    for bad in (0, 8, 15):
+    for bad in (0, 10, 15):
         w0 = bad | (3 << 16)
         with pytest.raises(ValueError, match=f"word0=0x{w0:08x}"):
             decode(np.array([w0, 0, 0, 0], np.uint32))

@@ -56,7 +56,7 @@ def test_winograd_equals_direct(h, w, c, k, m, r, seed):
 )
 def test_isa_roundtrip(opcode, wino, ws, lw, relu, m, layer, pw, ps,
                        buff, dram, size):
-    """Bit-exact across all 7 opcodes. POOL reuses the m_tile byte for
+    """Bit-exact across all 9 opcodes. POOL reuses the m_tile byte for
     window/stride, so the pool fields only exist on POOL instructions and
     m_tile only on the others."""
     is_pool = opcode == Opcode.POOL
@@ -88,12 +88,50 @@ def test_isa_fc_dims_roundtrip(d_in, d_out, relu, layer):
 
 
 @settings(**_SETTINGS)
+@given(
+    r=st.integers(0, 255), s=st.integers(0, 255), stride=st.integers(0, 255),
+    relu=st.booleans(), layer=st.integers(0, 2 ** 16 - 1),
+)
+def test_isa_dw_geom_roundtrip(r, s, stride, relu, layer):
+    """DEPTHWISE_CONV packs (r, s, stride) into word3; pack/unpack and the
+    128-bit round-trip both preserve them exactly."""
+    from repro.core.isa import pack_dw_geom, unpack_dw_geom
+    assert unpack_dw_geom(pack_dw_geom(r, s, stride)) == (r, s, stride)
+    ins = Instruction(Opcode.DEPTHWISE_CONV, relu_flag=relu, layer_id=layer,
+                      size=pack_dw_geom(r, s, stride))
+    back = decode(ins.encode())
+    assert back == ins
+    assert unpack_dw_geom(back.size) == (r, s, stride)
+
+
+@settings(**_SETTINGS)
+@given(
+    pslot=st.booleans(), sslot=st.booleans(), relu=st.booleans(),
+    skip_addr=st.integers(0, 2 ** 32 - 1), n_el=st.integers(0, 2 ** 32 - 1),
+    layer=st.integers(0, 2 ** 16 - 1),
+)
+def test_isa_eltwise_two_source_roundtrip(pslot, sslot, relu, skip_addr,
+                                          n_el, layer):
+    """ELTWISE_ADD is the only two-DRAM-operand word: BUFF_BASE bits [0]/[1]
+    name the primary/skip input slots and word2 carries the SKIP operand's
+    DRAM base — all of it survives the 128-bit round-trip bit-exactly."""
+    buff = (int(pslot) << 0) | (int(sslot) << 1)
+    ins = Instruction(Opcode.ELTWISE_ADD, relu_flag=relu, buff_base=buff,
+                      dram_base=skip_addr, size=n_el, layer_id=layer)
+    back = decode(ins.encode())
+    assert back == ins
+    assert (back.buff_base & 1, (back.buff_base >> 1) & 1) \
+        == (int(pslot), int(sslot))
+    assert back.dram_base == skip_addr and back.size == n_el
+
+
+@settings(**_SETTINGS)
 @given(n=st.integers(0, 12), seed=st.integers(0, 999))
 def test_isa_stream_roundtrip(n, seed):
     rng = np.random.default_rng(seed)
     instrs = []
     for _ in range(n):
-        op = Opcode(int(rng.integers(1, 8)))
+        op = Opcode(int(rng.integers(1, 10)))
         is_pool = op == Opcode.POOL
         instrs.append(
             Instruction(op,

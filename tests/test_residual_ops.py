@@ -1,0 +1,246 @@
+"""ELTWISE_ADD / DEPTHWISE_CONV end-to-end + the latent-bug regressions
+this workload flushed out (integer pooling, silently-ignored PE knobs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hybrid_conv import (
+    ConvSpec,
+    DepthwiseSpec,
+    EltwiseSpec,
+    FCSpec,
+    dense,
+    depthwise_conv2d,
+    hybrid_conv2d,
+    max_pool2d,
+    same_pad,
+)
+
+
+# ---------------------------------------------------------------------------
+# Bugfix regressions
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.int8, jnp.int32])
+def test_max_pool2d_integer_dtypes(dtype):
+    """Regression: the reduce_window init value was a raw Python int, so
+    integer inputs raised a dtype-inconsistency TypeError. Int pooling must
+    work and agree with the float result."""
+    rng = np.random.default_rng(0)
+    lo, hi = (-128, 127) if dtype == jnp.int8 else (-10_000, 10_000)
+    x = jnp.asarray(rng.integers(lo, hi + 1, (2, 8, 8, 3)), dtype)
+    y = max_pool2d(x)
+    assert y.dtype == dtype and y.shape == (2, 4, 4, 3)
+    y_f = max_pool2d(x.astype(jnp.float32))
+    np.testing.assert_array_equal(np.asarray(y),
+                                  np.asarray(y_f).astype(dtype))
+    # the minimum representable value must survive (the init must not win)
+    x_min = jnp.full((1, 2, 2, 1), jnp.iinfo(dtype).min, dtype)
+    assert int(max_pool2d(x_min)[0, 0, 0, 0]) == jnp.iinfo(dtype).min
+
+
+def test_hybrid_conv2d_rejects_ignored_knobs():
+    """Regression: ``use_pallas=False`` silently ignored ``dataflow=`` and
+    ``interpret=`` — callers believed WS dataflow / interpret mode was
+    exercised when the XLA path ran instead. Both now raise."""
+    x = jnp.zeros((1, 8, 8, 3), jnp.float32)
+    g = jnp.zeros((3, 3, 3, 4), jnp.float32)
+    with pytest.raises(ValueError, match="dataflow"):
+        hybrid_conv2d(x, g, use_pallas=False, dataflow="ws")
+    with pytest.raises(ValueError, match="interpret"):
+        hybrid_conv2d(x, g, use_pallas=False, interpret=True)
+    with pytest.raises(ValueError, match="interpret"):
+        hybrid_conv2d(x, g, use_pallas=False, interpret=False)
+    hybrid_conv2d(x, g, use_pallas=False)                    # defaults: fine
+    hybrid_conv2d(x, g, use_pallas=False, dataflow="is")     # explicit ok
+
+
+def test_dense_rejects_ignored_interpret():
+    x = jnp.zeros((2, 8), jnp.float32)
+    w = jnp.zeros((8, 4), jnp.float32)
+    with pytest.raises(ValueError, match="interpret"):
+        dense(x, w, use_pallas=False, interpret=True)
+    dense(x, w, use_pallas=False)                            # default: fine
+
+
+def test_same_pad_stride_aware():
+    """Regression: the executor/compiler derived SAME halos with the
+    stride-1 rule ``(k-1)//2``, shifting strided layers one pixel against
+    the lax numerics. The shared helper must follow the XLA/TF rule."""
+    assert same_pad(32, 3, 1) == (1, 1)      # the VGG case — unchanged
+    assert same_pad(32, 3, 2) == (0, 1)      # strided even input: asymmetric
+    assert same_pad(32, 1, 2) == (0, 0)      # 1x1 projection: no halo
+    assert same_pad(33, 3, 2) == (1, 1)      # odd input: symmetric again
+    assert same_pad(4, 5, 1) == (2, 2)
+
+
+# ---------------------------------------------------------------------------
+# Depthwise: op-level and compiled-chain parity
+# ---------------------------------------------------------------------------
+
+def _dw_reference(x, w, b, stride, padding):
+    """Per-channel lax.conv — the independent oracle."""
+    outs = []
+    for c in range(x.shape[-1]):
+        y = jax.lax.conv_general_dilated(
+            x[..., c:c + 1].astype(jnp.float32),
+            w[:, :, :, c:c + 1].astype(jnp.float32),
+            (stride, stride), padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        outs.append(y)
+    return jnp.concatenate(outs, -1) + b.astype(jnp.float32)
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+def test_depthwise_conv2d_matches_per_channel(stride):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((2, 8, 8, 5)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 1, 5)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((5,)), jnp.float32)
+    y = depthwise_conv2d(x, w, b, stride=stride)
+    ref = _dw_reference(x, w, b, stride, "SAME")
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    with pytest.raises(ValueError, match="depthwise kernel"):
+        depthwise_conv2d(x, jnp.zeros((3, 3, 5, 5), jnp.float32))
+
+
+def test_depthwise_chain_compiles_and_matches():
+    """conv -> depthwise -> depthwise(stride 2) -> fc as ONE Program; the
+    cached executor matches the strict interpreter bitwise and the
+    spec-chain oracle exactly (both all-XLA)."""
+    from repro import api
+    from repro.core import perf_model as pm
+    from repro.models.resnet import reference_forward
+
+    specs = [ConvSpec("c1", 8, 8, 3, 6, relu=True),
+             DepthwiseSpec("d1", 8, 8, 6, relu=True),
+             DepthwiseSpec("d2", 8, 8, 6, stride=2, relu=False),
+             FCSpec("f1", 4 * 4 * 6, 5)]
+    acc = api.Accelerator.build(specs, target=pm.V5E, batch=2)
+    assert acc.program is not None
+    x = jnp.asarray(np.random.default_rng(3).standard_normal(
+        (2, 8, 8, 3)), jnp.float32)
+    y = np.asarray(acc(x))
+    assert y.shape == (2, 5)
+    np.testing.assert_array_equal(y, np.asarray(acc.strict_request()(x)))
+    np.testing.assert_array_equal(
+        y, np.asarray(reference_forward(acc.params, x, specs)))
+
+
+# ---------------------------------------------------------------------------
+# Eltwise: compiled-chain skip-liveness coverage
+# ---------------------------------------------------------------------------
+
+def test_eltwise_skip_tensor_stays_live():
+    """The skip operand's DRAM buffer must survive the intervening layers:
+    conv0's output feeds BOTH conv1 (next layer) and the add two layers
+    later, so the planner may not recycle it until the add retires."""
+    from repro import api
+    from repro.core import perf_model as pm
+    from repro.core.compiler import LayerPlan, compile_network
+    from repro.models.resnet import reference_forward
+
+    specs = [ConvSpec("c0", 8, 8, 3, 4, relu=True),
+             ConvSpec("c1", 8, 8, 4, 4, relu=True),
+             ConvSpec("c2", 8, 8, 4, 4, relu=False),
+             EltwiseSpec("add", 8, 8, 4, skip_from=0, relu=True)]
+    prog = compile_network(specs, [LayerPlan("spat", "is")] * 3 + [None])
+    cl_add = prog.layers[3]
+    assert cl_add.skip_src == 0
+    assert cl_add.skip_addr == prog.layers[0].out_addr
+    # conv1/conv2 outputs must not alias the still-live skip buffer
+    for lid in (1, 2):
+        assert prog.layers[lid].out_addr != cl_add.skip_addr
+    acc = api.Accelerator.build(specs, target=pm.V5E, batch=2)
+    x = jnp.asarray(np.random.default_rng(4).standard_normal(
+        (2, 8, 8, 3)), jnp.float32)
+    y = np.asarray(acc(x))
+    np.testing.assert_array_equal(y, np.asarray(acc.strict_request()(x)))
+    np.testing.assert_array_equal(
+        y, np.asarray(reference_forward(acc.params, x, specs)))
+
+
+def test_eltwise_skip_from_network_input():
+    """skip_from=-1 adds the raw network input back in — the planner must
+    keep the input buffer live to the end of the chain."""
+    from repro import api
+    from repro.core import perf_model as pm
+    from repro.models.resnet import reference_forward
+
+    specs = [ConvSpec("c0", 8, 8, 3, 3, relu=True),
+             EltwiseSpec("add", 8, 8, 3, skip_from=-1, relu=False)]
+    acc = api.Accelerator.build(specs, target=pm.V5E, batch=2)
+    x = jnp.asarray(np.random.default_rng(5).standard_normal(
+        (2, 8, 8, 3)), jnp.float32)
+    y = np.asarray(acc(x))
+    np.testing.assert_array_equal(y, np.asarray(acc.strict_request()(x)))
+    np.testing.assert_array_equal(
+        y, np.asarray(reference_forward(acc.params, x, specs)))
+
+
+def test_eltwise_shape_mismatch_rejected():
+    """An fmap whose shape disagrees with the add's operand shape is a
+    compile-time error, not silent broadcasting."""
+    from repro.core.compiler import LayerPlan, compile_network
+    specs = [ConvSpec("c0", 8, 8, 3, 4, relu=True),
+             ConvSpec("c1", 8, 8, 4, 8, relu=False),   # 8 channels != 4
+             EltwiseSpec("add", 8, 8, 8, skip_from=0)]
+    with pytest.raises(ValueError, match="add"):
+        compile_network(specs, [LayerPlan("spat", "is")] * 2 + [None])
+
+
+# ---------------------------------------------------------------------------
+# ResNet-18 end-to-end (the ISSUE's acceptance criteria)
+# ---------------------------------------------------------------------------
+
+def _resnet_case(img=32, scale=16, batch=2, **kwargs):
+    from repro.models import resnet
+    specs = resnet.resnet18_specs(img, scale, n_classes=10)
+    acc = resnet.accelerator(img=img, scale=scale, n_classes=10,
+                             batch=batch, **kwargs)
+    x = jnp.asarray(np.random.default_rng(6).standard_normal(
+        (batch, img, img, 3)), jnp.float32)
+    return specs, acc, x
+
+
+def test_resnet18_compiles_to_one_program():
+    specs, acc, x = _resnet_case()
+    assert acc.program is not None and acc.segment_runtimes is None
+    kinds = [cl.kind for cl in acc.program.layers]
+    assert kinds.count("conv") == 20 and kinds.count("eltwise") == 8
+    assert kinds.count("pool") == 1 and kinds.count("fc") == 1
+    y = np.asarray(acc(x))
+    assert y.shape == (2, 10)
+
+
+def test_resnet18_executor_matches_strict_bitwise():
+    """xla backend: cached executor == strict per-instruction interpreter
+    BITWISE, and both equal the spec-chain oracle — including the
+    residual adds and the strided 1x1-projection shortcut blocks."""
+    from repro.models.resnet import reference_forward
+    specs, acc, x = _resnet_case()
+    y = np.asarray(acc(x))
+    np.testing.assert_array_equal(y, np.asarray(acc.strict_request()(x)))
+    np.testing.assert_array_equal(
+        y, np.asarray(reference_forward(acc.params, x, specs)))
+
+
+def test_resnet18_pallas_interpret_close():
+    """pallas backend (interpret mode off-TPU) stays within 1e-4 of the
+    oracle end-to-end."""
+    from repro.models.resnet import reference_forward
+    specs, acc, x = _resnet_case(backend="pallas", interpret=True)
+    y = np.asarray(acc(x))
+    ref = np.asarray(reference_forward(acc.params, x, specs))
+    np.testing.assert_allclose(y, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_resnet18_serve_cnn_smoke():
+    """The serving driver accepts the resnet18 model name end-to-end."""
+    from repro.launch.serve import serve_cnn
+    y = serve_cnn("resnet18", reduced=True, batch=2, iters=1)
+    assert y.shape == (2, 10)
+    with pytest.raises(ValueError, match="segment"):
+        serve_cnn("resnet18", reduced=True, batch=2, iters=1, segmented=True)

@@ -53,6 +53,9 @@ ROW_SCHEMAS: dict[str, set[str]] = {
                               "max_abs_diff"},
     "runtime/pallas_vs_xla": {"xla_ms", "pallas_ms", "pallas_over_xla",
                               "max_abs_diff"},
+    "runtime/resnet18_single_program": {"n_instructions", "n_eltwise",
+                                        "exec_ms", "gops", "strict_bitwise",
+                                        "max_abs_diff_ref"},
 }
 
 # higher-is-better ratio metrics: stable across machines, so they gate
