@@ -10,10 +10,12 @@
   single-Program path vs the legacy segmented path, the lowering optimizer
   (``opt_level=1`` fused whole-layer dispatches) vs the literal per-block
   lowering, the batching pipelined ``ServingSession`` queue vs direct
-  ``rt.run`` loops, and the Pallas PE backend vs the XLA lowering (the
-  runtime + serving rows are written to a ``BENCH_table4_vgg16.json``
-  artifact for CI; ``tools/bench_compare.py`` schema-checks it and diffs
-  against the committed file as a regression tripwire).
+  ``rt.run`` loops, the sharded-fleet serving row (shard_map'd executors
+  over forced host devices + continuous-vs-bucketed scheduling), and the
+  Pallas PE backend vs the XLA lowering (the runtime + serving rows are
+  written to a ``BENCH_table4_vgg16.json`` artifact for CI;
+  ``tools/bench_compare.py`` schema-checks it and diffs against the
+  committed file as a regression tripwire).
 """
 from __future__ import annotations
 
@@ -77,6 +79,7 @@ def run() -> list[dict]:
     runtime_rows += run_single_vs_segmented()
     runtime_rows += run_fused_vs_blocked()
     runtime_rows += run_serving_queue()
+    runtime_rows += run_fleet_sharded()
     runtime_rows += run_pallas_vs_xla()
     runtime_rows += run_resnet18_single_program()
     _write_artifact(runtime_rows)
@@ -464,6 +467,7 @@ def run_serving_queue(*, img: int = 32, scale: int = 16, batch: int = 8,
 
     return [{
         "bench": "table4_vgg16", "name": "serving/batched_queue",
+        "scheduler": "continuous",
         "config": f"img{img}_scale{scale}_maxbatch{batch}_n{n_requests}",
         "session_rps": round(session_rps, 1),
         f"direct_b{batch}_rps": round(direct_bN_rps, 1),
@@ -476,3 +480,142 @@ def run_serving_queue(*, img: int = 32, scale: int = 16, batch: int = 8,
         "latency_p95_ms": round(p95, 2),
         "max_abs_diff": err,
     }]
+
+
+# self-contained subprocess body for the fleet row: the parent bench process
+# has already initialized jax with ONE device, so the 4-device measurement
+# must run under a fresh interpreter with the forced host-device count
+_FLEET_SHARDED_SUBPROC = r"""
+import json, os, time
+import numpy as np
+import jax, jax.numpy as jnp
+from repro import api
+from repro.launch.mesh import make_fleet_mesh
+from repro.models.vgg import network_specs
+from repro.core.compiler import LayerPlan
+from repro.core.hybrid_conv import ConvSpec
+
+img, scale, batch, n_req = 32, 16, 8, 96
+specs = network_specs(img=img, scale=scale, n_classes=10)
+ci, plans = 0, []
+for s in specs:
+    if isinstance(s, ConvSpec):
+        plans.append(LayerPlan("wino" if ci % 2 == 0 else "spat",
+                               "is" if ci % 2 else "ws", m=2, g_k=2, g_h=2))
+        ci += 1
+    else:
+        plans.append(None)
+acc = api.Accelerator.build(specs, plans=plans, seed=0, batch=batch)
+mesh = make_fleet_mesh()
+ndev = int(np.prod(mesh.devices.shape))
+rng = np.random.default_rng(0)
+reqs = [rng.standard_normal((img, img, 3)).astype(np.float32)
+        for _ in range(n_req)]
+
+def measure(mesh_arg):
+    best, outs = 0.0, None
+    with acc.serve(max_batch=batch, buckets=(batch,), mesh=mesh_arg,
+                   warmup=True) as s:
+        s.run_many(reqs[:2 * batch])            # warm threads + executor
+        for _ in range(3):
+            t0 = time.monotonic()
+            o = s.run_many(reqs)
+            jax.block_until_ready(o[-1])
+            rps = n_req / (time.monotonic() - t0)
+            if rps > best:
+                best, outs = rps, o
+    return best, outs
+
+rps_1, outs_1 = measure(None)
+rps_n, outs_n = measure(mesh)
+parity = max(float(np.abs(np.asarray(a) - np.asarray(b)).max())
+             for a, b in zip(outs_1, outs_n))
+
+# pallas under sharding: each shard is an ordinary single-device trace, so
+# the Pallas PE kernels run inside the mapped region (interpret mode on CPU)
+acc_pal = api.Accelerator.build(specs, plans=plans, params=acc.params,
+                                batch=batch, backend="pallas")
+with acc_pal.serve(max_batch=batch, buckets=(batch,), mesh=mesh,
+                   warmup=True) as sp:
+    outs_p = sp.run_many(reqs[:batch])
+pallas_diff = max(float(np.abs(np.asarray(a) - np.asarray(b)).max())
+                  for a, b in zip(outs_1[:batch], outs_p))
+
+# bursty trace: continuous batching vs the legacy fixed-bucket window.
+# Unsharded on purpose — isolates the scheduler from the sharding cost.
+def bursty(scheduler):
+    rngb = np.random.default_rng(1)
+    sizes = [int(rngb.integers(2, 7)) for _ in range(24)]
+    total, best = sum(sizes), 0.0
+    with acc.serve(max_batch=batch, buckets=(batch,), max_wait_ms=1.0,
+                   scheduler=scheduler, warmup=True) as s:
+        s.run_many(reqs[:2 * batch])
+        for _ in range(3):
+            futs, i = [], 0
+            t0 = time.monotonic()
+            for sz in sizes:
+                futs += s.submit_many([reqs[(i + j) % n_req]
+                                       for j in range(sz)])
+                i += sz
+                time.sleep(0.0025)              # burst gap
+            for f in futs:
+                f.result()
+            best = max(best, total / (time.monotonic() - t0))
+        padded = s.stats.padded_rows
+    return best, padded
+
+cont_rps, cont_padded = bursty("continuous")
+buck_rps, buck_padded = bursty("bucketed")
+
+print("FLEET_ROW:" + json.dumps({
+    "config": f"img{img}_scale{scale}_maxbatch{batch}_n{n_req}",
+    "n_devices": ndev,
+    "host_cores": os.cpu_count() or 1,
+    "session_rps_1dev": round(rps_1, 1),
+    "session_rps_4dev": round(rps_n, 1),
+    "rps_scaling": round(rps_n / rps_1, 2),
+    "continuous_rps": round(cont_rps, 1),
+    "bucketed_rps": round(buck_rps, 1),
+    "continuous_vs_bucketed": round(cont_rps / buck_rps, 2),
+    "continuous_padded_rows": cont_padded,
+    "bucketed_padded_rows": buck_padded,
+    "pallas_sharded_max_abs_diff": pallas_diff,
+    "max_abs_diff": parity,
+}))
+"""
+
+
+def run_fleet_sharded(*, n_devices: int = 4) -> list[dict]:
+    """Sharded fleet serving row: the shard_map'd executor variant splitting
+    each device batch over ``n_devices`` forced host devices, measured
+    against the same session on one device, plus the continuous-vs-bucketed
+    scheduler comparison on a bursty arrival trace and the Pallas-under-
+    sharding parity evidence.
+
+    Runs in a subprocess (the parent process already pinned jax to one
+    device) with ``--xla_force_host_platform_device_count``. On a
+    single-core host the 4-device row CANNOT show real scaling — four
+    shard computations time-slice one core — so the row records
+    ``host_cores`` alongside ``rps_scaling`` and the regression guard
+    (``tools/bench_compare.py``) only gates scaling when the host has the
+    cores to parallelize; multi-core CI regenerates the row with real
+    speedup. ``continuous_vs_bucketed`` and both parity metrics are
+    load-independent and meaningful everywhere.
+    """
+    import subprocess
+    import sys
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_devices}")
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    r = subprocess.run([sys.executable, "-c", _FLEET_SHARDED_SUBPROC],
+                       capture_output=True, text=True, env=env, timeout=900)
+    if r.returncode != 0:
+        raise RuntimeError(f"fleet_sharded subprocess failed:\n"
+                           f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}")
+    line = next(l for l in r.stdout.splitlines()
+                if l.startswith("FLEET_ROW:"))
+    row = json.loads(line[len("FLEET_ROW:"):])
+    row = {"bench": "table4_vgg16", "name": "serving/fleet_sharded", **row}
+    return [row]

@@ -820,10 +820,32 @@ def lower_program(program: Program, *, backend: str = "xla",
 # Compiled executor: validation + lowering + jit, with trace accounting
 # ---------------------------------------------------------------------------
 
+def mesh_key(mesh) -> tuple | None:
+    """Hashable topology key for a device mesh (``None`` = unmapped).
+
+    Shape, axis names AND the flat device ids all join the key: two meshes
+    over the same shape but different devices (or the same devices in a
+    different order) lower to different per-shard programs, so they must not
+    share a cache entry. This is what lets sharded and single-device
+    executors of one Program coexist in :mod:`repro.core.program_cache`.
+    """
+    if mesh is None:
+        return None
+    return (tuple(mesh.devices.shape), tuple(mesh.axis_names),
+            tuple(int(d.id) for d in mesh.devices.flat))
+
+
+def mesh_device_count(mesh) -> int:
+    """Total devices spanned by ``mesh`` (1 for ``None``)."""
+    if mesh is None:
+        return 1
+    return int(np.prod(mesh.devices.shape))
+
+
 @dataclasses.dataclass
 class CompiledExecutor:
     """A jitted executor for one ``(Program, batch, dtype, backend,
-    opt_level, donate_input)`` entry."""
+    opt_level, donate_input, mesh)`` entry."""
     program: Program
     stats: dict[str, int]          # schedule-validation pipeline counters
     fn: Callable                   # jitted execute(params, x)
@@ -832,6 +854,7 @@ class CompiledExecutor:
     interpret: bool | None = None  # resolved Pallas interpret mode
     opt_level: int = 1             # lowering-optimizer level (0 = literal)
     donate_input: bool = False     # x buffer donated through jax.jit
+    mesh_key: tuple | None = None  # shard_map topology (None = single-device)
 
     @property
     def trace_count(self) -> int:
@@ -848,7 +871,8 @@ def compile_executor(program: Program,
                      backend: str = "xla",
                      interpret: bool | None = None,
                      opt_level: int = 1,
-                     donate_input: bool = False) -> CompiledExecutor:
+                     donate_input: bool = False,
+                     mesh=None) -> CompiledExecutor:
     """Validate (unless pre-validated stats are supplied), lower, and jit.
 
     ``backend``/``interpret`` select the per-block PE and ``opt_level`` the
@@ -859,6 +883,16 @@ def compile_executor(program: Program,
     reuses the array it passed in (the pipelined ``ServingSession`` stages
     a fresh device array per batch, so it opts in; the general ``run`` path
     must not, since callers commonly re-invoke with the same input).
+
+    ``mesh`` builds the **sharded executor variant**: the lowered function
+    is wrapped in ``shard_map`` (via ``repro.compat``) over the batch axis,
+    split across every mesh axis — params replicated, ``x``/``y`` sharded
+    on dim 0. Each device runs the *whole per-shard program locally*, so
+    the Pallas PE kernels work under sharding (GSPMD cannot partition an
+    opaque Pallas custom call, but inside the mapped region there is
+    nothing left to partition — every shard is an ordinary single-device
+    trace). The batch must divide evenly by the mesh's device count; the
+    program cache enforces this at ``get`` time where the batch is known.
     """
     if stats is None:
         stats = validate_schedule(program)
@@ -866,6 +900,16 @@ def compile_executor(program: Program,
     opt_level = resolve_opt_level(opt_level)
     execute = lower_program(program, backend=backend, interpret=interpret,
                             opt_level=opt_level)
+    if mesh is not None and mesh_device_count(mesh) > 1:
+        from jax.sharding import PartitionSpec
+
+        from repro.compat import shard_map
+        batch_spec = PartitionSpec(tuple(mesh.axis_names))
+        # check_vma=False: pallas_call outputs carry no varying-manual-axes
+        # annotation, and the xla lowering needs no replication check either
+        execute = shard_map(execute, mesh=mesh,
+                            in_specs=(PartitionSpec(), batch_spec),
+                            out_specs=batch_spec, check_vma=False)
     trace_count = [0]
 
     def traced(params, x):
@@ -876,4 +920,5 @@ def compile_executor(program: Program,
         program=program, stats=dict(stats),
         fn=jax.jit(traced, donate_argnums=(1,) if donate_input else ()),
         _trace_count=trace_count, backend=backend, interpret=interpret,
-        opt_level=opt_level, donate_input=bool(donate_input))
+        opt_level=opt_level, donate_input=bool(donate_input),
+        mesh_key=mesh_key(mesh))

@@ -29,6 +29,13 @@ backend, interpret, opt_level, donate_input)``:
 * ``donate_input`` joins the key because donation is part of the jitted
   function's signature — a donating executor invalidates the caller's
   input buffer, so it must never be handed to a caller that didn't ask.
+* ``mesh`` (keyed by topology: shape, axis names and flat device ids — see
+  ``executor.mesh_key``) selects the **sharded executor variant**: the
+  lowered function wrapped in ``shard_map`` over the batch axis, so the
+  Pallas PEs run per-shard inside the mapped region. ``None`` (the default)
+  is the single-device executor; sharded and unsharded entries of one
+  Program coexist side by side, which is what lets a serving session keep
+  straggler buckets on one device while full buckets span the fleet.
 
 Schedule validation runs **once per schedule key** (not per entry): executors
 for new batch sizes of an already-validated program reuse the cached
@@ -54,6 +61,8 @@ from repro.core.compiler import Program
 from repro.core.executor import (
     CompiledExecutor,
     compile_executor,
+    mesh_device_count,
+    mesh_key,
     resolve_backend,
     resolve_opt_level,
     validate_schedule,
@@ -125,9 +134,9 @@ class ProgramCache:
     def get(self, program: Program, *, batch: int, dtype,
             param_dtypes: tuple = (), backend: str = "xla",
             interpret: bool | None = None, opt_level: int = 1,
-            donate_input: bool = False) -> CompiledExecutor:
+            donate_input: bool = False, mesh=None) -> CompiledExecutor:
         """The jitted executor for ``program`` at this
-        batch/dtype/backend/opt_level (compile on miss).
+        batch/dtype/backend/opt_level/mesh (compile on miss).
 
         ``param_dtypes`` (one name per layer's weight) joins the key when
         weights may not share the input dtype — otherwise jit would silently
@@ -135,13 +144,27 @@ class ProgramCache:
         ``backend``/``interpret`` select the per-block PE lowering,
         ``opt_level`` the lowering-optimizer level, and ``donate_input``
         whether the executor donates the activation buffer (see
-        ``core/executor.py``); all join the key in resolved form.
+        ``core/executor.py``); all join the key in resolved form. ``mesh``
+        requests the shard_map'd executor variant (batch axis split over
+        every mesh axis, params replicated) keyed by mesh topology — the
+        batch must divide evenly by the mesh's device count.
         """
         backend, interpret = resolve_backend(backend, interpret)
         opt_level = resolve_opt_level(opt_level)
+        # a 1-device mesh lowers identically to no mesh — normalize before
+        # keying so the two spellings share one entry
+        if mesh is not None and mesh_device_count(mesh) == 1:
+            mesh = None
+        n_dev = mesh_device_count(mesh)
+        if n_dev > 1 and batch % n_dev:
+            raise ValueError(
+                f"sharded executor: batch {batch} does not divide evenly "
+                f"over the mesh's {n_dev} devices — pad the batch to a "
+                f"multiple (the serving session's bucket fallback) or drop "
+                f"the mesh for this batch size")
         key = (program.schedule_key(), int(batch), jnp.dtype(dtype).name,
                tuple(param_dtypes), backend, interpret, opt_level,
-               bool(donate_input))
+               bool(donate_input), mesh_key(mesh))
         with self._lock:
             entry = self._entries.get(key)
             if entry is not None:
@@ -151,7 +174,7 @@ class ProgramCache:
         stats = self.validate(program)
         entry = compile_executor(program, stats=stats, backend=backend,
                                  interpret=interpret, opt_level=opt_level,
-                                 donate_input=donate_input)
+                                 donate_input=donate_input, mesh=mesh)
         with self._lock:
             # re-check: a racing thread may have compiled the same key while
             # we were outside the lock — first insert wins so every caller

@@ -175,7 +175,7 @@ class HybridRuntime:
                 if cl.kind not in ("pool", "eltwise")]
 
     def executor_entry(self, batch: int, dtype, *,
-                       donate_input: bool = False):
+                       donate_input: bool = False, mesh=None):
         """The cached jitted executor + DRAM weight image for (batch, dtype).
 
         The serving hot path: a caller holding a fixed parameter set (e.g.
@@ -184,7 +184,10 @@ class HybridRuntime:
         validation still runs (once per schedule key, cached).
         ``donate_input=True`` hands back an executor that donates the
         activation buffer — only for callers that never reuse the array
-        they pass (the pipelined serving queue)."""
+        they pass (the pipelined serving queue). ``mesh`` requests the
+        shard_map'd executor variant (batch split over every mesh axis,
+        Pallas PEs running per-shard); the batch must divide evenly by the
+        mesh's device count."""
         if self.strict:
             raise RuntimeError(
                 "strict interpreter mode has no cached executor entry")
@@ -194,7 +197,7 @@ class HybridRuntime:
             self.program, batch=batch, dtype=dtype,
             param_dtypes=tuple(jnp.dtype(w.dtype).name for w, _ in params),
             backend=self.backend, interpret=self.interpret,
-            opt_level=self.opt_level, donate_input=donate_input)
+            opt_level=self.opt_level, donate_input=donate_input, mesh=mesh)
         return entry, params
 
     def write_input(self, x_nhwc):

@@ -18,3 +18,23 @@ def make_host_mesh():
     """Whatever devices exist locally (CPU smoke tests: 1 device)."""
     n = len(jax.devices())
     return make_mesh((1, n), ("data", "model"))
+
+
+def make_fleet_mesh(n_devices: int | None = None):
+    """1-D batch mesh over the local devices — the serving-fleet topology.
+
+    The sharded executor splits the request batch over every mesh axis, so
+    a flat ``("batch",)`` mesh is the natural spelling for data-parallel
+    serving (one shard of every device batch per device). ``n_devices``
+    caps the fleet to the first N local devices (``None`` = all of them) —
+    a multi-model :class:`repro.api.Fleet` can carve disjoint sub-fleets
+    this way.
+    """
+    devices = jax.devices()
+    if n_devices is not None:
+        if not 1 <= n_devices <= len(devices):
+            raise ValueError(
+                f"n_devices={n_devices} outside [1, {len(devices)}] local "
+                f"devices")
+        devices = devices[:n_devices]
+    return make_mesh((len(devices),), ("batch",), devices=devices)

@@ -99,7 +99,8 @@ def serve_cnn(arch: str = "vgg16", *, reduced: bool = True, batch: int = 8,
               iters: int = 20, seed: int = 0, compare_interpreter: bool = False,
               segmented: bool = False, target: str = "tpu",
               session: bool = False, backend: str = "xla",
-              opt_level: int = 1):
+              opt_level: int = 1, mesh: str = "host",
+              scheduler: str = "continuous"):
     """CNN inference through the full HybridDNN pipeline — now a thin driver
     over ``repro.api``.
 
@@ -166,8 +167,9 @@ def serve_cnn(arch: str = "vgg16", *, reduced: bool = True, batch: int = 8,
           f"({gops:.1f} GOPS); cache hits={cache.stats.hits} "
           f"misses={cache.stats.misses}")
     if session:
+        mesh_arg = None if mesh == "none" else mesh
         with acc.serve(max_batch=batch, buckets=(batch,), warmup=True,
-                       mesh="host") as s:
+                       mesh=mesh_arg, scheduler=scheduler) as s:
             n_req = batch * iters
             # materialize requests host-side before timing, like real
             # clients arriving with their own arrays
@@ -176,12 +178,20 @@ def serve_cnn(arch: str = "vgg16", *, reduced: bool = True, batch: int = 8,
             outs = s.run_many(reqs)
             jax.block_until_ready(outs[-1])
             dt = time.monotonic() - t0
-            print(f"ServingSession: {n_req} requests in {dt * 1e3:.1f}ms "
-                  f"({n_req / dt:.1f} req/s, {s.stats.batches} device "
-                  f"batches, {s.stats.padded_rows} padded rows; "
-                  f"latency p50 {s.stats.p50_ms():.2f}ms "
-                  f"p95 {s.stats.p95_ms():.2f}ms; "
-                  f"compile {s.stats.compile_ms:.0f}ms)")
+            st = s.stats
+            print(f"ServingSession[{scheduler}, mesh={mesh}]: {n_req} "
+                  f"requests in {dt * 1e3:.1f}ms "
+                  f"({n_req / dt:.1f} req/s, {st.batches} device "
+                  f"batches, {st.padded_rows} padded rows, "
+                  f"occupancy {st.occupancy():.3f}; "
+                  f"latency p50 {st.p50_ms():.2f}ms "
+                  f"p95 {st.p95_ms():.2f}ms; "
+                  f"queue wait p50 {st.wait_p50_ms():.2f}ms "
+                  f"p95 {st.wait_p95_ms():.2f}ms; "
+                  f"compile {st.compile_ms:.0f}ms)")
+            per_dev = ", ".join(f"{d}: {n}" for d, n in
+                                sorted(st.device_batches.items()))
+            print(f"  per-device batches: {{{per_dev}}}")
     if compare_interpreter:
         strict_request = acc.strict_request()
         jax.block_until_ready(strict_request(x))   # warm XLA op caches
@@ -218,6 +228,15 @@ def main():
     ap.add_argument("--session", action="store_true",
                     help="also drive requests through the batching "
                          "ServingSession (host-mesh sharded)")
+    ap.add_argument("--mesh", default="host", choices=("none", "host"),
+                    help="ServingSession device mesh: 'host' shards device "
+                         "batches over every local device via shard_map; "
+                         "'none' keeps single-device dispatch")
+    ap.add_argument("--scheduler", default="continuous",
+                    choices=("continuous", "bucketed"),
+                    help="ServingSession admission policy: 'continuous' "
+                         "keeps admitting while the device pipeline is "
+                         "busy; 'bucketed' is the legacy fixed window")
     ap.add_argument("--backend", default="xla", choices=("xla", "pallas"),
                     help="PE implementation the executor lowers through "
                          "(pallas runs interpret-mode off-TPU)")
@@ -233,7 +252,8 @@ def main():
                       compare_interpreter=args.compare_interpreter,
                       segmented=args.segmented, target=args.target,
                       session=args.session, backend=args.backend,
-                      opt_level=args.opt_level)
+                      opt_level=args.opt_level, mesh=args.mesh,
+                      scheduler=args.scheduler)
         print("logits:", y.shape)
         return
     toks = serve(args.arch, reduced=args.reduced, batch=args.batch,

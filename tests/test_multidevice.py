@@ -107,3 +107,139 @@ def test_compressed_psum_matches_mean():
                                    rtol=0.05, atol=0.02)
         print("compressed psum ok")
     """)
+
+
+def test_sharded_serving_session_parity():
+    """The shard_map'd executor variant inside a ServingSession: full
+    buckets split over a 4-device fleet mesh, stragglers stay local —
+    outputs match the unsharded session to fp accumulation noise."""
+    _run("""
+        import numpy as np
+        from repro import api
+        from repro.core import perf_model as pm
+        from repro.core.hybrid_conv import ConvSpec, FCSpec, PoolSpec
+        from repro.launch.mesh import make_fleet_mesh
+        SPECS = [ConvSpec("c1", 16, 16, 3, 8), ConvSpec("c2", 16, 16, 8, 16),
+                 PoolSpec("p1", 16, 16, 16),
+                 FCSpec("fc", 8 * 8 * 16, 10, relu=False)]
+        acc = api.Accelerator.build(SPECS, target=pm.V5E, batch=8, seed=0)
+        mesh = make_fleet_mesh(4)
+        rng = np.random.default_rng(0)
+        reqs = [rng.standard_normal((16, 16, 3)).astype(np.float32)
+                for _ in range(19)]            # 2 full buckets + straggler
+        with acc.serve(max_batch=8, buckets=(4, 8)) as s:
+            ref = [np.asarray(o) for o in s.run_many(reqs)]
+        with acc.serve(max_batch=8, buckets=(4, 8), mesh=mesh) as s:
+            got = [np.asarray(o) for o in s.run_many(reqs)]
+            st = s.stats
+        d = max(float(np.abs(a - b).max()) for a, b in zip(ref, got))
+        assert d <= 1e-4, d
+        # full 8-buckets counted on EVERY mesh device, stragglers on one
+        assert len(st.device_batches) == 4, st.device_batches
+        assert st.dispatched_rows == 19
+        print("sharded session parity ok, max diff", d)
+    """)
+
+
+def test_pallas_backend_under_sharding_matches_xla():
+    """backend="pallas" serves sharded: each shard is an ordinary
+    single-device trace, so the Pallas PE kernels run per-shard inside the
+    shard_map region — matching the XLA lowering to <= 1e-4."""
+    _run("""
+        import numpy as np
+        from repro import api
+        from repro.core import perf_model as pm
+        from repro.core.hybrid_conv import ConvSpec, FCSpec, PoolSpec
+        from repro.launch.mesh import make_fleet_mesh
+        SPECS = [ConvSpec("c1", 16, 16, 3, 8), ConvSpec("c2", 16, 16, 8, 16),
+                 PoolSpec("p1", 16, 16, 16),
+                 FCSpec("fc", 8 * 8 * 16, 10, relu=False)]
+        acc_x = api.Accelerator.build(SPECS, target=pm.V5E, batch=8, seed=0)
+        acc_p = api.Accelerator.build(SPECS, target=pm.V5E, batch=8,
+                                      params=acc_x.params, backend="pallas")
+        mesh = make_fleet_mesh(4)
+        rng = np.random.default_rng(0)
+        reqs = [rng.standard_normal((16, 16, 3)).astype(np.float32)
+                for _ in range(8)]
+        with acc_x.serve(max_batch=8, buckets=(8,), mesh=mesh) as s:
+            ref = [np.asarray(o) for o in s.run_many(reqs)]
+        with acc_p.serve(max_batch=8, buckets=(8,), mesh=mesh) as s:
+            got = [np.asarray(o) for o in s.run_many(reqs)]
+        d = max(float(np.abs(a - b).max()) for a, b in zip(ref, got))
+        assert d <= 1e-4, d
+        print("pallas-under-sharding parity ok, max diff", d)
+    """)
+
+
+def test_fleet_multi_model_bitwise_stable():
+    """Two models co-tenanting one Fleet (shared slot pool, shared program
+    cache, shared mesh) produce BITWISE the outputs of their standalone
+    sessions — tenancy changes scheduling, never computation."""
+    _run("""
+        import numpy as np
+        from repro import api
+        from repro.core import perf_model as pm
+        from repro.core.hybrid_conv import ConvSpec, FCSpec, PoolSpec
+        from repro.launch.mesh import make_fleet_mesh
+        SPECS_A = [ConvSpec("c1", 16, 16, 3, 8),
+                   ConvSpec("c2", 16, 16, 8, 16),
+                   PoolSpec("p1", 16, 16, 16),
+                   FCSpec("fc", 8 * 8 * 16, 10, relu=False)]
+        SPECS_B = [ConvSpec("c1", 16, 16, 3, 12),
+                   PoolSpec("p1", 16, 16, 12),
+                   FCSpec("fc", 8 * 8 * 12, 10, relu=False)]
+        acc_a = api.Accelerator.build(SPECS_A, target=pm.V5E, batch=8, seed=0)
+        acc_b = api.Accelerator.build(SPECS_B, target=pm.V5E, batch=8, seed=1)
+        mesh = make_fleet_mesh(4)
+        rng = np.random.default_rng(0)
+        reqs = [rng.standard_normal((16, 16, 3)).astype(np.float32)
+                for _ in range(8)]
+        with acc_a.serve(max_batch=8, buckets=(8,), mesh=mesh) as s:
+            ref_a = [np.asarray(o) for o in s.run_many(reqs)]
+        with acc_b.serve(max_batch=8, buckets=(8,), mesh=mesh) as s:
+            ref_b = [np.asarray(o) for o in s.run_many(reqs)]
+        with api.Fleet({"a": acc_a, "b": acc_b}, mesh=mesh,
+                       max_batch=8, buckets=(8,)) as fleet:
+            pairs = ([("a", r) for r in reqs] + [("b", r) for r in reqs])
+            res = fleet.run_many(pairs)
+        assert all(np.array_equal(g, r)
+                   for g, r in zip(res[:8], ref_a)), "model a not bitwise"
+        assert all(np.array_equal(g, r)
+                   for g, r in zip(res[8:], ref_b)), "model b not bitwise"
+        print("fleet multi-model bitwise ok")
+    """)
+
+
+def test_sharded_executor_cache_keying():
+    """Mesh topology joins the program-cache key: sharded and unsharded
+    executors of one Program coexist, a 1-device mesh aliases to the
+    unsharded entry, and a non-dividing batch is refused."""
+    _run("""
+        import pytest
+        from repro import api
+        from repro.core import perf_model as pm
+        from repro.core.hybrid_conv import ConvSpec, FCSpec
+        from repro.core.program_cache import ProgramCache
+        from repro.launch.mesh import make_fleet_mesh
+        SPECS = [ConvSpec("c1", 16, 16, 3, 8),
+                 FCSpec("fc", 16 * 16 * 8, 10, relu=False)]
+        acc = api.Accelerator.build(SPECS, target=pm.V5E, batch=8, seed=0)
+        cache = ProgramCache()
+        prog = acc.program
+        e0 = cache.get(prog, batch=8, dtype="float32")
+        e4 = cache.get(prog, batch=8, dtype="float32",
+                       mesh=make_fleet_mesh(4))
+        e1 = cache.get(prog, batch=8, dtype="float32",
+                       mesh=make_fleet_mesh(1))
+        assert e4 is not e0, "mesh must join the cache key"
+        assert e1 is e0, "1-device mesh must alias the unsharded entry"
+        assert e4.mesh_key is not None and e0.mesh_key is None
+        try:
+            cache.get(prog, batch=6, dtype="float32",
+                      mesh=make_fleet_mesh(4))
+        except ValueError as e:
+            assert "divide" in str(e)
+        else:
+            raise AssertionError("non-dividing batch must be refused")
+        print("sharded cache keying ok")
+    """)

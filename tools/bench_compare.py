@@ -17,10 +17,15 @@ Two passes:
    committed at ``<ref>``). Every shared numeric metric is reported. For
    the *ratio* metrics (speedups, rps ratios — machine-load-independent by
    construction), a drop of more than ``--tol`` fraction below the baseline
-   fails the run; raw wall-clock/rps values are reported but never gated —
-   CI runners are too noisy for absolute thresholds. ``max_abs_diff`` is
-   gated absolutely: a row whose numerical-parity evidence worsens past
-   ``--max-abs-diff`` (default 1e-3) fails regardless of the baseline.
+   fails the run (growth, for lower-is-better ratios); raw wall-clock/rps
+   values are reported but never gated — CI runners are too noisy for
+   absolute thresholds. Ratio gates that are only meaningful on specific
+   hardware are skipped with a printed reason (the Pallas interpret-mode
+   fallback ratio off-TPU; sharded-fleet ``rps_scaling`` on hosts with
+   fewer cores than mesh devices). ``max_abs_diff`` (and the sharded
+   ``pallas_sharded_max_abs_diff``) is gated absolutely: a row whose
+   numerical-parity evidence worsens past ``--max-abs-diff`` (default
+   1e-3) fails regardless of the baseline.
 
 A baseline that does not exist (file missing at the ref — e.g. a brand-new
 bench) skips the diff for that file with a note; the schema check still
@@ -51,6 +56,12 @@ ROW_SCHEMAS: dict[str, set[str]] = {
                               "session_vs_direct_single", "compile_ms",
                               "latency_p50_ms", "latency_p95_ms",
                               "max_abs_diff"},
+    "serving/fleet_sharded": {"n_devices", "host_cores",
+                              "session_rps_1dev", "session_rps_4dev",
+                              "rps_scaling", "continuous_rps",
+                              "bucketed_rps", "continuous_vs_bucketed",
+                              "pallas_sharded_max_abs_diff",
+                              "max_abs_diff"},
     "runtime/pallas_vs_xla": {"xla_ms", "pallas_ms", "pallas_over_xla",
                               "max_abs_diff"},
     "runtime/resnet18_single_program": {"n_instructions", "n_eltwise",
@@ -60,7 +71,35 @@ ROW_SCHEMAS: dict[str, set[str]] = {
 
 # higher-is-better ratio metrics: stable across machines, so they gate
 RATIO_KEYS = ("speedup", "jaxpr_op_reduction", "session_vs_direct_batched",
-              "session_vs_direct_single", "hybrid_speedup")
+              "session_vs_direct_single", "hybrid_speedup",
+              "rps_scaling", "continuous_vs_bucketed")
+
+# lower-is-better ratio metrics: gate on growth past tol instead of a drop
+LOWER_RATIO_KEYS = ("pallas_over_xla",)
+
+
+def _ratio_gate_skipped(name, key, row) -> str | None:
+    """Reason to skip ratio-gating this metric, or None to gate normally.
+
+    * ``runtime/pallas_vs_xla`` in ``cpu_interpret`` mode measures the
+      Pallas *interpreter* fallback, not kernel performance — its ratio is
+      pure interpreter overhead and regresses with any added checking, so
+      only the ``tpu`` mode gates.
+    * ``rps_scaling`` (serving/fleet_sharded) needs one host core per mesh
+      device to show real parallel speedup — on a smaller host the shards
+      time-slice and the ratio measures scheduler overhead, so only hosts
+      with enough cores gate it.
+    """
+    if (name == "runtime/pallas_vs_xla"
+            and row.get("backend_mode") == "cpu_interpret"):
+        return "cpu_interpret mode: ratio measures the interpreter fallback"
+    if key == "rps_scaling":
+        cores, ndev = row.get("host_cores", 0), row.get("n_devices", 0)
+        if not (isinstance(cores, (int, float)) and isinstance(ndev, (int, float))) \
+                or cores < ndev:
+            return (f"host_cores={cores} < n_devices={ndev}: shards "
+                    f"time-slice, scaling is not measurable")
+    return None
 
 
 def check_schema(path: Path) -> list[str]:
@@ -150,13 +189,23 @@ def diff_rows(path: Path, against: str, tol: float,
                 continue
             delta = v - bv
             print(f"  {name}.{k}: {bv} -> {v} ({delta:+.3g})")
+            if k in RATIO_KEYS or k in LOWER_RATIO_KEYS:
+                skip = _ratio_gate_skipped(name, k, row)
+                if skip is not None:
+                    print(f"  {name}.{k}: ratio gate skipped ({skip})")
+                    continue
             if k in RATIO_KEYS and bv > 0 and v < bv * (1.0 - tol):
                 errors.append(
                     f"{path}: {name}.{k} regressed {bv} -> {v} "
                     f"(> {tol:.0%} below baseline)")
-            if k == "max_abs_diff" and v > max(bv, max_abs_diff):
+            if k in LOWER_RATIO_KEYS and bv > 0 and v > bv * (1.0 + tol):
                 errors.append(
-                    f"{path}: {name}.max_abs_diff worsened {bv} -> {v} "
+                    f"{path}: {name}.{k} regressed {bv} -> {v} "
+                    f"(> {tol:.0%} above baseline)")
+            if k in ("max_abs_diff", "pallas_sharded_max_abs_diff") \
+                    and v > max(bv, max_abs_diff):
+                errors.append(
+                    f"{path}: {name}.{k} worsened {bv} -> {v} "
                     f"(numerical-parity evidence)")
     return errors
 
