@@ -67,6 +67,8 @@ from repro.core.hybrid_conv import (
     PoolSpec,
 )
 from repro.core.runtime import HybridRuntime
+from repro.quant import QuantSidecar, quantize_params
+from repro.quant import calibrate as quant_calibrate
 
 PROGRAM_FORMAT = "hybriddnn-program/v1"
 
@@ -303,7 +305,7 @@ class Accelerator:
                  dse: DSEResult | None = None, segmented: bool = False,
                  segment_runtimes: list | None = None,
                  backend: str = "xla", interpret: bool | None = None,
-                 opt_level: int = 1):
+                 opt_level: int = 1, quant=None):
         self.specs = list(specs)
         self.plans = list(plans)
         self.params = params
@@ -317,6 +319,7 @@ class Accelerator:
         self.backend = backend
         self.interpret = interpret
         self.opt_level = opt_level
+        self.quant = quant          # QuantSidecar for int8 accelerators
         self._request = request
 
     # -- construction -------------------------------------------------------
@@ -327,7 +330,8 @@ class Accelerator:
               segmented: bool = False, strict: bool = False,
               cache=None, backend: str = "xla",
               interpret: bool | None = None,
-              opt_level: int = 1) -> "Accelerator":
+              opt_level: int = 1, dtype: str = "float32",
+              calib=None, observer: str = "percentile") -> "Accelerator":
         """DSE -> compile -> validate, in one call.
 
         ``target`` is any :class:`Target` (``pm.V5E``, ``pm.VU9P``,
@@ -347,8 +351,29 @@ class Accelerator:
         keeps the literal per-block lowering (the reference). Backend and
         opt_level both join the program-cache key, so the same Program
         serves every variant side by side.
+
+        ``dtype="int8"`` builds a fully quantized accelerator: the DSE
+        plans against the target's int8 variant (Winograd gated off — no
+        int8 U-space transform), ``calib`` (an (n, H, W, C) array or list
+        of batches; defaults to seeded random data) drives post-training
+        calibration into a ``repro.quant.QuantSidecar``, params are
+        quantized per-tensor symmetric (int8 weights, int32 bias), and
+        every path — cached executor, strict interpreter, Pallas PEs —
+        runs int8 GEMMs with a fused requantize+ReLU epilogue. ``observer``
+        picks the activation-range estimator (``"percentile"`` default,
+        or ``"minmax"``). The accelerator stays float-in/float-out:
+        ``__call__`` quantizes inputs by the calibrated input scale and
+        dequantizes the int8 logits (a positive per-tensor rescale, so
+        top-1 is taken on the same ordering the device computed).
         """
         specs = list(specs)
+        if dtype not in ("float32", "int8"):
+            raise ValueError(f"unsupported dtype {dtype!r}: expected "
+                             f"'float32' or 'int8'")
+        if dtype == "int8" and segmented:
+            raise ValueError("segmented accelerators are fp32-only — the "
+                             "int8 path needs the single-Program runtime "
+                             "(the sidecar is keyed to one schedule)")
         dse = None
         if plans is None:
             if not isinstance(target, Target):
@@ -356,12 +381,29 @@ class Accelerator:
                     f"target {target!r} does not implement the Target "
                     f"protocol (needs a run_dse(specs, batch) method) — pass "
                     f"e.g. pm.V5E, pm.VU9P, pm.PYNQ_Z1, or supply plans=")
-            dse = target.run_dse(specs, batch=batch)
+            # dtype is only passed when quantizing, so custom fp32 targets
+            # that predate the dtype parameter keep working unchanged
+            dse = (target.run_dse(specs, batch=batch, dtype=dtype)
+                   if dtype != "float32"
+                   else target.run_dse(specs, batch=batch))
             plans = list(dse.plans)
         else:
             plans = list(plans)
         if params is None:
             params = random_params(specs, seed)
+
+        quant = None
+        if dtype == "int8":
+            if calib is None:
+                # stand-in calibration data, seeded like random_params: real
+                # deployments pass a slice of the training set instead
+                s0 = specs[0]
+                shape = ((8, s0.d_in) if isinstance(s0, FCSpec)
+                         else (8, s0.h, s0.w, s0.c))
+                calib = np.random.default_rng(seed + 1).standard_normal(
+                    shape).astype(np.float32)
+            quant = quant_calibrate(specs, params, calib, observer=observer)
+            params = quantize_params(specs, params, quant)
 
         if segmented:
             request, seg_rts, _ = build_segmented_request(
@@ -376,19 +418,25 @@ class Accelerator:
         program = compile_network(specs, plans)
         rt = HybridRuntime(program, strict=strict, cache=cache,
                            backend=backend, interpret=interpret,
-                           opt_level=opt_level)
+                           opt_level=opt_level, quant=quant)
         rt.load_params(params)
         if not strict:
             rt.cache.validate(program)   # schedule check once, at build time
         return cls(specs=specs, plans=plans, params=params, request=rt.run,
                    target=target, batch=batch, program=program, runtime=rt,
                    dse=dse, backend=backend, interpret=interpret,
-                   opt_level=opt_level)
+                   opt_level=opt_level, quant=quant)
 
     # -- inference ----------------------------------------------------------
     def __call__(self, x):
         """One inference request. ``x``: (n, H, W, C) for CONV-first models,
-        (n, D) for FC-first. Steady-state calls are cache hits only."""
+        (n, D) for FC-first. Steady-state calls are cache hits only.
+        Quantized accelerators are float-in/float-out: float inputs are
+        quantized by the calibrated input scale (already-int8 inputs pass
+        through) and the int8 logits are dequantized back to fp32."""
+        if self.quant is not None:
+            y = self._request(jnp.asarray(x))   # runtime quantizes floats
+            return self.quant.dequantize_output(y)
         return self._request(jnp.asarray(x, self.input_dtype))
 
     @property
@@ -416,11 +464,13 @@ class Accelerator:
         """A per-instruction-interpreter request fn over the same Program(s)
         and params — the hazard-faithful baseline for comparisons. Always
         runs the XLA PE, regardless of this accelerator's ``backend``, so
-        it can serve as the numerical oracle for the Pallas path too."""
+        it can serve as the numerical oracle for the Pallas path too. For
+        quantized accelerators the interpreter carries the same sidecar, so
+        its int8 outputs are bitwise-comparable to the raw executor's."""
         if self.segmented:
             return build_segmented_request(
                 self.specs, self.plans, self.params, strict=True)[0]
-        rt = HybridRuntime(self.program, strict=True)
+        rt = HybridRuntime(self.program, strict=True, quant=self.quant)
         rt.load_params(self.params)
         return rt.run
 
@@ -451,8 +501,9 @@ class Accelerator:
                    f"ONE Program ({self.n_instructions} instructions)"))
         lines = [f"Accelerator[{tname}]: {head}",
                  f"  {self._hw_desc()}, batch={self.batch}",
-                 f"  {'layer':<12}{'kind':<9}{'mode':<6}{'df':<4}"
-                 f"{'m':>2}{'g_h':>5}{'g_k':>5}  {'latency':>11}{'share':>8}"]
+                 f"  {'layer':<12}{'kind':<9}{'dtype':<9}{'mode':<6}"
+                 f"{'df':<4}{'m':>2}{'g_h':>5}{'g_k':>5}"
+                 f"  {'latency':>11}{'share':>8}"]
         lats = self.dse.layer_latencies if self.dse else None
         total = self.dse.total_latency if self.dse else None
         for i, (s, p) in enumerate(zip(self.specs, self.plans)):
@@ -462,10 +513,17 @@ class Accelerator:
                 if kind == "conv" else ("-", "-", "-")
             gh, gk = ((str(p.g_h), str(p.g_k)) if kind == "conv"
                       else ("-", "-"))
+            # precision per layer: "int8+rq" = int8 math with the fused
+            # requantize epilogue, "int8" = scale-passthrough (pool)
+            if self.quant is None:
+                dt = "fp32"
+            else:
+                dt = ("int8+rq" if self.quant.layers[i].requantize
+                      else "int8")
             lat = _fmt_t(lats[i]) if lats else "          -"
             share = (f"{100 * lats[i] / total:6.1f}%"
                      if lats and total else "      -")
-            lines.append(f"  {s.name:<12}{kind:<9}{mode:<6}{df:<4}"
+            lines.append(f"  {s.name:<12}{kind:<9}{dt:<9}{mode:<6}{df:<4}"
                          f"{m:>2}{gh:>5}{gk:>5}  {lat}{share}")
         if total is not None:
             macs = sum(s.macs for s in self.specs)
@@ -499,6 +557,14 @@ class Accelerator:
                                     for v in self.dse.layer_latencies],
                 "total_latency": float(self.dse.total_latency),
                 "candidates_searched": self.dse.candidates_searched,
+            },
+            # the quant sidecar rides ALONGSIDE the instruction stream (the
+            # 128-bit words are untouched — int8 never changes the ISA);
+            # its digest is bound to this schedule so a sidecar pasted from
+            # a different calibration or program is rejected at load
+            "quant": None if self.quant is None else {
+                "sidecar": self.quant.to_dict(),
+                "digest": self.quant.digest(self.program.schedule_key()),
             },
         }
         with open(path, "w") as f:
@@ -543,6 +609,20 @@ class Accelerator:
                 f"{path}: saved instruction stream does not match its "
                 f"recompilation (compiler or schedule drift) — re-run "
                 f"Accelerator.build and save again")
+        quant = None
+        if doc.get("quant"):
+            q = doc["quant"]
+            quant = QuantSidecar.from_dict(q["sidecar"])
+            if quant.digest(program.schedule_key()) != q.get("digest"):
+                raise ValueError(
+                    f"{path}: quant sidecar digest does not match this "
+                    f"program's schedule — the sidecar was edited or "
+                    f"belongs to a different calibration/program; re-run "
+                    f"Accelerator.build(dtype='int8') and save again")
+            # accept either fp32 weights (quantized here, deterministically
+            # — the sidecar fixes every scale) or pre-quantized int8 ones
+            if np.asarray(params[0][0]).dtype != np.int8:
+                params = quantize_params(specs, params, quant)
         dse = None
         if doc.get("dse"):
             d = doc["dse"]
@@ -552,7 +632,7 @@ class Accelerator:
                             candidates_searched=d["candidates_searched"])
         rt = HybridRuntime(program, strict=strict, cache=cache,
                            backend=backend, interpret=interpret,
-                           opt_level=opt_level)
+                           opt_level=opt_level, quant=quant)
         rt.load_params(params)
         if not strict:
             rt.cache.validate(program)
@@ -560,7 +640,7 @@ class Accelerator:
                    target=doc.get("target"), batch=doc.get("batch", 1),
                    program=program, runtime=rt, dse=dse,
                    backend=backend, interpret=interpret,
-                   opt_level=opt_level)
+                   opt_level=opt_level, quant=quant)
 
     # -- serving ------------------------------------------------------------
     def serve(self, **kwargs) -> "ServingSession":
@@ -803,6 +883,10 @@ class ServingSession:
         # the param tree — too costly to re-derive on every submit()
         self._in_dtype = np.dtype(acc.input_dtype)
         self._in_shape = tuple(acc.input_shape)
+        # quantized accelerators keep the session float-in/float-out:
+        # floats are quantized host-side at staging (so the device batch is
+        # int8 end to end) and int8 logits dequantized at drain
+        self._quant = acc.quant
         self._single_rank = len(self._in_shape)
         self._max_wait = max(0.0, max_wait_ms) / 1e3
         self._pending: deque = deque()
@@ -921,7 +1005,16 @@ class ServingSession:
     # -- client side --------------------------------------------------------
     def _stage(self, x) -> tuple[np.ndarray, bool]:
         """Validate + host-stage one request (no jax dispatch, no locks)."""
-        x = np.asarray(x, self._in_dtype)
+        x = np.asarray(x)
+        if self._quant is not None and np.issubdtype(x.dtype, np.floating):
+            # round-and-clip by the calibrated input scale — a bare dtype
+            # cast would TRUNCATE floats toward zero and skip the clip
+            x = np.clip(
+                np.round(x.astype(np.float32)
+                         / np.float32(self._quant.input_scale)),
+                -127, 127).astype(self._in_dtype)
+        else:
+            x = np.asarray(x, self._in_dtype)
         if x.ndim == self._single_rank:
             x, single = x[None], True
         elif x.ndim == self._single_rank + 1:
@@ -1016,7 +1109,7 @@ class ServingSession:
         def _sync_oldest():
             s0, e0, y = inflight.popleft()
             try:
-                y_np = np.asarray(y)             # host sync
+                y_np = self._to_host(y)          # host sync (+ dequant)
             finally:
                 self._slots.release()
             done_t = time.monotonic()
@@ -1114,6 +1207,19 @@ class ServingSession:
                     break                # batching window expired
                 self._cv.wait(timeout)
             return group, n
+
+    def _to_host(self, y) -> np.ndarray:
+        """Host-sync one device batch; dequantize int8 logits to fp32.
+
+        Dequantization is gated on the ARRAY dtype, not just the session:
+        the ``acc(x)`` fallback path (segmented/strict accelerators)
+        already returns dequantized fp32, and rescaling it twice would
+        corrupt every co-batched result."""
+        y_np = np.asarray(y)
+        if self._quant is not None and y_np.dtype == np.int8:
+            return (y_np.astype(np.float32)
+                    * np.float32(self._quant.output_scale))
+        return y_np
 
     def _run_bucket(self, x):
         b = x.shape[0]
@@ -1220,7 +1326,8 @@ class ServingSession:
             group, y = item
             exc = None
             try:
-                y_np = np.asarray(y)             # the one host sync per batch
+                y_np = self._to_host(y)  # the one host sync per batch
+                                         # (+ dequant for int8 sessions)
             except Exception as e:  # noqa: BLE001 — device error surfaces here
                 exc = e
             with self._inflight_cv:

@@ -93,11 +93,15 @@ def enumerate_fpga_candidates(t: pm.FPGATarget,
 
 
 def _fpga_layer_best(t: pm.FPGATarget, cand: FPGACandidate,
-                     spec: ConvSpec) -> tuple[LayerPlan, float]:
-    """Step (2): best (mode, dataflow) for one layer under one candidate."""
+                     spec: ConvSpec,
+                     allow_wino: bool = True) -> tuple[LayerPlan, float]:
+    """Step (2): best (mode, dataflow) for one layer under one candidate.
+    ``allow_wino=False`` restricts the search to spatial plans — the
+    quantized PE has no int8 U-space transform, so int8 DSE must not rank
+    (let alone pick) Winograd candidates it cannot execute."""
     best = None
     for mode in ("spat", "wino"):
-        if mode == "wino" and not spec.wino_eligible(cand.m):
+        if mode == "wino" and not (allow_wino and spec.wino_eligible(cand.m)):
             continue
         for dataflow in ("is", "ws"):
             lat = pm.fpga_layer_latency(t, spec, cand.pi, cand.po, cand.pt,
@@ -111,7 +115,8 @@ LayerSpec = ConvSpec | PoolSpec | FCSpec | EltwiseSpec | DepthwiseSpec
 
 
 def run_fpga_dse(t: pm.FPGATarget,
-                 specs: Sequence[LayerSpec]) -> DSEResult:
+                 specs: Sequence[LayerSpec],
+                 quantized: bool = False) -> DSEResult:
     if not specs:
         raise DSEError("FPGA DSE: empty layer list — nothing to plan")
     cands = enumerate_fpga_candidates(t)
@@ -142,7 +147,8 @@ def run_fpga_dse(t: pm.FPGATarget,
                 plan, lat = NO_PLAN, pm.fpga_dw_latency(
                     t_inst, spec, cand.pi, cand.pt)
             else:
-                plan, lat = _fpga_layer_best(t_inst, cand, spec)
+                plan, lat = _fpga_layer_best(t_inst, cand, spec,
+                                             allow_wino=not quantized)
             plans.append(plan)
             lats.append(lat / cand.ni)  # throughput: NI images in flight
         total = sum(lats)
@@ -192,10 +198,11 @@ def _tpu_groups(spec: ConvSpec, mode: str, m: int, batch: int,
 
 
 def _tpu_layer_best(t: pm.TPUTarget, cand: TPUCandidate, spec: ConvSpec,
-                    batch: int) -> tuple[LayerPlan, float]:
+                    batch: int,
+                    allow_wino: bool = True) -> tuple[LayerPlan, float]:
     best = None
     for mode in ("spat", "wino"):
-        if mode == "wino" and not spec.wino_eligible(cand.m):
+        if mode == "wino" and not (allow_wino and spec.wino_eligible(cand.m)):
             continue
         g_h, g_k = _tpu_groups(spec, mode, cand.m, batch, t)
         for dataflow in ("is", "ws"):
@@ -209,7 +216,8 @@ def _tpu_layer_best(t: pm.TPUTarget, cand: TPUCandidate, spec: ConvSpec,
 
 
 def run_tpu_dse(specs: Sequence[LayerSpec], batch: int = 1,
-                t: pm.TPUTarget = pm.V5E) -> DSEResult:
+                t: pm.TPUTarget = pm.V5E,
+                quantized: bool = False) -> DSEResult:
     if not specs:
         raise DSEError("TPU DSE: empty layer list — nothing to plan")
     cands = enumerate_tpu_candidates(t)
@@ -233,7 +241,8 @@ def run_tpu_dse(specs: Sequence[LayerSpec], batch: int = 1,
             elif isinstance(spec, DepthwiseSpec):
                 plan, lat = NO_PLAN, pm.tpu_dw_latency(t, spec, batch)
             else:
-                plan, lat = _tpu_layer_best(t, cand, spec, batch)
+                plan, lat = _tpu_layer_best(t, cand, spec, batch,
+                                            allow_wino=not quantized)
             plans.append(plan)
             lats.append(lat)
         total = sum(lats)

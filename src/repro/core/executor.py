@@ -94,6 +94,8 @@ from repro.core.hybrid_conv import (
 )
 from repro.core.isa import Opcode, unpack_dw_geom, unpack_fc_dims
 from repro.core.winograd import transform_weights, winograd_apply_pretransformed
+from repro.quant.execute import qconv2d, qdense, qdepthwise, qeltwise
+from repro.quant.sidecar import LayerQuant, QuantSidecar
 
 
 class HazardError(RuntimeError):
@@ -370,18 +372,38 @@ def width_pad(cl: CompiledLayer) -> tuple[int, int]:
 def conv_block_forward(cl: CompiledLayer, x_slab: jax.Array,
                        w_grp: jax.Array, b_grp: jax.Array, relu: bool,
                        *, backend: str = "xla",
-                       interpret: bool | None = None) -> jax.Array:
+                       interpret: bool | None = None,
+                       quant: LayerQuant | None = None,
+                       k_range: tuple[int, int] | None = None) -> jax.Array:
     """One COMP block on the selected PE backend.
 
     ``x_slab`` is the row-group slice (halo included, vertical padding
     materialized); ``w_grp`` the k-group slice of the DRAM weight image
     (U-space for Winograd). Shared by the lowered executor and the strict
     interpreter's COMP handler so the two paths route through one PE
-    implementation per backend.
+    implementation per backend. ``quant`` switches the block to the int8
+    PE (``repro.quant.execute``): int8 in/weights, int32 accumulate, fused
+    requantize(+ReLU) epilogue — spatial mode only (the DSE keeps Winograd
+    plans off quantized builds). When ``w_grp``/``b_grp`` are a k-group
+    slice of the layer, ``k_range=(lo, hi)`` slices a per-channel
+    multiplier to match (a per-tensor scalar is slice-invariant).
     """
     spec, plan = cl.spec, cl.plan
     dtype = x_slab.dtype
     wpad = width_pad(cl)
+    if quant is not None:
+        if plan.mode == "wino":
+            raise ValueError(
+                f"layer {cl.layer_id}: Winograd plans cannot execute int8 "
+                f"(the U-space transform is fp-only) — rebuild with "
+                f"dtype='int8' so the DSE falls back to spatial")
+        mult = quant.multiplier
+        if k_range is not None and np.ndim(mult):
+            mult = mult[k_range[0]:k_range[1]]
+        return qconv2d(x_slab, w_grp, b_grp, mult=mult,
+                       stride=spec.stride, padding=((0, 0), wpad),
+                       relu=relu, use_pallas=backend == "pallas",
+                       interpret=interpret)
     if plan.mode == "wino":
         x_p = jnp.pad(x_slab, ((0, 0), (0, 0), wpad, (0, 0)))
         if backend == "pallas":
@@ -535,13 +557,18 @@ def analyze_program(program: Program, *, backend: str = "xla",
 
 def _layer_forward_fused(cl: CompiledLayer, w_eff: jax.Array,
                          bias: jax.Array, x: jax.Array, relu: bool, *,
-                         backend: str, interpret: bool | None) -> jax.Array:
+                         backend: str, interpret: bool | None,
+                         quant: LayerQuant | None = None) -> jax.Array:
     """One whole-layer PE dispatch — the blocked assembly collapsed to a
-    single virtual block covering all rows and the full weight image."""
+    single virtual block covering all rows and the full weight image.
+    Valid under ``quant`` too: integer accumulation is exact, so the fused
+    int32 sums equal the per-block sums bit for bit and the elementwise
+    requantize epilogue commutes with the block partition."""
     ho, _ = cl.spec.out_hw
     x_slab = slice_input_span(cl, x, 0, ho)
     blk = conv_block_forward(cl, x_slab, w_eff, bias, relu,
-                             backend=backend, interpret=interpret)
+                             backend=backend, interpret=interpret,
+                             quant=quant)
     return blk[:, :ho]
 
 
@@ -576,7 +603,8 @@ def _layer_forward_stacked(cl: CompiledLayer, w_eff: jax.Array,
 def _layer_forward(cl: CompiledLayer, w_eff: jax.Array, bias: jax.Array,
                    x_stored: jax.Array, relu_of, *, backend: str = "xla",
                    interpret: bool | None = None,
-                   lowering: LayerLowering | None = None) -> jax.Array:
+                   lowering: LayerLowering | None = None,
+                   quant: LayerQuant | None = None) -> jax.Array:
     """One layer as blocked compute over the compiled (row, k) groups.
 
     ``w_eff`` is the DRAM-resident weight image: U-space ``(PT, PT, C, K)``
@@ -591,10 +619,17 @@ def _layer_forward(cl: CompiledLayer, w_eff: jax.Array, bias: jax.Array,
     x = layouts.load_view(x_stored, cl.inp_layout, hw=(spec.h, spec.w))
     dtype = x_stored.dtype
 
+    # the stacked form masks ReLU AFTER the PE call — wrong under quant,
+    # where ReLU must precede the requantize epilogue; keep the literal
+    # blocked lowering for those (rare mixed-RELU) layers instead
+    if quant is not None and lowering is not None \
+            and lowering.kind == "stacked":
+        lowering = None
+
     if lowering is not None and lowering.kind == "fused":
         y = _layer_forward_fused(cl, w_eff, bias, x, lowering.relu,
-                                 backend=backend,
-                                 interpret=interpret).astype(dtype)
+                                 backend=backend, interpret=interpret,
+                                 quant=quant).astype(dtype)
     elif lowering is not None and lowering.kind == "stacked":
         y = _layer_forward_stacked(cl, w_eff, bias, x, lowering,
                                    backend=backend,
@@ -607,7 +642,8 @@ def _layer_forward(cl: CompiledLayer, w_eff: jax.Array, bias: jax.Array,
             for kg, (lo, hi) in enumerate(cl.k_groups):
                 blk = conv_block_forward(
                     cl, x_slab, w_eff[..., lo:hi], bias[lo:hi],
-                    relu_of(ih, kg), backend=backend, interpret=interpret)
+                    relu_of(ih, kg), backend=backend, interpret=interpret,
+                    quant=quant, k_range=(lo, hi))
                 k_blocks.append(blk[:, :r1 - r0].astype(dtype))
             row_slabs.append(k_blocks[0] if len(k_blocks) == 1
                              else jnp.concatenate(k_blocks, axis=-1))
@@ -633,34 +669,44 @@ def pool_forward(cl: CompiledLayer, x_stored: jax.Array,
 
 def fc_forward(cl: CompiledLayer, w: jax.Array, bias: jax.Array,
                x_stored: jax.Array, relu: bool, *, backend: str = "xla",
-               interpret: bool | None = None) -> jax.Array:
+               interpret: bool | None = None,
+               quant: LayerQuant | None = None) -> jax.Array:
     """One FC layer: identity LOAD view, flatten, run the dense PE.
 
     ``load_view`` honors ``inp_layout`` so a hand-built stream whose
     previous layer stored tile-major WINO still flattens in NHWC order
     (compiler-emitted programs always store SPAT before FC). Shared by the
     interpreter and the lowered executor; ``backend="pallas"`` routes the
-    matmul through the shared ``kernels/gemm`` PE.
+    matmul through the shared ``kernels/gemm`` PE (the int8 GEMM variant
+    when ``quant`` is set).
     """
     x = layouts.load_view(x_stored, cl.inp_layout)
     x = x.reshape(x.shape[0], -1)
+    if quant is not None:
+        return qdense(x, w, bias, mult=quant.multiplier, relu=relu,
+                      use_pallas=backend == "pallas", interpret=interpret)
     return dense(x, w, bias, relu=relu, use_pallas=backend == "pallas",
                  interpret=interpret)
 
 
 def eltwise_forward(cl: CompiledLayer, x_stored: jax.Array,
-                    skip_stored: jax.Array, relu: bool) -> jax.Array:
+                    skip_stored: jax.Array, relu: bool,
+                    quant: LayerQuant | None = None) -> jax.Array:
     """One ELTWISE_ADD block: two identity LOAD views -> add (+ ReLU).
 
     ``x_stored``/``skip_stored`` are the producers' STORED tensors (the
     compiler records each operand's layout on the CompiledLayer); like POOL,
     the add is element-parallel VPU work on both backends. Shared by the
     interpreter and the lowered executor so the residual-add math can never
-    drift between paths.
+    drift between paths. Under ``quant`` the two int8 operands carry
+    different scales, so the add runs through ``qeltwise`` (dequantize into
+    output units, add, ReLU, requantize).
     """
     hw = (cl.spec.h, cl.spec.w)
     a = layouts.load_view(x_stored, cl.inp_layout, hw=hw)
     b = layouts.load_view(skip_stored, cl.skip_layout, hw=hw)
+    if quant is not None:
+        return qeltwise(a, b, quant, relu)
     y = a.astype(jnp.float32) + b.astype(jnp.float32)
     if relu:
         y = jnp.maximum(y, 0.0)
@@ -668,15 +714,21 @@ def eltwise_forward(cl: CompiledLayer, x_stored: jax.Array,
 
 
 def depthwise_forward(cl: CompiledLayer, w: jax.Array, bias: jax.Array,
-                      x_stored: jax.Array, relu: bool) -> jax.Array:
+                      x_stored: jax.Array, relu: bool,
+                      quant: LayerQuant | None = None) -> jax.Array:
     """One DEPTHWISE_CONV block: identity LOAD view -> per-channel conv.
 
     Depthwise conv is VPU work, not an MXU GEMM — like POOL it lowers
     through the same XLA grouped-conv op on both backends (see
-    docs/ARCHITECTURE.md). Shared by the interpreter and the lowered
-    executor.
+    docs/ARCHITECTURE.md); ``quant`` swaps in the int32-accumulating
+    grouped conv + requantize epilogue. Shared by the interpreter and the
+    lowered executor.
     """
     x = layouts.load_view(x_stored, cl.inp_layout, hw=(cl.spec.h, cl.spec.w))
+    if quant is not None:
+        return qdepthwise(x, w, bias, mult=quant.multiplier,
+                          stride=cl.spec.stride, padding=cl.spec.padding,
+                          relu=relu)
     return depthwise_conv2d(
         x, w, bias, stride=cl.spec.stride, padding=cl.spec.padding,
         relu=relu, out_dtype=x_stored.dtype)
@@ -721,7 +773,8 @@ def to_dram_params(program: Program, params: list) -> list:
 
 
 def lower_program(program: Program, *, backend: str = "xla",
-                  interpret: bool | None = None, opt_level: int = 1
+                  interpret: bool | None = None, opt_level: int = 1,
+                  quant: QuantSidecar | None = None
                   ) -> Callable[[list, jax.Array], jax.Array]:
     """Lower a validated schedule to ``execute(params, x_nhwc) -> y_nhwc``.
 
@@ -737,11 +790,23 @@ def lower_program(program: Program, *, backend: str = "xla",
     optimizer (:func:`analyze_program`) and emits the fused / stacked forms
     for layers where they are provably equivalent; ``opt_level=0`` keeps
     the literal per-block lowering everywhere.
+
+    ``quant`` (a :class:`repro.quant.QuantSidecar`) lowers every
+    parameterized block through the int8 PE instead — params must then be
+    the quantized image (``repro.quant.quantize_params``) and ``x_nhwc``
+    int8 at the sidecar's input scale. The schedule, blocking, and
+    liveness walk are untouched: quantization changes each block's
+    arithmetic, never the program.
     """
     backend, interpret = resolve_backend(backend, interpret)
     opt_level = resolve_opt_level(opt_level)
     for cl in program.layers:
         if cl.kind == "conv" and cl.plan.mode == "wino":
+            if quant is not None:
+                raise ValueError(
+                    f"layer {cl.layer_id}: Winograd plans cannot execute "
+                    f"int8 — plan with the dtype='int8' DSE (wino falls "
+                    f"back to spatial)")
             assert cl.spec.r == 3 and cl.spec.s == 3, \
                 "runtime pre-transform supports r=s=3 (VGG family)"
 
@@ -777,6 +842,7 @@ def lower_program(program: Program, *, backend: str = "xla",
         y = x
         for cl in program.layers:
             x_in = stash[cl.primary_src()]
+            lq = quant.layers[cl.layer_id] if quant is not None else None
             relu00 = relu_bits.get((cl.layer_id, 0, 0), cl.spec.relu) \
                 if cl.kind != "pool" else False
             if cl.kind == "pool":
@@ -784,16 +850,18 @@ def lower_program(program: Program, *, backend: str = "xla",
                     cl.layer_id, (cl.spec.window, cl.spec.stride))
                 y = pool_forward(cl, x_in, window, stride)
             elif cl.kind == "eltwise":
-                y = eltwise_forward(cl, x_in, stash[cl.skip_src], relu00)
+                y = eltwise_forward(cl, x_in, stash[cl.skip_src], relu00,
+                                    quant=lq)
             elif cl.kind == "fc":
                 w_eff, b = params[pi]
                 pi += 1
                 y = fc_forward(cl, w_eff, b, x_in, relu00,
-                               backend=backend, interpret=interpret)
+                               backend=backend, interpret=interpret,
+                               quant=lq)
             elif cl.kind == "dw":
                 w_eff, b = params[pi]
                 pi += 1
-                y = depthwise_forward(cl, w_eff, b, x_in, relu00)
+                y = depthwise_forward(cl, w_eff, b, x_in, relu00, quant=lq)
             else:
                 w_eff, b = params[pi]
                 pi += 1
@@ -802,7 +870,7 @@ def lower_program(program: Program, *, backend: str = "xla",
                     lambda ih, kg, cl=cl: relu_bits.get((cl.layer_id, ih, kg),
                                                         cl.spec.relu),
                     backend=backend, interpret=interpret,
-                    lowering=lowerings.get(cl.layer_id))
+                    lowering=lowerings.get(cl.layer_id), quant=lq)
             # _layer_forward applies the SAVE-side layout reorder itself;
             # the single-dispatch kinds store what the consumer's LOAD wants
             if cl.kind != "conv" and cl.out_layout == "wino":
@@ -872,7 +940,8 @@ def compile_executor(program: Program,
                      interpret: bool | None = None,
                      opt_level: int = 1,
                      donate_input: bool = False,
-                     mesh=None) -> CompiledExecutor:
+                     mesh=None,
+                     quant: QuantSidecar | None = None) -> CompiledExecutor:
     """Validate (unless pre-validated stats are supplied), lower, and jit.
 
     ``backend``/``interpret`` select the per-block PE and ``opt_level`` the
@@ -899,7 +968,7 @@ def compile_executor(program: Program,
     backend, interpret = resolve_backend(backend, interpret)
     opt_level = resolve_opt_level(opt_level)
     execute = lower_program(program, backend=backend, interpret=interpret,
-                            opt_level=opt_level)
+                            opt_level=opt_level, quant=quant)
     if mesh is not None and mesh_device_count(mesh) > 1:
         from jax.sharding import PartitionSpec
 

@@ -58,12 +58,31 @@ class FPGATarget:
                                 # single die (cross-die routing breaks timing,
                                 # Sec. 1 — the reason VU9P runs 6 instances)
 
-    def run_dse(self, specs, batch: int = 1):
+    def int8_variant(self) -> "FPGATarget":
+        """This device's constants under int8 arithmetic: 8-bit words
+        (narrower BRAM partitions and 1.5x more words/s through the same
+        byte bandwidth) and two packed MACs per DSP slice (the paper's
+        Sec. 5.1 low-precision packing, one step further down from 12-bit)
+        — so the DSE both *fits bigger PE arrays* and *streams more words*
+        when ranking int8 candidates."""
+        return dataclasses.replace(
+            self, name=f"{self.name}-int8", data_width=8,
+            dsp_per_mac=self.dsp_per_mac / 2,
+            bw=self.bw * self.data_width / 8)
+
+    def run_dse(self, specs, batch: int = 1, dtype: str = "float32"):
         """Unified ``Target`` entry point (see ``repro.api``): Step 1-3 of
         the paper's DSE for this device. ``batch`` is accepted for signature
         parity with the TPU target — the FPGA latency model is per-image
-        (batch parallelism comes from the NI instances)."""
+        (batch parallelism comes from the NI instances). ``dtype="int8"``
+        plans against :meth:`int8_variant` with Winograd gated off (the
+        U-space transform is fp-only, mirroring the paper's per-layer
+        hybrid-mode choice)."""
         from repro.core.dse import run_fpga_dse
+        if dtype == "int8":
+            return run_fpga_dse(self.int8_variant(), specs, quantized=True)
+        if dtype != "float32":
+            raise ValueError(f"unsupported DSE dtype {dtype!r}")
         return run_fpga_dse(self, specs)
 
 
@@ -92,11 +111,27 @@ class TPUTarget:
     sublane: int = 8
     vpu_flops: float = 4 * 985e9        # VPU lanes for the Winograd transforms
 
-    def run_dse(self, specs, batch: int = 1):
+    def int8_variant(self) -> "TPUTarget":
+        """This chip's constants under int8 arithmetic: 1-byte words through
+        the memory system and double the MXU MAC rate (int8 ops run at 2x
+        the bf16 peak on v5e-class parts) — halves every bandwidth-bound
+        term and the compute-bound term alike when ranking int8 plans."""
+        return dataclasses.replace(
+            self, name=f"{self.name}-int8", bytes_per_word=1,
+            peak_flops=2 * self.peak_flops)
+
+    def run_dse(self, specs, batch: int = 1, dtype: str = "float32"):
         """Unified ``Target`` entry point (see ``repro.api``): enumerate GEMM
         block candidates under this chip's VMEM budget and plan per-layer
-        (mode, dataflow, m, g_h, g_k) at the given serving batch."""
+        (mode, dataflow, m, g_h, g_k) at the given serving batch.
+        ``dtype="int8"`` plans against :meth:`int8_variant` with Winograd
+        gated off (no int8 U-space transform)."""
         from repro.core.dse import run_tpu_dse
+        if dtype == "int8":
+            return run_tpu_dse(specs, batch=batch, t=self.int8_variant(),
+                               quantized=True)
+        if dtype != "float32":
+            raise ValueError(f"unsupported DSE dtype {dtype!r}")
         return run_tpu_dse(specs, batch=batch, t=self)
 
 

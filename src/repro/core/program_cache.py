@@ -134,7 +134,8 @@ class ProgramCache:
     def get(self, program: Program, *, batch: int, dtype,
             param_dtypes: tuple = (), backend: str = "xla",
             interpret: bool | None = None, opt_level: int = 1,
-            donate_input: bool = False, mesh=None) -> CompiledExecutor:
+            donate_input: bool = False, mesh=None,
+            quant=None) -> CompiledExecutor:
         """The jitted executor for ``program`` at this
         batch/dtype/backend/opt_level/mesh (compile on miss).
 
@@ -147,7 +148,11 @@ class ProgramCache:
         ``core/executor.py``); all join the key in resolved form. ``mesh``
         requests the shard_map'd executor variant (batch axis split over
         every mesh axis, params replicated) keyed by mesh topology — the
-        batch must divide evenly by the mesh's device count.
+        batch must divide evenly by the mesh's device count. ``quant`` (a
+        ``repro.quant.QuantSidecar``) lowers through the int8 PE and joins
+        the key by content digest — the int8 dtype alone is not enough,
+        since two calibrations of one network bake different requantize
+        multipliers into the trace.
         """
         backend, interpret = resolve_backend(backend, interpret)
         opt_level = resolve_opt_level(opt_level)
@@ -164,7 +169,8 @@ class ProgramCache:
                 f"the mesh for this batch size")
         key = (program.schedule_key(), int(batch), jnp.dtype(dtype).name,
                tuple(param_dtypes), backend, interpret, opt_level,
-               bool(donate_input), mesh_key(mesh))
+               bool(donate_input), mesh_key(mesh),
+               quant.digest() if quant is not None else None)
         with self._lock:
             entry = self._entries.get(key)
             if entry is not None:
@@ -174,7 +180,8 @@ class ProgramCache:
         stats = self.validate(program)
         entry = compile_executor(program, stats=stats, backend=backend,
                                  interpret=interpret, opt_level=opt_level,
-                                 donate_input=donate_input, mesh=mesh)
+                                 donate_input=donate_input, mesh=mesh,
+                                 quant=quant)
         with self._lock:
             # re-check: a racing thread may have compiled the same key while
             # we were outside the lock — first insert wins so every caller

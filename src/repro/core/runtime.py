@@ -114,12 +114,20 @@ class HybridRuntime:
     cache:
         A :class:`~repro.core.program_cache.ProgramCache` override;
         defaults to the process-global cache.
+    quant:
+        A :class:`repro.quant.QuantSidecar` switches every parameterized
+        block (both paths) to the int8 PE dispatch. Params must then be
+        the quantized image (``repro.quant.quantize_params``); a floating
+        input is quantized at the sidecar's input scale on entry, and the
+        output is the network's int8 logits (dequantize with
+        ``quant.dequantize_output``). Joins the program-cache key via the
+        sidecar digest.
     """
 
     def __init__(self, program: Program, use_pallas: bool = False,
                  interpret: bool | None = None, strict: bool = False,
                  cache=None, backend: str | None = None,
-                 opt_level: int = 1):
+                 opt_level: int = 1, quant=None):
         if backend is None:
             backend = "pallas" if use_pallas else "xla"
         # validate eagerly; keep the unresolved pair (the cache resolves
@@ -130,6 +138,7 @@ class HybridRuntime:
         self.use_pallas = backend == "pallas"
         self.interpret = interpret
         self.opt_level = resolve_opt_level(opt_level)
+        self.quant = quant
         self.strict = strict
         self._cache = cache
         self.dram: dict[int, Any] = {}
@@ -197,7 +206,8 @@ class HybridRuntime:
             self.program, batch=batch, dtype=dtype,
             param_dtypes=tuple(jnp.dtype(w.dtype).name for w, _ in params),
             backend=self.backend, interpret=self.interpret,
-            opt_level=self.opt_level, donate_input=donate_input, mesh=mesh)
+            opt_level=self.opt_level, donate_input=donate_input, mesh=mesh,
+            quant=self.quant)
         return entry, params
 
     def write_input(self, x_nhwc):
@@ -217,6 +227,7 @@ class HybridRuntime:
             return self._run_interpreter(x_nhwc)
         if self._raw_params is None:
             raise RuntimeError("load_params must be called before run()")
+        x_nhwc = self._maybe_quantize_input(x_nhwc)
         if x_nhwc is not None:
             self.write_input(x_nhwc)       # same DRAM contract as strict mode
         else:
@@ -236,7 +247,16 @@ class HybridRuntime:
         self.dram[self.program.layers[-1].out_addr] = y
         return y
 
+    def _maybe_quantize_input(self, x_nhwc):
+        """Quantized runtimes accept fp inputs for convenience: quantize at
+        the sidecar's input scale (a no-op for already-int8 inputs)."""
+        if self.quant is not None and x_nhwc is not None \
+                and jnp.issubdtype(jnp.asarray(x_nhwc).dtype, jnp.floating):
+            return self.quant.quantize_input(x_nhwc)
+        return x_nhwc
+
     def _run_interpreter(self, x_nhwc=None):
+        x_nhwc = self._maybe_quantize_input(x_nhwc)
         if x_nhwc is not None:
             self.write_input(x_nhwc)
         inp_slots = [_Slot(), _Slot()]
@@ -338,7 +358,8 @@ class HybridRuntime:
                 out_blocks[(0, 0)] = fc_forward(
                     cl, wgt_slots[wslot].data, bias_buf.data,
                     inp_slots[islot].data, ins.relu_flag,
-                    backend=self.backend, interpret=self.interpret)
+                    backend=self.backend, interpret=self.interpret,
+                    quant=self._layer_quant(cl))
                 self.stats["fc"] += 1
             elif op == Opcode.ELTWISE_ADD:
                 pslot = ins.buff_base & 1
@@ -363,7 +384,7 @@ class HybridRuntime:
                         f"holds {inp_slots[sslot].tag}")
                 out_blocks[(0, 0)] = eltwise_forward(
                     cl, inp_slots[pslot].data, inp_slots[sslot].data,
-                    ins.relu_flag)
+                    ins.relu_flag, quant=self._layer_quant(cl))
                 self.stats["eltwise"] += 1
             elif op == Opcode.DEPTHWISE_CONV:
                 islot = ins.buff_base & 1
@@ -387,7 +408,8 @@ class HybridRuntime:
                         f"DEPTHWISE L{ins.layer_id}: stale bias buffer")
                 out_blocks[(0, 0)] = depthwise_forward(
                     cl, wgt_slots[wslot].data, bias_buf.data,
-                    inp_slots[islot].data, ins.relu_flag)
+                    inp_slots[islot].data, ins.relu_flag,
+                    quant=self._layer_quant(cl))
                 self.stats["dw"] += 1
             elif op == Opcode.SAVE and cl.kind != "conv":
                 if (0, 0) not in out_blocks:
@@ -451,6 +473,10 @@ class HybridRuntime:
         path share one copy of the halo arithmetic."""
         return slice_input_rows(cl, self._input_nhwc(cl), ih)
 
+    def _layer_quant(self, cl: CompiledLayer):
+        return self.quant.layers[cl.layer_id] if self.quant is not None \
+            else None
+
     def _compute(self, cl: CompiledLayer, x_slab, w_grp, bias, ih, kg, ins):
         lo, hi = cl.k_groups[kg]
         # one shared per-block PE dispatch (executor.conv_block_forward) so
@@ -458,7 +484,8 @@ class HybridRuntime:
         # backend knob routes both through the same XLA or Pallas PE
         blk = conv_block_forward(
             cl, x_slab, w_grp, bias[lo:hi], ins.relu_flag,
-            backend=self.backend, interpret=self.interpret)
+            backend=self.backend, interpret=self.interpret,
+            quant=self._layer_quant(cl), k_range=(lo, hi))
         r0, r1 = cl.row_groups[ih]
         return blk[:, :r1 - r0]
 

@@ -20,6 +20,7 @@ INTERPRET = jax.default_backend() != "tpu"
 # TPU hardware constants (v5e) used for block-shape heuristics.
 LANE = 128          # last-dim tiling (VREG lane count, MXU edge)
 SUBLANE = 8         # second-to-last dim tiling for fp32
+SUBLANE_I8 = 32     # second-to-last dim tiling for int8 (min tile 32x128)
 VMEM_BYTES = 128 * 1024 * 1024  # per-core VMEM budget (v5e ~128MB)
 
 

@@ -100,7 +100,7 @@ def serve_cnn(arch: str = "vgg16", *, reduced: bool = True, batch: int = 8,
               segmented: bool = False, target: str = "tpu",
               session: bool = False, backend: str = "xla",
               opt_level: int = 1, mesh: str = "host",
-              scheduler: str = "continuous"):
+              scheduler: str = "continuous", dtype: str = "float32"):
     """CNN inference through the full HybridDNN pipeline — now a thin driver
     over ``repro.api``.
 
@@ -116,6 +116,9 @@ def serve_cnn(arch: str = "vgg16", *, reduced: bool = True, batch: int = 8,
     kernels (interpret-mode off-TPU) instead of the XLA lowering;
     ``opt_level=0`` disables the lowering optimizer (literal per-block
     lowering — the reference the fused default is tested against).
+    ``dtype="int8"`` serves the quantized accelerator (post-training
+    calibration on the request distribution, int8 PEs with fused
+    requantize, int8-aware DSE — see ``docs/ARCHITECTURE.md``).
     """
     from repro import api
     from repro.core import perf_model as pm
@@ -141,17 +144,22 @@ def serve_cnn(arch: str = "vgg16", *, reduced: bool = True, batch: int = 8,
                                       n_classes=n_classes)
     else:
         specs = vgg.network_specs(img=img, scale=scale, n_classes=n_classes)
+    rng = np.random.default_rng(seed + 1)
+    x_np = rng.standard_normal((batch, img, img, 3)).astype(np.float32)
     t0 = time.monotonic()
+    # int8 calibrates on the request distribution itself — the serving
+    # analog of calibrating on a training-set slice
     acc = api.Accelerator.build(specs, target=getattr(pm, CNN_TARGETS[target]),
                                 batch=batch, seed=seed, segmented=segmented,
-                                backend=backend, opt_level=opt_level)
+                                backend=backend, opt_level=opt_level,
+                                dtype=dtype,
+                                calib=x_np if dtype == "int8" else None)
     t_build = time.monotonic() - t0
     print(acc.summary())
     print(f"build (DSE+compile+validate): {t_build * 1e3:.0f}ms; "
-          f"PE backend: {backend}; opt_level: {opt_level}")
+          f"PE backend: {backend}; opt_level: {opt_level}; dtype: {dtype}")
 
-    rng = np.random.default_rng(seed + 1)
-    x = jnp.asarray(rng.standard_normal((batch, img, img, 3)), jnp.float32)
+    x = jnp.asarray(x_np)
     t0 = time.monotonic()
     y = jax.block_until_ready(acc(x))          # first request: jit trace
     t_first = time.monotonic() - t0
@@ -198,6 +206,8 @@ def serve_cnn(arch: str = "vgg16", *, reduced: bool = True, batch: int = 8,
         t0 = time.monotonic()
         y_i = jax.block_until_ready(strict_request(x))
         t_interp = time.monotonic() - t0
+        if acc.quant is not None:       # both paths emit int8: compare in
+            y_i = acc.quant.dequantize_output(y_i)   # the dequantized space
         err = float(jnp.max(jnp.abs(y - y_i)))
         print(f"interpreter: {t_interp * 1e3:.1f}ms/batch "
               f"({t_interp / t_steady:.1f}x slower than cached executor; "
@@ -240,6 +250,11 @@ def main():
     ap.add_argument("--backend", default="xla", choices=("xla", "pallas"),
                     help="PE implementation the executor lowers through "
                          "(pallas runs interpret-mode off-TPU)")
+    ap.add_argument("--dtype", default="float32",
+                    choices=("float32", "int8"),
+                    help="CNN serving precision: int8 builds the quantized "
+                         "accelerator (calibrated sidecar, int8 PEs with "
+                         "fused requantize, int8-aware DSE)")
     ap.add_argument("--opt-level", type=int, default=1, choices=(0, 1),
                     help="lowering-optimizer level: 1 fuses each layer's "
                          "per-block loop into one PE dispatch where "
@@ -253,7 +268,7 @@ def main():
                       segmented=args.segmented, target=args.target,
                       session=args.session, backend=args.backend,
                       opt_level=args.opt_level, mesh=args.mesh,
-                      scheduler=args.scheduler)
+                      scheduler=args.scheduler, dtype=args.dtype)
         print("logits:", y.shape)
         return
     toks = serve(args.arch, reduced=args.reduced, batch=args.batch,

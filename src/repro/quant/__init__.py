@@ -1,0 +1,37 @@
+"""Post-training int8 quantization for the HybridDNN stack.
+
+The paper's headline GOPS come from fixed-point DSP-packed MACs (Sec. 5.1:
+12-bit fixed, two MACs per DSP at low precision); this package brings the
+arithmetic — not just the architecture — into the reproduction as an int8
+inference mode that threads through every tier:
+
+* ``observers`` / ``calibrate`` — post-training calibration: replay the spec
+  chain in fp32 over sample activations and record per-layer ranges
+  (min/max or percentile), producing per-tensor symmetric scales.
+* ``sidecar``   — the versioned ``QuantSidecar`` carried *alongside* the
+  ``Program``: scales ride in a JSON sidecar keyed to the schedule, so the
+  128-bit instruction words are untouched and the bit-exact recompile check
+  of ``save_program``/``from_program`` still holds.
+* ``execute``   — the int8 PE dispatch shared by all three execution paths
+  (jitted executor, strict interpreter, Pallas backend): int8 inputs and
+  weights, int32 accumulate, fused requantize(+ReLU) epilogue.
+
+Scheme: per-tensor symmetric, zero_point = 0 (``scale = amax / 127``,
+values clipped to [-127, 127] — the ``optim.compression`` convention).
+Integer convolution is exact, so fused whole-layer and per-block lowerings
+of the same stream are *bitwise* identical — the property the strict
+interpreter parity tests assert.
+"""
+from repro.quant.calibrate import calibrate
+from repro.quant.execute import (qconv2d, qdense, qdepthwise, qeltwise,
+                                 quantize_params, quantize_tensor, requantize)
+from repro.quant.observers import MinMaxObserver, PercentileObserver, make_observer
+from repro.quant.sidecar import FORMAT, LayerQuant, QuantSidecar
+
+__all__ = [
+    "FORMAT", "LayerQuant", "QuantSidecar",
+    "MinMaxObserver", "PercentileObserver", "make_observer",
+    "calibrate",
+    "qconv2d", "qdense", "qdepthwise", "qeltwise",
+    "quantize_params", "quantize_tensor", "requantize",
+]

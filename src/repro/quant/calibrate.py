@@ -1,0 +1,129 @@
+"""Post-training calibration: fp32 replay + range observation -> sidecar.
+
+Replays the spec chain with plain fp32 ops (the same stash-based walk as
+``models.resnet.reference_forward``, so every topology the compiler accepts
+calibrates — ``inp_from`` reroutes and ``skip_from`` residuals included),
+feeding one observer per produced tensor. Weight scales come straight from
+``|w|_max`` (weights are known exactly; clipping them buys nothing) —
+per-output-channel for CONV/FC, per-tensor for depthwise (its HWIO weight
+has a singleton output axis, so the channel axis is the GROUP axis and a
+per-channel vector would not broadcast over the conv result) — and
+POOL layers are pinned to scale passthrough: ``max()`` commutes with a
+positive rescale, so the pooled int8 map IS the pooled fp map quantized at
+the input scale — no epilogue, no observer.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hybrid_conv import (ConvSpec, DepthwiseSpec, EltwiseSpec,
+                                    FCSpec, PoolSpec, dense, depthwise_conv2d,
+                                    hybrid_conv2d, max_pool2d)
+from repro.optim.compression import quantize_int8
+from repro.quant.observers import make_observer
+from repro.quant.sidecar import LayerQuant, QuantSidecar
+
+
+def _replay_stash(specs, params, x_nhwc):
+    """One fp32 forward pass, returning every intermediate (keyed by spec
+    index; -1 = the network input)."""
+    stash = {-1: jnp.asarray(x_nhwc, jnp.float32)}
+    pi = 0
+    for i, spec in enumerate(specs):
+        if isinstance(spec, ConvSpec):
+            src = -1 if spec.inp_from == -1 else (
+                spec.inp_from if spec.inp_from is not None else i - 1)
+            w, b = params[pi]
+            pi += 1
+            y = hybrid_conv2d(stash[src], w, b, mode="spat",
+                              stride=spec.stride, padding=spec.padding,
+                              relu=spec.relu, use_pallas=False)
+        elif isinstance(spec, PoolSpec):
+            y = max_pool2d(stash[i - 1], spec.window, spec.stride)
+        elif isinstance(spec, EltwiseSpec):
+            y = stash[i - 1] + stash[spec.skip_from]
+            if spec.relu:
+                y = jnp.maximum(y, 0)
+        elif isinstance(spec, DepthwiseSpec):
+            w, b = params[pi]
+            pi += 1
+            y = depthwise_conv2d(stash[i - 1], w, b, stride=spec.stride,
+                                 padding=spec.padding, relu=spec.relu)
+        elif isinstance(spec, FCSpec):
+            w, b = params[pi]
+            pi += 1
+            x = stash[i - 1]
+            if x.ndim > 2:
+                x = x.reshape(x.shape[0], -1)
+            y = dense(x, w, b, relu=spec.relu)
+        else:
+            raise TypeError(f"unknown spec kind {type(spec).__name__}")
+        stash[i] = y
+    return stash
+
+
+def calibrate(specs: Sequence, params, calib_data, *,
+              observer: str = "percentile") -> QuantSidecar:
+    """Build a ``QuantSidecar`` for ``specs``/``params`` from sample inputs.
+
+    ``calib_data`` is one input batch (ndarray) or a list of batches;
+    ``observer`` is ``"percentile"`` (default, 99.9th |x|) or ``"minmax"``.
+    """
+    batches = [calib_data] if isinstance(calib_data, (np.ndarray, jnp.ndarray)) \
+        else list(calib_data)
+    if not batches:
+        raise ValueError("calibrate needs at least one sample batch")
+
+    obs_in = make_observer(observer)
+    obs = {i: make_observer(observer) for i, s in enumerate(specs)
+           if not isinstance(s, PoolSpec)}
+    for x in batches:
+        stash = _replay_stash(specs, params, x)
+        obs_in.observe(stash[-1])
+        for i, o in obs.items():
+            o.observe(stash[i])
+
+    def out_scale(i: int) -> float:
+        # POOL is scale passthrough — chase back to the real producer.
+        while i >= 0 and isinstance(specs[i], PoolSpec):
+            i -= 1
+        return obs_in.scale if i < 0 else obs[i].scale
+
+    def channel_scales(w) -> tuple[float, ...]:
+        # per-output-channel |w|_max over every other axis (the channel
+        # axis is last in both HWIO conv and (d_in, d_out) FC weights):
+        # one badly-scaled filter no longer poisons the whole layer
+        w = np.asarray(w, np.float32)
+        amax = np.abs(w).reshape(-1, w.shape[-1]).max(axis=0)
+        return tuple(float(s) for s in (amax + 1e-12) / 127.0)
+
+    layers, pi = [], 0
+    for i, spec in enumerate(specs):
+        if isinstance(spec, ConvSpec):
+            src = -1 if spec.inp_from == -1 else (
+                spec.inp_from if spec.inp_from is not None else i - 1)
+            ws = channel_scales(params[pi][0])
+            pi += 1
+            layers.append(LayerQuant("conv", out_scale(src), obs[i].scale,
+                                     wgt_scale=ws))
+        elif isinstance(spec, PoolSpec):
+            s = out_scale(i - 1)
+            layers.append(LayerQuant("pool", s, s, requantize=False))
+        elif isinstance(spec, EltwiseSpec):
+            layers.append(LayerQuant("eltwise", out_scale(i - 1), obs[i].scale,
+                                     skip_scale=out_scale(spec.skip_from)))
+        elif isinstance(spec, DepthwiseSpec):
+            _, ws = quantize_int8(np.asarray(params[pi][0], np.float32))
+            pi += 1
+            layers.append(LayerQuant("dw", out_scale(i - 1), obs[i].scale,
+                                     wgt_scale=float(ws)))
+        elif isinstance(spec, FCSpec):
+            ws = channel_scales(params[pi][0])
+            pi += 1
+            layers.append(LayerQuant("fc", out_scale(i - 1), obs[i].scale,
+                                     wgt_scale=ws))
+    return QuantSidecar(input_scale=obs_in.scale, layers=tuple(layers),
+                        observer=observer)

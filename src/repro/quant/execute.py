@@ -1,0 +1,127 @@
+"""The int8 PE dispatch — shared by executor, interpreter, and Pallas paths.
+
+All ops take int8 tensors, accumulate in int32 (exact — integer adds are
+associative, so fused whole-layer and per-block lowerings of one stream
+are *bitwise* identical), then requantize through a per-layer fp32
+multiplier. ReLU runs on the int32 accumulator before the rescale, which
+is exact because zero_point = 0. The XLA lowering uses
+``lax.conv_general_dilated(..., preferred_element_type=int32)``; the
+Pallas lowering routes im2col patches through the int8 GEMM kernel
+(``kernels.gemm.int8``), whose epilogue fuses the same bias+ReLU+requant.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.hybrid_conv import (ConvSpec, DepthwiseSpec, FCSpec)
+from repro.quant.sidecar import LayerQuant, QuantSidecar
+
+
+def requantize(y_i32, mult, relu: bool):
+    """int32 accumulator -> int8: optional ReLU, rescale, round, clip.
+    ``mult`` is a scalar (per-tensor weights) or a ``(K,)`` vector
+    (per-channel) broadcasting over the trailing channel axis."""
+    if relu:
+        y_i32 = jnp.maximum(y_i32, 0)
+    y = jnp.round(y_i32.astype(jnp.float32) * jnp.asarray(mult, jnp.float32))
+    return jnp.clip(y, -127, 127).astype(jnp.int8)
+
+
+def quantize_tensor(x, scale: float):
+    """fp -> int8 at a known scale (round-half-even, symmetric clip)."""
+    q = jnp.round(jnp.asarray(x, jnp.float32) / jnp.float32(scale))
+    return jnp.clip(q, -127, 127).astype(jnp.int8)
+
+
+def qconv2d(x_i8, w_i8, b_i32, *, mult, stride: int = 1,
+            padding="SAME", relu: bool = False,
+            use_pallas: bool = False, interpret: bool | None = None):
+    """int8 spatial convolution (Winograd is fp-only — the DSE keeps wino
+    plans off quantized builds; see ``api.Accelerator.build``)."""
+    if not use_pallas:
+        y = lax.conv_general_dilated(
+            x_i8, w_i8, (stride, stride), padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            preferred_element_type=jnp.int32)
+        return requantize(y + b_i32.astype(jnp.int32), mult, relu)
+    # im2col -> int8 GEMM PE (patch ordering (c, r, s) matches
+    # kernels/spatial_conv's weight reshape convention)
+    from repro.kernels.gemm.int8 import quantized_matmul
+    n = x_i8.shape[0]
+    r, s, c, k = w_i8.shape
+    patches = lax.conv_general_dilated_patches(
+        x_i8, (r, s), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))      # (N, HO, WO, C*R*S)
+    ho, wo = patches.shape[1], patches.shape[2]
+    a = patches.reshape(n * ho * wo, c * r * s)
+    b = w_i8.transpose(2, 0, 1, 3).reshape(c * r * s, k)
+    y = quantized_matmul(a, b, b_i32.astype(jnp.int32), mult=mult,
+                         relu=relu, interpret=interpret)
+    return y.reshape(n, ho, wo, k)
+
+
+def qdense(x_i8, w_i8, b_i32, *, mult, relu: bool = False,
+           use_pallas: bool = False, interpret: bool | None = None):
+    """int8 FC through the shared GEMM PE (int32 accumulate)."""
+    if use_pallas:
+        from repro.kernels.gemm.int8 import quantized_matmul
+        return quantized_matmul(x_i8, w_i8, b_i32.astype(jnp.int32),
+                                mult=mult, relu=relu,
+                                interpret=interpret)
+    y = jnp.dot(x_i8, w_i8, preferred_element_type=jnp.int32)
+    return requantize(y + b_i32.astype(jnp.int32), mult, relu)
+
+
+def qeltwise(a_i8, b_i8, lq: LayerQuant, relu: bool):
+    """Residual add across two int8 operands with different scales:
+    dequantize both into the OUTPUT scale's units, add, ReLU, round, clip.
+    Elementwise and deterministic, so executor == interpreter bitwise."""
+    ma = jnp.float32(float(lq.in_scale) / float(lq.out_scale))
+    mb = jnp.float32(float(lq.skip_scale) / float(lq.out_scale))
+    y = a_i8.astype(jnp.float32) * ma + b_i8.astype(jnp.float32) * mb
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return jnp.clip(jnp.round(y), -127, 127).astype(jnp.int8)
+
+
+def qdepthwise(x_i8, w_i8, b_i32, *, mult, stride: int = 1,
+               padding="SAME", relu: bool = False):
+    """int8 depthwise conv: grouped int32 conv + requant (VPU work — no
+    Pallas GEMM variant, same as the fp32 path)."""
+    c = x_i8.shape[-1]
+    y = lax.conv_general_dilated(
+        x_i8, w_i8, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c, preferred_element_type=jnp.int32)
+    return requantize(y + b_i32.astype(jnp.int32), mult, relu)
+
+
+def quantize_params(specs, params, sidecar: QuantSidecar):
+    """fp32 ``[(w, b), ...]`` -> int8 weights + int32 bias per the sidecar.
+
+    Bias is stored at scale ``in_scale * wgt_scale`` — the int32
+    accumulator's own units — so the epilogue adds it before the single
+    rescale.
+    """
+    out, pi = [], 0
+    for i, spec in enumerate(specs):
+        if not isinstance(spec, (ConvSpec, FCSpec, DepthwiseSpec)):
+            continue
+        lq = sidecar.layers[i]
+        w, b = params[pi]
+        pi += 1
+        # per-channel scales broadcast over the trailing (output-channel)
+        # weight axis and elementwise over the bias
+        ws = np.asarray(lq.wgt_scale, np.float32)
+        w_i8 = np.clip(np.round(np.asarray(w, np.float32) / ws),
+                       -127, 127).astype(np.int8)
+        b_i32 = np.round(np.asarray(b, np.float32)
+                         / (np.float32(lq.in_scale) * ws)).astype(np.int32)
+        out.append((jnp.asarray(w_i8), jnp.asarray(b_i32)))
+    if pi != len(params):
+        raise ValueError(
+            f"params/specs mismatch: {len(params)} param entries for "
+            f"{pi} parameterized layers")
+    return out

@@ -1,0 +1,66 @@
+"""Activation-range observers for post-training calibration.
+
+Both observers produce a per-tensor symmetric scale in the
+``optim.compression`` convention (``scale = amax / 127``, zero_point = 0) —
+``MinMaxObserver`` literally reuses ``compression.quantize_int8`` to derive
+each batch's scale, so the calibration arithmetic and the gradient
+compressor share one definition of "int8".
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.optim.compression import quantize_int8
+
+
+class MinMaxObserver:
+    """Running |max| over every observed batch (the conservative choice:
+    no clipping, widest scale)."""
+
+    def __init__(self) -> None:
+        self._scale = 0.0
+
+    def observe(self, x) -> None:
+        _, scale = quantize_int8(np.asarray(x, np.float32))
+        self._scale = max(self._scale, float(scale))
+
+    @property
+    def scale(self) -> float:
+        if self._scale <= 0.0:
+            raise ValueError("observer saw no data — calibrate first")
+        return self._scale
+
+
+class PercentileObserver:
+    """Per-batch |x| percentile, running max across batches.
+
+    Clips the far tail of the activation distribution so the 254 usable
+    int8 codes cover the bulk of the range — the standard post-training
+    trick when outliers would otherwise blow up the scale. (Running max of
+    per-batch percentiles is an approximation of the pooled percentile;
+    for calibration sets of a few batches it is equivalent in practice.)
+    """
+
+    def __init__(self, pct: float = 99.9) -> None:
+        if not 0.0 < pct <= 100.0:
+            raise ValueError(f"pct must be in (0, 100], got {pct}")
+        self.pct = pct
+        self._amax = 0.0
+
+    def observe(self, x) -> None:
+        a = np.abs(np.asarray(x, np.float32))
+        self._amax = max(self._amax, float(np.percentile(a, self.pct)))
+
+    @property
+    def scale(self) -> float:
+        if self._amax <= 0.0:
+            raise ValueError("observer saw no data — calibrate first")
+        return (self._amax + 1e-12) / 127.0
+
+
+def make_observer(kind: str):
+    if kind == "minmax":
+        return MinMaxObserver()
+    if kind == "percentile":
+        return PercentileObserver()
+    raise ValueError(f"unknown observer {kind!r} (want 'minmax' or 'percentile')")

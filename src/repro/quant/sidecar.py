@@ -1,0 +1,111 @@
+"""The versioned quantization sidecar.
+
+A ``QuantSidecar`` is the complete arithmetic contract of a quantized
+program: one input scale plus one ``LayerQuant`` per compiled layer
+(indexed by ``CompiledLayer.layer_id`` == spec index). It deliberately
+lives OUTSIDE the 128-bit instruction words — the ISA stays fp-agnostic,
+``save_program`` keeps its bit-exact recompile check, and the same
+``Program`` can serve fp32 and int8 from one schedule. The sidecar joins
+the program-cache key through ``digest()`` so two calibrations of the same
+network never collide, and ``digest(schedule_key)`` binds it to a specific
+instruction stream for the tamper check in ``from_program``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+FORMAT = "hybriddnn-quant/v1"
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerQuant:
+    """Per-layer quantization parameters (symmetric, zp = 0).
+
+    ``in_scale``/``out_scale`` are the per-tensor dequantization scales of
+    the layer's stored int8 input/output (``x_fp ~= x_i8 * scale``);
+    ``wgt_scale`` is the weight scale for CONV/FC/DW — a scalar
+    (per-tensor) or a tuple of per-output-channel scales (CONV/FC use
+    per-channel: activations after 10+ layers are only as good as the
+    worst-scaled filter, and per-channel removes that coupling at zero
+    runtime cost since the epilogue multiplier just becomes a vector).
+    Bias is stored int32 at scale ``in_scale * wgt_scale``.
+    ``skip_scale`` is the ELTWISE second operand's scale.
+    ``requantize=False`` marks scale-passthrough layers (POOL: max()
+    commutes with a positive rescale, so out_scale == in_scale and no
+    epilogue runs).
+    """
+    kind: str                       # "conv" | "pool" | "fc" | "eltwise" | "dw"
+    in_scale: float
+    out_scale: float
+    wgt_scale: float | tuple[float, ...] | None = None
+    skip_scale: float | None = None
+    requantize: bool = True
+
+    @property
+    def multiplier(self):
+        """int32 accumulator -> int8 output rescale: a float for per-tensor
+        weights, a float32 ``(K,)`` vector (broadcasting over the channel
+        axis) for per-channel ones."""
+        if isinstance(self.wgt_scale, (tuple, list)):
+            return (np.asarray(self.wgt_scale, np.float32)
+                    * np.float32(self.in_scale) / np.float32(self.out_scale))
+        return float(self.in_scale) * float(self.wgt_scale) / float(self.out_scale)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSidecar:
+    input_scale: float
+    layers: tuple[LayerQuant, ...]
+    observer: str = "percentile"    # provenance, not arithmetic
+
+    # -- (de)serialization --------------------------------------------------
+    def to_dict(self) -> dict:
+        return {
+            "format": FORMAT,
+            "observer": self.observer,
+            "input_scale": self.input_scale,
+            "layers": [dataclasses.asdict(lq) for lq in self.layers],
+        }
+
+    @classmethod
+    def from_dict(cls, doc: dict) -> "QuantSidecar":
+        if doc.get("format") != FORMAT:
+            raise ValueError(
+                f"unsupported quant sidecar format {doc.get('format')!r} "
+                f"(this build reads {FORMAT!r})")
+        layers = []
+        for d in doc["layers"]:
+            d = dict(d)
+            if isinstance(d.get("wgt_scale"), list):  # per-channel: JSON
+                d["wgt_scale"] = tuple(d["wgt_scale"])  # lists -> tuples
+            layers.append(LayerQuant(**d))
+        return cls(
+            input_scale=float(doc["input_scale"]),
+            layers=tuple(layers),
+            observer=doc.get("observer", "percentile"),
+        )
+
+    # -- identity -----------------------------------------------------------
+    def digest(self, schedule_key: str = "") -> str:
+        """Content hash; pass a ``Program.schedule_key()`` to bind the
+        sidecar to one instruction stream (the save/load tamper check)."""
+        js = json.dumps(self.to_dict(), sort_keys=True)
+        return hashlib.sha256((js + "|" + schedule_key).encode()).hexdigest()[:16]
+
+    # -- network-edge conversions ------------------------------------------
+    @property
+    def output_scale(self) -> float:
+        return float(self.layers[-1].out_scale)
+
+    def quantize_input(self, x):
+        """fp -> int8 at the network input (round-half-even, clip)."""
+        q = jnp.round(jnp.asarray(x, jnp.float32) / jnp.float32(self.input_scale))
+        return jnp.clip(q, -127, 127).astype(jnp.int8)
+
+    def dequantize_output(self, y_i8):
+        return y_i8.astype(jnp.float32) * jnp.float32(self.output_scale)

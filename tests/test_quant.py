@@ -1,0 +1,316 @@
+"""The ``repro.quant`` subsystem: calibration observers, the versioned
+``QuantSidecar``, per-channel weight quantization, the int8 PE paths
+(executor == strict interpreter == literal lowering == Pallas, BITWISE),
+quantized save/load roundtrips, quant-aware DSE, and the compression
+utilities wired in through ``repro.optim``."""
+import dataclasses
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import perf_model as pm
+from repro.core.hybrid_conv import ConvSpec, FCSpec, PoolSpec
+from repro.optim.compression import quantize_int8
+from repro.quant import (LayerQuant, QuantSidecar, calibrate,
+                         quantize_params)
+from repro.quant.observers import make_observer
+
+# small CONV->CONV->POOL->FC chain: cheap jits, still exercises the pool
+# scale-passthrough and the FC tail
+SPECS = [ConvSpec("c1", 16, 16, 3, 8), ConvSpec("c2", 16, 16, 8, 16),
+         PoolSpec("p1", 16, 16, 16), FCSpec("fc", 8 * 8 * 16, 10, relu=False)]
+
+
+def _data(n=4, seed=1, img=16):
+    return np.random.default_rng(seed).standard_normal(
+        (n, img, img, 3)).astype(np.float32)
+
+
+def _build_pair(specs=SPECS, img=16, **kw):
+    a32 = api.Accelerator.build(specs, target=pm.V5E, batch=2, seed=0)
+    a8 = api.Accelerator.build(specs, target=pm.V5E, batch=2, seed=0,
+                               params=a32.params, dtype="int8",
+                               calib=_data(8, seed=2, img=img), **kw)
+    return a32, a8
+
+
+# ---------------------------------------------------------------------------
+# observers
+# ---------------------------------------------------------------------------
+
+def test_minmax_observer_covers_every_sample():
+    obs = make_observer("minmax")
+    obs.observe(np.array([0.5, -3.0, 1.0]))
+    obs.observe(np.array([2.0]))
+    # scale maps the largest observed |x| to the int8 edge
+    assert obs.scale == pytest.approx(3.0 / 127.0, rel=1e-5)
+
+
+def test_percentile_observer_clips_outliers():
+    xs = np.concatenate([np.linspace(-1, 1, 10_000), [1000.0]])
+    obs = make_observer("percentile")
+    obs.observe(xs)
+    mm = make_observer("minmax")
+    mm.observe(xs)
+    assert obs.scale < mm.scale            # the outlier got clipped
+    assert obs.scale < 10.0 / 127.0        # nowhere near the 1000 spike
+
+
+def test_unknown_observer_rejected():
+    with pytest.raises(ValueError, match="observer"):
+        make_observer("entropy")
+
+
+# ---------------------------------------------------------------------------
+# calibration + per-channel weight scales
+# ---------------------------------------------------------------------------
+
+def test_calibrate_per_channel_weight_scales():
+    params = api.random_params(SPECS, seed=0)
+    sc = calibrate(SPECS, params, _data())
+    conv_lq = sc.layers[0]
+    assert isinstance(conv_lq.wgt_scale, tuple)
+    assert len(conv_lq.wgt_scale) == SPECS[0].k      # one scale per filter
+    fc_lq = sc.layers[3]
+    assert len(fc_lq.wgt_scale) == SPECS[3].d_out
+    # each channel's scale reconstructs that channel's |w|_max at 127
+    w = np.asarray(params[0][0], np.float32)
+    amax = np.abs(w).reshape(-1, w.shape[-1]).max(axis=0)
+    np.testing.assert_allclose(np.asarray(conv_lq.wgt_scale) * 127.0,
+                               amax, rtol=1e-5)
+
+
+def test_pool_layer_is_scale_passthrough():
+    sc = calibrate(SPECS, api.random_params(SPECS, seed=0), _data())
+    lq = sc.layers[2]
+    assert not lq.requantize
+    assert lq.in_scale == lq.out_scale == sc.layers[1].out_scale
+
+
+def test_quantize_params_shapes_and_range():
+    params = api.random_params(SPECS, seed=0)
+    sc = calibrate(SPECS, params, _data())
+    qp = quantize_params(SPECS, params, sc)
+    assert len(qp) == len(params)
+    for (w, b), (qw, qb) in zip(params, qp):
+        assert qw.shape == w.shape and qw.dtype == jnp.int8
+        assert qb.shape == b.shape and qb.dtype == jnp.int32
+        assert int(jnp.max(jnp.abs(qw))) <= 127
+    # per-channel: every output channel independently reaches the int8
+    # edge (the whole point — no filter is crushed by its neighbors)
+    qw0 = np.asarray(qp[0][0])
+    assert (np.abs(qw0).reshape(-1, qw0.shape[-1]).max(axis=0) == 127).all()
+
+
+def test_multiplier_scalar_vs_vector():
+    lq_t = LayerQuant("dw", 0.5, 0.25, wgt_scale=0.1)
+    assert lq_t.multiplier == pytest.approx(0.5 * 0.1 / 0.25)
+    lq_c = LayerQuant("conv", 0.5, 0.25, wgt_scale=(0.1, 0.2))
+    m = lq_c.multiplier
+    assert m.shape == (2,)
+    np.testing.assert_allclose(m, [0.2, 0.4], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# sidecar (de)serialization + digest
+# ---------------------------------------------------------------------------
+
+def test_sidecar_roundtrip_preserves_digest():
+    sc = calibrate(SPECS, api.random_params(SPECS, seed=0), _data())
+    sc2 = QuantSidecar.from_dict(json.loads(json.dumps(sc.to_dict())))
+    assert sc2 == sc
+    assert sc2.digest("key") == sc.digest("key")
+
+
+def test_sidecar_digest_binds_schedule():
+    sc = calibrate(SPECS, api.random_params(SPECS, seed=0), _data())
+    assert sc.digest("schedule-a") != sc.digest("schedule-b")
+
+
+def test_sidecar_rejects_unknown_format():
+    sc = calibrate(SPECS, api.random_params(SPECS, seed=0), _data())
+    doc = sc.to_dict()
+    doc["format"] = "hybriddnn-quant/v99"
+    with pytest.raises(ValueError, match="format"):
+        QuantSidecar.from_dict(doc)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end int8 builds
+# ---------------------------------------------------------------------------
+
+def test_int8_build_float_in_float_out():
+    a32, a8 = _build_pair()
+    x = _data(2)
+    y = np.asarray(a8(x))
+    assert y.dtype == np.float32 and y.shape == (2, 10)
+    # dequantized logits track fp32 within the quantization design point
+    assert np.max(np.abs(y - np.asarray(a32(x)))) < 0.5
+
+
+def test_int8_executor_matches_strict_interpreter_bitwise():
+    _, a8 = _build_pair()
+    q = a8.quant.quantize_input(jnp.asarray(_data(2)))
+    np.testing.assert_array_equal(np.asarray(a8._request(q)),
+                                  np.asarray(a8.strict_request()(q)))
+
+
+def test_int8_literal_lowering_bitwise():
+    """opt_level=0 (literal per-block) == opt_level=1 (fused) on int8:
+    integer accumulation is exact, so the lowering rewrite must be
+    invisible bit for bit — including the per-channel multiplier slicing
+    on k-grouped blocks."""
+    _, a8 = _build_pair()
+    a8_0 = api.Accelerator.build(SPECS, target=pm.V5E, batch=2, seed=0,
+                                 params=api.random_params(SPECS, seed=0),
+                                 dtype="int8", calib=_data(8, seed=2),
+                                 opt_level=0)
+    q = a8.quant.quantize_input(jnp.asarray(_data(2)))
+    np.testing.assert_array_equal(np.asarray(a8._request(q)),
+                                  np.asarray(a8_0._request(q)))
+
+
+def test_int8_pallas_backend_bitwise():
+    _, a8 = _build_pair()
+    a8_pl = api.Accelerator.build(SPECS, target=pm.V5E, batch=2, seed=0,
+                                  params=api.random_params(SPECS, seed=0),
+                                  dtype="int8", calib=_data(8, seed=2),
+                                  backend="pallas")
+    q = a8.quant.quantize_input(jnp.asarray(_data(2)))
+    np.testing.assert_array_equal(np.asarray(a8._request(q)),
+                                  np.asarray(a8_pl._request(q)))
+
+
+def test_int8_rejects_segmented_and_bad_dtype():
+    with pytest.raises(ValueError, match="fp32-only"):
+        api.Accelerator.build(SPECS, target=pm.V5E, dtype="int8",
+                              segmented=True)
+    with pytest.raises(ValueError, match="dtype"):
+        api.Accelerator.build(SPECS, target=pm.V5E, dtype="int4")
+
+
+def test_int8_dse_gates_winograd_off():
+    _, a8 = _build_pair()
+    assert all(p.mode != "wino" for p in a8.plans)
+    assert "int8" in a8.dse.hw.name if hasattr(a8.dse.hw, "name") else True
+
+
+def test_summary_shows_dtype_column():
+    a32, a8 = _build_pair()
+    assert "int8+rq" in a8.summary()
+    assert "int8+rq" not in a32.summary()
+    assert "fp32" in a32.summary()
+
+
+# ---------------------------------------------------------------------------
+# save / load roundtrip
+# ---------------------------------------------------------------------------
+
+def test_quantized_program_roundtrip(tmp_path):
+    _, a8 = _build_pair()
+    path = str(tmp_path / "prog_int8.json")
+    a8.save_program(path)
+    # fp32 params: the loader re-quantizes deterministically per sidecar
+    a8b = api.Accelerator.from_program(
+        path, params=api.random_params(SPECS, seed=0))
+    x = _data(2)
+    np.testing.assert_array_equal(np.asarray(a8(x)), np.asarray(a8b(x)))
+    # pre-quantized int8 params pass straight through
+    a8c = api.Accelerator.from_program(path, params=a8.params)
+    np.testing.assert_array_equal(np.asarray(a8(x)), np.asarray(a8c(x)))
+
+
+def test_tampered_sidecar_rejected(tmp_path):
+    _, a8 = _build_pair()
+    path = str(tmp_path / "prog_int8.json")
+    a8.save_program(path)
+    doc = json.load(open(path))
+    doc["quant"]["sidecar"]["input_scale"] *= 2.0
+    json.dump(doc, open(path, "w"))
+    with pytest.raises(ValueError, match="digest"):
+        api.Accelerator.from_program(
+            path, params=api.random_params(SPECS, seed=0))
+
+
+def test_fp32_artifacts_unaffected(tmp_path):
+    a32, _ = _build_pair()
+    path = str(tmp_path / "prog_fp32.json")
+    a32.save_program(path)
+    doc = json.load(open(path))
+    assert doc["quant"] is None
+    a32b = api.Accelerator.from_program(
+        path, params=api.random_params(SPECS, seed=0))
+    assert a32b.quant is None
+    x = _data(2)
+    np.testing.assert_array_equal(np.asarray(a32(x)), np.asarray(a32b(x)))
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def test_int8_serving_session_matches_direct():
+    _, a8 = _build_pair()
+    x = _data(4)
+    with a8.serve(max_batch=4, max_wait_ms=1.0) as sess:
+        ys = sess.run_many(list(x))
+    direct = np.asarray(a8(x))
+    for i, y in enumerate(ys):
+        np.testing.assert_array_equal(np.asarray(y), direct[i])
+
+
+# ---------------------------------------------------------------------------
+# reduced-model bitwise parity (the acceptance checks, fast-tier sized)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", ["vgg16", "resnet18"])
+def test_reduced_model_int8_bitwise(model):
+    from repro.models import resnet, vgg
+    specs = (vgg.network_specs(img=32, scale=16, n_classes=10)
+             if model == "vgg16"
+             else resnet.resnet18_specs(img=32, scale=16, n_classes=10))
+    params = api.random_params(specs, seed=3)
+    a8 = api.Accelerator.build(specs, target=pm.V5E, batch=2, params=params,
+                               dtype="int8", calib=_data(4, seed=2, img=32))
+    q = a8.quant.quantize_input(jnp.asarray(_data(2, img=32)))
+    np.testing.assert_array_equal(np.asarray(a8._request(q)),
+                                  np.asarray(a8.strict_request()(q)))
+
+
+@pytest.mark.slow
+def test_top1_agreement_thresholds():
+    """The bench acceptance criterion, at the bench's agreement configs:
+    >= 0.98 top-1 agreement vs fp32 on reduced VGG16 (scale=4) and
+    ResNet-18 (scale=8), minmax observer, eval-distribution calibration."""
+    from repro.models import resnet, vgg
+    rng = np.random.default_rng(0)
+    calib = rng.standard_normal((256, 32, 32, 3)).astype(np.float32)
+    xe = rng.standard_normal((256, 32, 32, 3)).astype(np.float32)
+    for specs in (vgg.network_specs(img=32, scale=4, n_classes=10),
+                  resnet.resnet18_specs(img=32, scale=8, n_classes=10)):
+        a32 = api.Accelerator.build(specs, target=pm.V5E, batch=2, seed=0)
+        a8 = api.Accelerator.build(specs, target=pm.V5E, batch=2, seed=0,
+                                   params=a32.params, dtype="int8",
+                                   calib=calib, observer="minmax")
+        agree = float(np.mean(np.argmax(np.asarray(a8(xe)), -1)
+                              == np.argmax(np.asarray(a32(xe)), -1)))
+        assert agree >= 0.98, (specs[0].name, agree)
+
+
+# ---------------------------------------------------------------------------
+# satellite: repro.optim package wiring
+# ---------------------------------------------------------------------------
+
+def test_optim_package_exports_compression():
+    import repro.optim
+    assert repro.optim.quantize_int8 is quantize_int8
+
+
+def test_quantize_int8_roundtrip_error_bounded():
+    w = np.random.default_rng(0).standard_normal((64,)).astype(np.float32)
+    q, scale = quantize_int8(w)
+    assert q.dtype == np.int8 and np.abs(q).max() <= 127
+    assert np.max(np.abs(q.astype(np.float32) * scale - w)) <= scale / 2 + 1e-7
