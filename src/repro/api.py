@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 import threading
 import time
 import warnings
@@ -71,6 +72,13 @@ from repro.quant import QuantSidecar, quantize_params
 from repro.quant import calibrate as quant_calibrate
 
 PROGRAM_FORMAT = "hybriddnn-program/v1"
+
+
+class ProgramLoadError(ValueError):
+    """A saved program/bundle that cannot be loaded: truncated or non-JSON
+    file, unknown format version, instruction-stream or quant-sidecar
+    digest mismatch. Subclasses ``ValueError`` so pre-existing callers that
+    catch the broad class keep working; new callers should catch this."""
 
 
 @contextmanager
@@ -534,11 +542,22 @@ class Accelerator:
         return "\n".join(lines)
 
     # -- persistence --------------------------------------------------------
-    def save_program(self, path: str) -> str:
+    def save_program(self, path: str, *, aot: bool = False,
+                     buckets: Sequence[int] | None = None) -> str:
         """Persist the compiled instruction stream + specs/plans + DSE
         verdict as JSON, so :meth:`from_program` can rebuild this
         accelerator without re-running the DSE. Params are NOT saved (they
-        are the model's weights — supply them at load time)."""
+        are the model's weights — supply them at load time).
+
+        ``aot=True`` writes a **bundle directory** instead of a single
+        file: ``program.json`` (the same document) plus ``aot/`` holding
+        one serialized XLA executable per warmed entry — every serving
+        ``bucket`` with input donation (the :class:`ServingSession` hot
+        path; defaults to the session's power-of-two buckets up to
+        ``self.batch``) and the direct-call entry at ``self.batch``. A
+        bundle loaded by :meth:`from_program` serves its first request
+        without tracing OR compiling; see ``repro.core.aot`` for the keying
+        and fallback semantics."""
         if self.program is None:
             raise ValueError("segmented accelerators hold multiple Programs; "
                              "save_program supports the single-Program path")
@@ -567,8 +586,34 @@ class Accelerator:
                 "digest": self.quant.digest(self.program.schedule_key()),
             },
         }
-        with open(path, "w") as f:
+        if not aot:
+            with open(path, "w") as f:
+                json.dump(doc, f)
+            return path
+        rt = self.runtime
+        if rt is None or rt.strict:
+            raise ValueError("aot=True needs the cached-executor runtime — "
+                             "strict-interpreter accelerators have no "
+                             "compiled executable to export")
+        os.makedirs(path, exist_ok=True)
+        with open(os.path.join(path, "program.json"), "w") as f:
             json.dump(doc, f)
+        aot_dir = os.path.join(path, "aot")
+        if buckets is None:
+            buckets, b = [], 1
+            while b < self.batch:
+                buckets.append(b)
+                b *= 2
+            buckets.append(self.batch)
+        in_shape = tuple(self.input_shape)
+        dt = self.input_dtype
+        for b in sorted({int(b) for b in buckets}):
+            # the serving hot path: per-bucket executors donate their
+            # staged input buffer
+            rt.export_aot(aot_dir, (b, *in_shape), dt, donate_input=True)
+        # the direct acc(x) path: batch-sized, no donation
+        rt.export_aot(aot_dir, (self.batch, *in_shape), dt,
+                      donate_input=False)
         return path
 
     @classmethod
@@ -590,23 +635,51 @@ class Accelerator:
         ``opt_level`` select the PE implementation and lowering-optimizer
         level exactly as in :meth:`build` — the saved stream is agnostic to
         both, so one artifact deploys to every variant.
+
+        ``path`` may also be an AOT bundle directory written by
+        ``save_program(..., aot=True)``: the instruction image loads from
+        its ``program.json`` and the runtime warm-starts executors from the
+        serialized executables in ``aot/`` — skipping trace AND compile —
+        whenever the full artifact key (including this host's device kind
+        and jax version) matches; stale artifacts fall back to a fresh
+        compile with the reason logged on ``repro.aot``.
+
+        Malformed input — truncated/non-JSON file, unknown format version,
+        instruction-stream mismatch, quant-sidecar digest bound to a
+        different schedule — raises :class:`ProgramLoadError`.
         """
         if params is None:
             raise ValueError(
                 "saved programs carry no weights — pass params=[...] "
                 "(api.random_params(specs, seed) for stand-ins)")
-        with open(path) as f:
-            doc = json.load(f)
+        aot_dir = None
+        doc_path = path
+        if os.path.isdir(path):
+            doc_path = os.path.join(path, "program.json")
+            if not os.path.exists(doc_path):
+                raise ProgramLoadError(
+                    f"{path}: directory is not an AOT bundle — no "
+                    f"program.json inside")
+            d = os.path.join(path, "aot")
+            aot_dir = d if os.path.isdir(d) else None
+        try:
+            with open(doc_path) as f:
+                doc = json.load(f)
+        except json.JSONDecodeError as e:
+            raise ProgramLoadError(
+                f"{doc_path}: truncated or not JSON ({e}) — the save was "
+                f"interrupted or the file corrupted in transit") from e
         if doc.get("format") != PROGRAM_FORMAT:
-            raise ValueError(f"{path}: not a {PROGRAM_FORMAT} file "
-                             f"(format={doc.get('format')!r})")
+            raise ProgramLoadError(
+                f"{doc_path}: not a {PROGRAM_FORMAT} file "
+                f"(format={doc.get('format')!r})")
         specs = [_spec_from_dict(d) for d in doc["specs"]]
         plans = [LayerPlan(**d) for d in doc["plans"]]
         program = compile_network(specs, plans)
         image = np.asarray(doc["instructions"], np.uint32).reshape(-1, 4)
         if not np.array_equal(program.instruction_image(), image):
-            raise ValueError(
-                f"{path}: saved instruction stream does not match its "
+            raise ProgramLoadError(
+                f"{doc_path}: saved instruction stream does not match its "
                 f"recompilation (compiler or schedule drift) — re-run "
                 f"Accelerator.build and save again")
         quant = None
@@ -614,8 +687,8 @@ class Accelerator:
             q = doc["quant"]
             quant = QuantSidecar.from_dict(q["sidecar"])
             if quant.digest(program.schedule_key()) != q.get("digest"):
-                raise ValueError(
-                    f"{path}: quant sidecar digest does not match this "
+                raise ProgramLoadError(
+                    f"{doc_path}: quant sidecar digest does not match this "
                     f"program's schedule — the sidecar was edited or "
                     f"belongs to a different calibration/program; re-run "
                     f"Accelerator.build(dtype='int8') and save again")
@@ -632,7 +705,8 @@ class Accelerator:
                             candidates_searched=d["candidates_searched"])
         rt = HybridRuntime(program, strict=strict, cache=cache,
                            backend=backend, interpret=interpret,
-                           opt_level=opt_level, quant=quant)
+                           opt_level=opt_level, quant=quant,
+                           aot_dir=aot_dir)
         rt.load_params(params)
         if not strict:
             rt.cache.validate(program)
@@ -663,7 +737,14 @@ class SessionStats:
     batches: int = 0         # executor invocations
     padded_rows: int = 0     # zero rows added to reach a bucket size
     dispatched_rows: int = 0  # real (non-pad) rows sent to the device(s)
-    compile_ms: float = 0.0  # trace+compile time (warmup + first use/bucket)
+    # first-use cost per bucket, split by how the executor came to exist so
+    # the AOT warm-start win is measurable: compile_ms counts buckets that
+    # traced + XLA-compiled in this process (warmup or first use);
+    # warm_load_ms counts buckets whose executable deserialized from an AOT
+    # bundle (repro.core.aot) — disk read + load + first dispatch, no
+    # compile. One bucket lands in exactly one of the two.
+    compile_ms: float = 0.0
+    warm_load_ms: float = 0.0
     # device id -> batches dispatched there. A sharded batch counts once on
     # EVERY device it spans; a single-device batch counts on its one device
     # — so the table reads as per-device occupancy of the fleet.
@@ -902,10 +983,16 @@ class ServingSession:
         self._params_sharded = None
         rt = acc.runtime
         if rt is not None and not rt.strict:
-            # donation is best-effort (see the module-level warnings filter)
+            # donation is best-effort (see the module-level warnings filter).
+            # With an AOT bundle the deserialize happens HERE, inside
+            # executor_entry -> cache.get — count it as warm-load time so
+            # the stats line shows where the cold start went
             for b in self.buckets:
+                t0 = time.monotonic()
                 self._entries[b], self._params = rt.executor_entry(
                     b, acc.input_dtype, donate_input=True)
+                if getattr(self._entries[b], "aot_loaded", False):
+                    self.stats.warm_load_ms += (time.monotonic() - t0) * 1e3
 
         self._mesh = mesh
         self._n_devices = 1
@@ -992,7 +1079,7 @@ class ServingSession:
                     z = jnp.zeros((b, *acc.input_shape), acc.input_dtype)
                     t0 = time.monotonic()
                     jax.block_until_ready(self._run_bucket(z))
-                    self.stats.compile_ms += (time.monotonic() - t0) * 1e3
+                    self._count_first_use(b, t0)
                     self._warm.add(b)
 
         self._dispatch_thread = threading.Thread(
@@ -1277,11 +1364,25 @@ class ServingSession:
         if first_use:
             with _expected_donation_noise():   # compile happens in this call
                 y = self._run_bucket(jnp.asarray(buf))
-            self.stats.compile_ms += (time.monotonic() - t0) * 1e3
+            self._count_first_use(bucket, t0)
             self._warm.add(bucket)
         else:
             y = self._run_bucket(jnp.asarray(buf))
         return y
+
+    def _count_first_use(self, bucket: int, t0: float):
+        """Attribute a bucket's first-use stall to ``warm_load_ms`` when its
+        executor deserialized from an AOT bundle (no compile happened —
+        this is the warm-start cost), to ``compile_ms`` otherwise. Sharded
+        entries always compile in-process (AOT binaries would pin one
+        host's device ids), so they count as compile."""
+        dt = (time.monotonic() - t0) * 1e3
+        entry = (None if bucket in self._sharded_entries
+                 else self._entries.get(bucket))
+        if getattr(entry, "aot_loaded", False):
+            self.stats.warm_load_ms += dt
+        else:
+            self.stats.compile_ms += dt
 
     def _worker(self):
         """Dispatch loop: batch i+1 is staged and launched while batch i is

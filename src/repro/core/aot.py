@@ -1,0 +1,260 @@
+"""AOT executor artifacts: ship the compiled executable, not the recipe.
+
+``Accelerator.save_program(..., aot=True)`` serializes each warmed
+executor's XLA executable (via ``jax.experimental.serialize_executable``)
+into a bundle directory next to the instruction image;
+``ProgramCache.get(..., aot_dir=...)`` loads it back on a cache miss,
+skipping BOTH the jax trace and the XLA compile (~710 ms per bucket on the
+dev container -> a few ms of deserialization). This is the software analog
+of shipping a synthesized bitstream per design point instead of re-running
+synthesis at every deploy.
+
+Keying
+------
+Artifacts are keyed by the FULL program-cache key — schedule digest, batch,
+dtype, per-layer param dtypes, backend, *resolved* Pallas interpret flag,
+opt_level, input donation, mesh topology, quant-sidecar digest — PLUS the
+environment fingerprint (device kind, platform, jax and jaxlib versions).
+A serialized executable is a device-specific binary: drift in ANY dimension
+makes it unusable or, worse, silently wrong, so the whole key dict is
+hashed into the artifact filename and stored verbatim in a ``manifest.json``
+side index.
+
+Fallback semantics
+------------------
+A lookup that misses NEVER errors and NEVER serves a stale binary: the
+caller falls back to the ordinary trace+compile path (bit-exact by
+construction — the artifact was produced by compiling the very same lowered
+function), and the *reason* — which key dimension went stale, with saved vs
+wanted values — is logged on the ``repro.aot`` logger so an operator can
+see why a warm start went cold. A manifest whose entry no longer matches
+its own digest (hand-edited bundle) and an unreadable/truncated artifact
+file fall back the same way.
+
+Mesh-sharded executor variants are not exported (the artifact would pin
+device ids of one host); sharded entries always take the fresh-compile
+path and the single-device straggler entries still warm-load.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import logging
+import os
+import pickle
+import warnings
+
+log = logging.getLogger("repro.aot")
+
+AOT_FORMAT = "hybriddnn-aot/v1"
+MANIFEST = "manifest.json"
+
+# the stale-diagnosis report walks these in order, so the most identity-like
+# dimensions (schedule, environment) lead the logged reason
+KEY_DIMENSIONS = (
+    "format", "schedule", "batch", "dtype", "param_dtypes", "backend",
+    "interpret", "opt_level", "donate_input", "mesh", "quant_digest",
+    "device_kind", "platform", "jax_version", "jaxlib_version",
+)
+
+
+class AOTError(ValueError):
+    """A malformed AOT bundle operation (bad save inputs, unwritable dir)."""
+
+
+def environment_fingerprint() -> dict:
+    """The environment dimensions of the artifact key.
+
+    ``device_kind``/``platform`` because the serialized executable is a
+    device binary; ``jax_version``/``jaxlib_version`` because the
+    serialization format and the compiled calling convention both drift
+    across releases. Computed fresh each call (cheap) so tests can
+    monkeypatch it to simulate loading on a different device or version.
+    """
+    import jax
+    dev = jax.devices()[0]
+    try:
+        import jaxlib
+        jaxlib_version = jaxlib.__version__
+    except Exception:          # pragma: no cover - jaxlib rides with jax
+        jaxlib_version = "unknown"
+    return {
+        "device_kind": str(dev.device_kind),
+        "platform": str(dev.platform),
+        "jax_version": jax.__version__,
+        "jaxlib_version": jaxlib_version,
+    }
+
+
+def artifact_key(cache_key: tuple, env: dict | None = None) -> dict:
+    """The full artifact key dict for one program-cache key tuple.
+
+    ``cache_key`` is :func:`repro.core.program_cache.cache_key` output; the
+    environment fingerprint joins it here. The dict is JSON-normalized
+    (tuples become lists) so it digests and round-trips through the
+    manifest identically.
+    """
+    (schedule, batch, dtype, param_dtypes, backend, interpret, opt_level,
+     donate_input, mesh, quant_digest) = cache_key
+    key = {
+        "format": AOT_FORMAT,
+        "schedule": schedule,
+        "batch": int(batch),
+        "dtype": str(dtype),
+        "param_dtypes": list(param_dtypes),
+        "backend": backend,
+        "interpret": interpret,
+        "opt_level": int(opt_level),
+        "donate_input": bool(donate_input),
+        "mesh": mesh,
+        "quant_digest": quant_digest,
+    }
+    key.update(environment_fingerprint() if env is None else dict(env))
+    return json.loads(json.dumps(key))
+
+
+def artifact_digest(key: dict) -> str:
+    """Content digest of an artifact key — the artifact's filename stem."""
+    return hashlib.sha256(
+        json.dumps(key, sort_keys=True).encode()).hexdigest()[:16]
+
+
+def _artifact_path(aot_dir: str, digest: str) -> str:
+    return os.path.join(aot_dir, f"{digest}.aotx")
+
+
+def read_manifest(aot_dir: str) -> dict:
+    """digest -> key dict for every artifact in ``aot_dir`` ({} if none)."""
+    path = os.path.join(aot_dir, MANIFEST)
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        return {}
+    except (OSError, json.JSONDecodeError) as e:
+        log.warning("aot: manifest %s unreadable (%s) — treating the "
+                    "bundle as empty", path, e)
+        return {}
+    return doc if isinstance(doc, dict) else {}
+
+
+def _write_manifest(aot_dir: str, manifest: dict):
+    # tmp+rename: a crashed save must not leave a half-written index that
+    # poisons every later load
+    path = os.path.join(aot_dir, MANIFEST)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def _diff_dims(saved: dict, wanted: dict) -> list[tuple[str, object, object]]:
+    """(dimension, saved, wanted) for every key dimension that differs."""
+    dims = [d for d in KEY_DIMENSIONS if d in saved or d in wanted]
+    for extra in sorted(set(saved) | set(wanted)):
+        if extra not in dims:
+            dims.append(extra)
+    return [(d, saved.get(d), wanted.get(d)) for d in dims
+            if saved.get(d) != wanted.get(d)]
+
+
+def save_entry(aot_dir: str, executor, params, x_shape, dtype,
+               cache_key: tuple, env: dict | None = None) -> str:
+    """Compile ``executor.fn`` ahead-of-time at these shapes and persist the
+    serialized executable; returns the artifact digest.
+
+    ``executor`` is a :class:`repro.core.executor.CompiledExecutor`;
+    ``params`` only contributes shapes/dtypes (weights are NOT stored — the
+    artifact is the executable, the instruction image + params stay in
+    their own files). Lowering against ``jax.ShapeDtypeStruct`` stand-ins
+    means no device math runs at save time.
+    """
+    import jax
+    import numpy as np
+    from jax.experimental import serialize_executable
+
+    if getattr(executor, "mesh_key", None) is not None:
+        raise AOTError("mesh-sharded executors are not exportable: the "
+                       "serialized binary would pin one host's device ids")
+    key = artifact_key(cache_key, env)
+    digest = artifact_digest(key)
+    os.makedirs(aot_dir, exist_ok=True)
+    p_struct = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+    x_struct = jax.ShapeDtypeStruct(tuple(x_shape), np.dtype(dtype))
+    with warnings.catch_warnings():
+        # donated-buffer notes are expected for donate_input executors
+        warnings.simplefilter("ignore", UserWarning)
+        compiled = executor.fn.lower(p_struct, x_struct).compile()
+    payload, in_tree, out_tree = serialize_executable.serialize(compiled)
+    blob = pickle.dumps({"format": AOT_FORMAT, "key": key,
+                         "payload": payload, "in_tree": in_tree,
+                         "out_tree": out_tree})
+    with open(_artifact_path(aot_dir, digest), "wb") as f:
+        f.write(blob)
+    manifest = read_manifest(aot_dir)
+    manifest[digest] = key
+    _write_manifest(aot_dir, manifest)
+    log.info("aot: saved %s (%d KiB, batch=%s dtype=%s backend=%s "
+             "opt_level=%s)", digest, len(blob) // 1024, key["batch"],
+             key["dtype"], key["backend"], key["opt_level"])
+    return digest
+
+
+def load_entry(aot_dir: str, cache_key: tuple, env: dict | None = None):
+    """The deserialized executable for this key, or ``None`` with the stale
+    reason logged — the caller then falls back to a fresh trace+compile,
+    which is bit-exact by construction."""
+    from jax.experimental import serialize_executable
+
+    wanted = artifact_key(cache_key, env)
+    digest = artifact_digest(wanted)
+    manifest = read_manifest(aot_dir)
+    path = _artifact_path(aot_dir, digest)
+    saved = manifest.get(digest)
+    if saved is not None and os.path.exists(path):
+        stale = _diff_dims(saved, wanted)
+        if stale:
+            # hand-edited manifest: its entry no longer matches the digest
+            log.warning(
+                "aot: artifact %s manifest entry does not match its own "
+                "digest (%s) — falling back to fresh compile", digest,
+                _fmt_diffs(stale))
+            return None
+        try:
+            with open(path, "rb") as f:
+                blob = pickle.loads(f.read())
+            if blob.get("format") != AOT_FORMAT:
+                raise ValueError(f"format={blob.get('format')!r}")
+            stale = _diff_dims(blob.get("key", {}), wanted)
+            if stale:
+                raise ValueError(f"embedded key mismatch: {_fmt_diffs(stale)}")
+            fn = serialize_executable.deserialize_and_load(
+                blob["payload"], blob["in_tree"], blob["out_tree"])
+        except Exception as e:  # noqa: BLE001 — any bad artifact recompiles
+            log.warning("aot: artifact %s unreadable (%s: %s) — falling "
+                        "back to fresh compile", digest,
+                        type(e).__name__, e)
+            return None
+        log.info("aot: loaded %s (batch=%s dtype=%s backend=%s "
+                 "opt_level=%s)", digest, wanted["batch"], wanted["dtype"],
+                 wanted["backend"], wanted["opt_level"])
+        return fn
+    if not manifest:
+        log.info("aot: %s holds no artifacts — fresh compile", aot_dir)
+        return None
+    # diagnose WHICH dimension went stale: report the nearest saved key
+    best_digest, best_diffs = None, None
+    for d, saved in manifest.items():
+        diffs = _diff_dims(saved, wanted)
+        if best_diffs is None or len(diffs) < len(best_diffs):
+            best_digest, best_diffs = d, diffs
+    log.warning(
+        "aot: no artifact for key %s — nearest saved artifact %s is stale "
+        "on [%s]; falling back to fresh compile", digest, best_digest,
+        _fmt_diffs(best_diffs or []))
+    return None
+
+
+def _fmt_diffs(diffs: list[tuple[str, object, object]]) -> str:
+    return "; ".join(f"{d}: saved={s!r} wanted={w!r}" for d, s, w in diffs)

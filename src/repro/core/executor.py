@@ -923,6 +923,9 @@ class CompiledExecutor:
     opt_level: int = 1             # lowering-optimizer level (0 = literal)
     donate_input: bool = False     # x buffer donated through jax.jit
     mesh_key: tuple | None = None  # shard_map topology (None = single-device)
+    aot_loaded: bool = False       # fn is a deserialized AOT executable
+                                   # (core/aot.py): already compiled, never
+                                   # traces — trace_count stays 0
 
     @property
     def trace_count(self) -> int:

@@ -75,6 +75,29 @@ class CacheStats:
     misses: int = 0
     evictions: int = 0
     validated_evictions: int = 0    # validation-stat entries dropped
+    aot_loads: int = 0              # misses served from a disk artifact
+
+
+def cache_key(program: Program, *, batch: int, dtype,
+              param_dtypes: tuple = (), backend: str = "xla",
+              interpret: bool | None = None, opt_level: int = 1,
+              donate_input: bool = False, mesh=None, quant=None) -> tuple:
+    """The cache-key tuple for one executor request, in resolved form.
+
+    Pure and deterministic across processes for equal inputs: every
+    component is either a content digest (``schedule_key``, the quant
+    digest) or a resolved scalar — this is what lets the AOT artifact
+    layer (``core/aot.py``) reuse the exact same identity on disk, and what
+    the key-stability property tests pin down.
+    """
+    backend, interpret = resolve_backend(backend, interpret)
+    opt_level = resolve_opt_level(opt_level)
+    if mesh is not None and mesh_device_count(mesh) == 1:
+        mesh = None
+    return (program.schedule_key(), int(batch), jnp.dtype(dtype).name,
+            tuple(param_dtypes), backend, interpret, opt_level,
+            bool(donate_input), mesh_key(mesh),
+            quant.digest() if quant is not None else None)
 
 
 class ProgramCache:
@@ -135,7 +158,7 @@ class ProgramCache:
             param_dtypes: tuple = (), backend: str = "xla",
             interpret: bool | None = None, opt_level: int = 1,
             donate_input: bool = False, mesh=None,
-            quant=None) -> CompiledExecutor:
+            quant=None, aot_dir: str | None = None) -> CompiledExecutor:
         """The jitted executor for ``program`` at this
         batch/dtype/backend/opt_level/mesh (compile on miss).
 
@@ -153,6 +176,14 @@ class ProgramCache:
         the key by content digest — the int8 dtype alone is not enough,
         since two calibrations of one network bake different requantize
         multipliers into the trace.
+
+        ``aot_dir`` names an AOT artifact bundle (``core/aot.py``): on a
+        cache miss the serialized executable keyed by this exact request
+        (plus the device/version fingerprint) is loaded from disk instead
+        of re-traced and re-compiled; any stale or missing artifact falls
+        back to the fresh compile with the reason logged on ``repro.aot``.
+        Mesh-sharded variants never load from disk — their binaries would
+        pin one host's device ids.
         """
         backend, interpret = resolve_backend(backend, interpret)
         opt_level = resolve_opt_level(opt_level)
@@ -167,10 +198,10 @@ class ProgramCache:
                 f"over the mesh's {n_dev} devices — pad the batch to a "
                 f"multiple (the serving session's bucket fallback) or drop "
                 f"the mesh for this batch size")
-        key = (program.schedule_key(), int(batch), jnp.dtype(dtype).name,
-               tuple(param_dtypes), backend, interpret, opt_level,
-               bool(donate_input), mesh_key(mesh),
-               quant.digest() if quant is not None else None)
+        key = cache_key(program, batch=batch, dtype=dtype,
+                        param_dtypes=param_dtypes, backend=backend,
+                        interpret=interpret, opt_level=opt_level,
+                        donate_input=donate_input, mesh=mesh, quant=quant)
         with self._lock:
             entry = self._entries.get(key)
             if entry is not None:
@@ -178,10 +209,22 @@ class ProgramCache:
                 self.stats.hits += 1
                 return entry
         stats = self.validate(program)
-        entry = compile_executor(program, stats=stats, backend=backend,
-                                 interpret=interpret, opt_level=opt_level,
-                                 donate_input=donate_input, mesh=mesh,
-                                 quant=quant)
+        entry = None
+        if aot_dir is not None and mesh is None:
+            from repro.core import aot
+            fn = aot.load_entry(aot_dir, key)
+            if fn is not None:
+                entry = CompiledExecutor(
+                    program=program, stats=dict(stats), fn=fn,
+                    _trace_count=[0], backend=backend, interpret=interpret,
+                    opt_level=opt_level, donate_input=bool(donate_input),
+                    mesh_key=None, aot_loaded=True)
+                self.stats.aot_loads += 1
+        if entry is None:
+            entry = compile_executor(program, stats=stats, backend=backend,
+                                     interpret=interpret, opt_level=opt_level,
+                                     donate_input=donate_input, mesh=mesh,
+                                     quant=quant)
         with self._lock:
             # re-check: a racing thread may have compiled the same key while
             # we were outside the lock — first insert wins so every caller

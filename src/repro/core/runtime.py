@@ -127,7 +127,8 @@ class HybridRuntime:
     def __init__(self, program: Program, use_pallas: bool = False,
                  interpret: bool | None = None, strict: bool = False,
                  cache=None, backend: str | None = None,
-                 opt_level: int = 1, quant=None):
+                 opt_level: int = 1, quant=None,
+                 aot_dir: str | None = None):
         if backend is None:
             backend = "pallas" if use_pallas else "xla"
         # validate eagerly; keep the unresolved pair (the cache resolves
@@ -140,6 +141,10 @@ class HybridRuntime:
         self.opt_level = resolve_opt_level(opt_level)
         self.quant = quant
         self.strict = strict
+        # AOT artifact bundle directory (core/aot.py): every cache lookup
+        # this runtime makes may warm-load its serialized executable from
+        # here instead of re-tracing + re-compiling
+        self.aot_dir = aot_dir
         self._cache = cache
         self.dram: dict[int, Any] = {}
         self._raw_params: list[tuple[Any, Any]] | None = None
@@ -207,8 +212,40 @@ class HybridRuntime:
             param_dtypes=tuple(jnp.dtype(w.dtype).name for w, _ in params),
             backend=self.backend, interpret=self.interpret,
             opt_level=self.opt_level, donate_input=donate_input, mesh=mesh,
-            quant=self.quant)
+            quant=self.quant, aot_dir=self.aot_dir)
         return entry, params
+
+    def export_aot(self, aot_dir: str, x_shape, dtype, *,
+                   donate_input: bool = False) -> str:
+        """AOT-compile the executor for input shape ``x_shape`` (batch
+        leading) and persist the serialized executable into ``aot_dir``,
+        keyed by the full program-cache key + device/version fingerprint
+        (see ``core/aot.py``). Returns the artifact digest. Lowering runs
+        against ``ShapeDtypeStruct`` stand-ins — no device math at export
+        time."""
+        from repro.core import aot
+        from repro.core.executor import compile_executor
+        from repro.core.program_cache import cache_key
+
+        batch = int(x_shape[0])
+        entry, params = self.executor_entry(batch, dtype,
+                                            donate_input=donate_input)
+        if getattr(entry, "aot_loaded", False):
+            # a deserialized executable cannot be re-lowered — rebuild a
+            # jit-stage executor so re-exporting a warm-loaded runtime to a
+            # new bundle directory still works
+            entry = compile_executor(
+                self.program, stats=self.stats, backend=self.backend,
+                interpret=self.interpret, opt_level=self.opt_level,
+                donate_input=donate_input, quant=self.quant)
+        key = cache_key(
+            self.program, batch=batch, dtype=dtype,
+            param_dtypes=tuple(jnp.dtype(w.dtype).name for w, _ in params),
+            backend=self.backend, interpret=self.interpret,
+            opt_level=self.opt_level, donate_input=donate_input,
+            quant=self.quant)
+        return aot.save_entry(aot_dir, entry, params, tuple(x_shape), dtype,
+                              key)
 
     def write_input(self, x_nhwc):
         cl0 = self.program.layers[0]

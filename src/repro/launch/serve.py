@@ -196,7 +196,8 @@ def serve_cnn(arch: str = "vgg16", *, reduced: bool = True, batch: int = 8,
                   f"p95 {st.p95_ms():.2f}ms; "
                   f"queue wait p50 {st.wait_p50_ms():.2f}ms "
                   f"p95 {st.wait_p95_ms():.2f}ms; "
-                  f"compile {st.compile_ms:.0f}ms)")
+                  f"compile {st.compile_ms:.0f}ms "
+                  f"warm-load {st.warm_load_ms:.0f}ms)")
             per_dev = ", ".join(f"{d}: {n}" for d, n in
                                 sorted(st.device_batches.items()))
             print(f"  per-device batches: {{{per_dev}}}")

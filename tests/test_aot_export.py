@@ -1,0 +1,376 @@
+"""AOT executable export (``repro.core.aot``): the artifact-integrity tier.
+
+Four property groups:
+
+* **bitwise warm-load** — an executor deserialized from a saved bundle
+  produces outputs bitwise identical to the fresh trace+compile path,
+  across {xla, pallas-interpret} x {fp32, int8} x {opt_level 0, 1}, with
+  ``SessionStats.compile_ms`` exactly zero (nothing compiled);
+* **stale-key fallback** — every key dimension that can drift (device
+  kind, jax version, schedule, quant digest) triggers a fresh-compile
+  fallback with the stale dimension named in the ``repro.aot`` log, never
+  a wrong answer;
+* **negative load paths** — truncated JSON, unknown format version and a
+  quant sidecar spliced from a different schedule each raise
+  ``api.ProgramLoadError``;
+* **key stability** — the program-cache key and the AOT artifact digest
+  are deterministic across process restarts for randomized Programs, and
+  any single key-dimension change produces a distinct digest (hypothesis
+  when installed, seeded sweep otherwise).
+
+Run as a script (``python tests/test_aot_export.py digests <seed>...``) the
+file prints artifact digests for generated programs — the cross-process
+determinism test execs itself that way under a fresh interpreter.
+"""
+import json
+import logging
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import aot
+from repro.core import perf_model as pm
+from repro.core.compiler import LayerPlan, compile_network
+from repro.core.hybrid_conv import ConvSpec, FCSpec, PoolSpec
+from repro.core.program_cache import ProgramCache, cache_key
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:       # optional dev dep; the seeded sweep still runs
+    HAVE_HYPOTHESIS = False
+
+SPECS = [ConvSpec("c1", 8, 8, 3, 8), PoolSpec("p1", 8, 8, 8),
+         FCSpec("fc", 4 * 4 * 8, 10, relu=False)]
+BATCH = 2
+
+
+def _build(backend="xla", dtype="fp32", opt_level=1):
+    rng = np.random.default_rng(0)
+    calib = (rng.standard_normal((8, 8, 8, 3)).astype(np.float32)
+             if dtype == "int8" else None)
+    return api.Accelerator.build(
+        SPECS, target=pm.V5E, batch=BATCH, seed=0, backend=backend,
+        opt_level=opt_level,
+        dtype="float32" if dtype == "fp32" else dtype, calib=calib)
+
+
+def _requests(n, seed=1):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal((8, 8, 3)).astype(np.float32)
+            for _ in range(n)]
+
+
+# --------------------------------------------------------------------------
+# bitwise warm-load across the full matrix
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("dtype", ["fp32", "int8"])
+@pytest.mark.parametrize("opt_level", [0, 1])
+def test_warm_load_bitwise_matrix(tmp_path, backend, dtype, opt_level):
+    """Warm-loaded executors are BITWISE the fresh-compile path — same
+    serialized XLA binary, not a float-tolerance lookalike — and the warm
+    session compiles nothing (compile_ms == 0)."""
+    acc = _build(backend, dtype, opt_level)
+    reqs = _requests(2 * BATCH)
+    with acc.serve(max_batch=BATCH, buckets=(1, BATCH), warmup=True) as s:
+        fresh = [np.asarray(y) for y in s.run_many(reqs)]
+        assert s.stats.compile_ms > 0          # this one DID compile
+        assert s.stats.warm_load_ms == 0.0
+
+    bundle = str(tmp_path / "bundle")
+    acc.save_program(bundle, aot=True, buckets=(1, BATCH))
+    warm_cache = ProgramCache()               # no in-process entries: every
+    acc2 = api.Accelerator.from_program(       # lookup must hit the disk
+        bundle, params=acc.params, cache=warm_cache,
+        backend=backend, opt_level=opt_level)
+    with acc2.serve(max_batch=BATCH, buckets=(1, BATCH), warmup=True) as s:
+        warm = [np.asarray(y) for y in s.run_many(reqs)]
+        st = s.stats
+    assert warm_cache.stats.aot_loads >= 2     # both buckets deserialized
+    assert st.compile_ms == 0.0                # NOTHING traced or compiled
+    assert st.warm_load_ms > 0.0
+    for a, b in zip(fresh, warm):
+        np.testing.assert_array_equal(a, b)    # bitwise, not allclose
+
+    # the direct acc(x) entry warm-loads too
+    x = np.stack(_requests(BATCH, seed=9))
+    np.testing.assert_array_equal(np.asarray(acc(x)), np.asarray(acc2(x)))
+
+
+# --------------------------------------------------------------------------
+# stale-key dimensions: fallback + logged reason, never a wrong answer
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def bundle(tmp_path_factory):
+    acc = _build()
+    path = str(tmp_path_factory.mktemp("aot") / "bundle")
+    acc.save_program(path, aot=True, buckets=(1, BATCH))
+    return acc, path
+
+
+def _key_for(acc, batch=BATCH, donate=False):
+    rt = acc.runtime
+    params = rt.dram_params()
+    return cache_key(rt.program, batch=batch, dtype=acc.input_dtype,
+                     param_dtypes=tuple(jnp.dtype(w.dtype).name
+                                        for w, _ in params),
+                     backend=rt.backend, interpret=rt.interpret,
+                     opt_level=rt.opt_level, donate_input=donate,
+                     quant=rt.quant)
+
+
+def _load_expect_fallback(aot_dir, key, caplog, reason_substr, env=None):
+    with caplog.at_level(logging.INFO, logger="repro.aot"):
+        fn = aot.load_entry(aot_dir, key, env=env)
+    assert fn is None
+    text = caplog.text
+    assert "falling back to fresh compile" in text
+    assert reason_substr in text
+    return text
+
+
+def test_stale_device_kind_falls_back(bundle, caplog):
+    acc, path = bundle
+    env = dict(aot.environment_fingerprint(), device_kind="TPU v9000")
+    _load_expect_fallback(os.path.join(path, "aot"), _key_for(acc),
+                          caplog, "device_kind", env=env)
+
+
+def test_stale_jax_version_falls_back(bundle, caplog, monkeypatch):
+    """Version drift detected end-to-end: a bundle saved under another jax
+    release recompiles fresh — and the recompiled answers stay bitwise
+    right, because the fallback is the ordinary compile path."""
+    acc, path = bundle
+    env = dict(aot.environment_fingerprint(), jax_version="0.0.1",
+               jaxlib_version="0.0.1")
+    _load_expect_fallback(os.path.join(path, "aot"), _key_for(acc),
+                          caplog, "jax_version", env=env)
+
+    monkeypatch.setattr(aot, "environment_fingerprint", lambda: env)
+    fresh_cache = ProgramCache()
+    acc2 = api.Accelerator.from_program(path, params=acc.params,
+                                        cache=fresh_cache)
+    x = np.stack(_requests(BATCH, seed=3))
+    np.testing.assert_array_equal(np.asarray(acc(x)), np.asarray(acc2(x)))
+    assert fresh_cache.stats.aot_loads == 0    # every artifact was stale
+
+
+def test_stale_schedule_falls_back(bundle, caplog):
+    """A different instruction stream (schedule tamper/drift) never picks
+    up the old binary."""
+    acc, path = bundle
+    other = compile_network(
+        [ConvSpec("c1", 8, 8, 3, 8, relu=False)],
+        [LayerPlan("spat", "ws", m=2, g_k=1, g_h=1)])
+    key = list(_key_for(acc))
+    key[0] = other.schedule_key()
+    _load_expect_fallback(os.path.join(path, "aot"), tuple(key),
+                          caplog, "schedule")
+
+
+def test_stale_quant_digest_falls_back(bundle, caplog):
+    """A tampered/re-calibrated quant sidecar changes the digest dimension
+    of the key — the fp32-keyed (or differently-calibrated) binary must not
+    serve it."""
+    acc, path = bundle
+    key = list(_key_for(acc))
+    key[9] = "deadbeefdeadbeef"                # quant digest dimension
+    _load_expect_fallback(os.path.join(path, "aot"), tuple(key),
+                          caplog, "quant_digest")
+
+
+def test_truncated_artifact_falls_back(bundle, caplog):
+    acc, path = bundle
+    aot_dir = os.path.join(path, "aot")
+    key = _key_for(acc, batch=BATCH, donate=True)
+    digest = aot.artifact_digest(aot.artifact_key(key))
+    artifact = os.path.join(aot_dir, f"{digest}.aotx")
+    blob = open(artifact, "rb").read()
+    try:
+        with open(artifact, "wb") as f:
+            f.write(blob[: len(blob) // 2])
+        _load_expect_fallback(aot_dir, key, caplog, "unreadable")
+    finally:
+        with open(artifact, "wb") as f:
+            f.write(blob)
+
+
+def test_tampered_manifest_falls_back(bundle, caplog):
+    """A hand-edited manifest entry no longer matches its own digest — the
+    artifact is refused even though the file exists."""
+    acc, path = bundle
+    aot_dir = os.path.join(path, "aot")
+    mpath = os.path.join(aot_dir, aot.MANIFEST)
+    saved = open(mpath).read()
+    manifest = json.loads(saved)
+    key = _key_for(acc, batch=BATCH, donate=True)
+    digest = aot.artifact_digest(aot.artifact_key(key))
+    try:
+        manifest[digest]["opt_level"] = 99
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+        _load_expect_fallback(aot_dir, key, caplog, "opt_level")
+    finally:
+        with open(mpath, "w") as f:
+            f.write(saved)
+
+
+# --------------------------------------------------------------------------
+# save_program/from_program negative paths (named errors)
+# --------------------------------------------------------------------------
+
+def test_from_program_truncated_json(tmp_path):
+    acc = _build()
+    path = acc.save_program(str(tmp_path / "prog.json"))
+    blob = open(path).read()
+    with open(path, "w") as f:
+        f.write(blob[: len(blob) // 2])
+    with pytest.raises(api.ProgramLoadError, match="truncated or not JSON"):
+        api.Accelerator.from_program(path, params=acc.params)
+
+
+def test_from_program_unknown_format_version(tmp_path):
+    acc = _build()
+    path = acc.save_program(str(tmp_path / "prog.json"))
+    doc = json.load(open(path))
+    doc["format"] = "hybriddnn-program/v999"
+    json.dump(doc, open(path, "w"))
+    with pytest.raises(api.ProgramLoadError, match="v999"):
+        api.Accelerator.from_program(path, params=acc.params)
+
+
+def test_from_program_sidecar_from_other_schedule(tmp_path):
+    """A quant sidecar spliced in from a DIFFERENT network's saved program
+    is rejected: its digest is bound to the donor's schedule."""
+    acc_a = _build(dtype="int8")
+    other_specs = [ConvSpec("c1", 8, 8, 3, 16), PoolSpec("p1", 8, 8, 16),
+                   FCSpec("fc", 4 * 4 * 16, 10, relu=False)]
+    rng = np.random.default_rng(0)
+    acc_b = api.Accelerator.build(
+        other_specs, target=pm.V5E, batch=BATCH, seed=0, dtype="int8",
+        calib=rng.standard_normal((8, 8, 8, 3)).astype(np.float32))
+    path_a = acc_a.save_program(str(tmp_path / "a.json"))
+    path_b = acc_b.save_program(str(tmp_path / "b.json"))
+    doc_a, doc_b = json.load(open(path_a)), json.load(open(path_b))
+    doc_b["quant"] = doc_a["quant"]            # the splice
+    json.dump(doc_b, open(path_b, "w"))
+    with pytest.raises(api.ProgramLoadError, match="sidecar"):
+        api.Accelerator.from_program(path_b, params=acc_b.params)
+
+
+def test_bundle_dir_without_program_json(tmp_path):
+    d = tmp_path / "not_a_bundle"
+    d.mkdir()
+    with pytest.raises(api.ProgramLoadError, match="program.json"):
+        api.Accelerator.from_program(str(d), params=[])
+
+
+# --------------------------------------------------------------------------
+# key stability: deterministic across processes, distinct per dimension
+# --------------------------------------------------------------------------
+
+def _random_program(seed: int):
+    """A randomized (but seed-deterministic) single-conv Program."""
+    rng = np.random.default_rng(seed)
+    h = int(rng.choice([6, 8, 12]))
+    c, k = int(rng.integers(1, 5)), int(rng.integers(2, 9))
+    mode = "wino" if rng.integers(2) else "spat"
+    flow = "ws" if rng.integers(2) else "is"
+    specs = [ConvSpec("c1", h, h, c, k, relu=bool(rng.integers(2)))]
+    plans = [LayerPlan(mode, flow, m=2, g_k=int(rng.integers(1, 3)),
+                       g_h=int(rng.integers(1, 3)))]
+    return compile_network(specs, plans)
+
+
+def _digest_for_seed(seed: int) -> str:
+    prog = _random_program(seed)
+    key = cache_key(prog, batch=int(2 + seed % 3), dtype=jnp.float32,
+                    param_dtypes=("float32",))
+    return aot.artifact_digest(aot.artifact_key(key))
+
+
+_STABILITY_SEEDS = (0, 1, 2, 7, 23, 1009)
+
+
+def test_keys_deterministic_across_process_restart():
+    """Same Program, fresh interpreter -> same cache key and artifact
+    digest: nothing id()-, hash-randomization- or order-dependent leaks
+    into the on-disk identity."""
+    here = [_digest_for_seed(s) for s in _STABILITY_SEEDS]
+    env = dict(os.environ,
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(os.path.dirname(__file__), "..", "src"),
+                    os.environ.get("PYTHONPATH", "")]))
+    r = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "digests",
+         *map(str, _STABILITY_SEEDS)],
+        capture_output=True, text=True, env=env, timeout=240)
+    assert r.returncode == 0, r.stderr
+    there = r.stdout.split()
+    assert here == there
+
+
+def _assert_single_dim_changes_distinct(seed: int):
+    prog = _random_program(seed)
+    base = cache_key(prog, batch=2, dtype=jnp.float32,
+                     param_dtypes=("float32",))
+    other = _random_program(seed + 1)
+    if other.schedule_key() == prog.schedule_key():
+        other = _random_program(seed + 2)
+    variants = {
+        "schedule": other.schedule_key(), "batch": 4, "dtype": "int8",
+        "param_dtypes": ("int8",), "backend": "pallas", "interpret": True,
+        "opt_level": 0, "donate_input": True,
+        "mesh": ((2,), ("x",), (0, 1)), "quant_digest": "deadbeef",
+    }
+    dims = list(aot.artifact_key(base))[1:11]  # skip "format", pre-env dims
+    digests = {aot.artifact_digest(aot.artifact_key(base))}
+    for i, dim in enumerate(dims):
+        t = list(base)
+        t[i] = variants[dim]
+        assert tuple(t) != base
+        d = aot.artifact_digest(aot.artifact_key(tuple(t)))
+        assert d not in digests, f"dimension {dim} did not change the key"
+        digests.add(d)
+    # the environment dimensions separate artifacts too
+    for dim, v in (("device_kind", "TPU v9000"), ("platform", "neuromorph"),
+                   ("jax_version", "0.0.1"), ("jaxlib_version", "0.0.1")):
+        env = dict(aot.environment_fingerprint())
+        env[dim] = v
+        d = aot.artifact_digest(aot.artifact_key(base, env=env))
+        assert d not in digests, f"env dimension {dim} did not change the key"
+        digests.add(d)
+
+
+def test_single_dimension_change_gives_distinct_key_seeded():
+    for seed in _STABILITY_SEEDS:
+        _assert_single_dim_changes_distinct(seed)
+
+
+def test_cache_key_pure():
+    """Recompiling the same specs/plans yields the identical key tuple."""
+    a, b = _random_program(5), _random_program(5)
+    assert a is not b
+    assert (cache_key(a, batch=2, dtype=jnp.float32)
+            == cache_key(b, batch=2, dtype=jnp.float32))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16))
+    def test_single_dimension_change_gives_distinct_key(seed):
+        _assert_single_dim_changes_distinct(seed)
+
+
+if __name__ == "__main__":
+    # child half of test_keys_deterministic_across_process_restart
+    if len(sys.argv) > 1 and sys.argv[1] == "digests":
+        print(" ".join(_digest_for_seed(int(s)) for s in sys.argv[2:]))

@@ -1,0 +1,109 @@
+#!/usr/bin/env python
+"""AOT round-trip smoke: save -> FRESH process -> load -> serve.
+
+    PYTHONPATH=src python tools/aot_smoke.py
+
+The parent builds a small model, serves one warmed session (recording the
+fresh ``compile_ms`` and the per-request outputs), and writes an AOT bundle
+(``Accelerator.save_program(..., aot=True)``). A child interpreter — a
+genuinely cold process, the autoscaling-event case the artifact layer
+exists for — loads the bundle, serves the same requests, and reports its
+``SessionStats``. The smoke fails if the warm process compiled anything
+(``compile_ms`` must be exactly 0), if any output differs BITWISE from the
+parent's, or if the warm start is not faster than the fresh compile. CI's
+fast tier runs this on every PR.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+_CHILD = r"""
+import json, sys
+import numpy as np
+from repro import api
+
+bundle, out_path = sys.argv[1], sys.argv[2]
+rng = np.random.default_rng(1)
+reqs = [rng.standard_normal((16, 16, 3)).astype(np.float32)
+        for _ in range(8)]
+# same stand-in weights the parent's build(seed=0) generated
+with open(bundle + "/program.json") as f:
+    doc = json.load(f)
+specs = [api._spec_from_dict(d) for d in doc["specs"]]
+acc = api.Accelerator.from_program(bundle,
+                                   params=api.random_params(specs, seed=0))
+with acc.serve(max_batch=4, buckets=(1, 2, 4), warmup=True) as s:
+    outs = [np.asarray(y).tolist() for y in s.run_many(reqs)]
+    st = s.stats
+json.dump({"compile_ms": st.compile_ms, "warm_load_ms": st.warm_load_ms,
+           "outs": outs}, open(out_path, "w"))
+"""
+
+
+def main() -> int:
+    import numpy as np
+
+    from repro import api
+    from repro.core import perf_model as pm
+    from repro.core.hybrid_conv import ConvSpec, FCSpec, PoolSpec
+
+    specs = [ConvSpec("c1", 16, 16, 3, 8), PoolSpec("p1", 16, 16, 8),
+             FCSpec("fc", 8 * 8 * 8, 10, relu=False)]
+    acc = api.Accelerator.build(specs, target=pm.V5E, batch=4, seed=0)
+    rng = np.random.default_rng(1)
+    reqs = [rng.standard_normal((16, 16, 3)).astype(np.float32)
+            for _ in range(8)]
+    with acc.serve(max_batch=4, buckets=(1, 2, 4), warmup=True) as s:
+        fresh = [np.asarray(y) for y in s.run_many(reqs)]
+        fresh_compile_ms = s.stats.compile_ms
+
+    with tempfile.TemporaryDirectory() as tmp:
+        bundle = os.path.join(tmp, "bundle")
+        acc.save_program(bundle, aot=True, buckets=(1, 2, 4))
+        out_path = os.path.join(tmp, "warm.json")
+        repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.join(repo, "src"), env.get("PYTHONPATH", "")])
+        r = subprocess.run([sys.executable, "-c", _CHILD, bundle, out_path],
+                           capture_output=True, text=True, env=env,
+                           timeout=600)
+        if r.returncode != 0:
+            print(f"FAIL: warm child process died\nstdout:\n{r.stdout}\n"
+                  f"stderr:\n{r.stderr}", file=sys.stderr)
+            return 1
+        warm = json.load(open(out_path))
+
+    ok = True
+    if warm["compile_ms"] != 0.0:
+        print(f"FAIL: warm process compiled "
+              f"({warm['compile_ms']:.1f}ms != 0)", file=sys.stderr)
+        ok = False
+    if not warm["warm_load_ms"] > 0.0:
+        print("FAIL: warm process reported no warm-load time — the bundle "
+              "was not used", file=sys.stderr)
+        ok = False
+    for i, (a, b) in enumerate(zip(fresh, warm["outs"])):
+        if not np.array_equal(a, np.asarray(b, a.dtype)):
+            print(f"FAIL: request {i} differs between fresh and warm-loaded "
+                  f"executors (bitwise)", file=sys.stderr)
+            ok = False
+            break
+    ratio = warm["warm_load_ms"] / max(fresh_compile_ms, 1e-9)
+    print(f"aot smoke: fresh compile {fresh_compile_ms:.0f}ms, warm load "
+          f"{warm['warm_load_ms']:.0f}ms ({ratio:.2f}x), outputs bitwise "
+          f"{'OK' if ok else 'MISMATCH'}")
+    if ratio >= 1.0:
+        print("FAIL: warm load is not faster than the fresh compile",
+              file=sys.stderr)
+        ok = False
+    print(f"aot smoke: {'OK' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -78,6 +78,13 @@ ROW_SCHEMAS: dict[str, set[str]] = {
                              "top1_agreement_resnet18",
                              "executor_interp_bitwise",
                              "dequant_max_abs_err", "backend_mode"},
+    # warm_over_cold_compile_ratio = warm-process warm_load_ms over
+    # cold-process compile_ms: both sides are fresh-interpreter wall
+    # clocks for the SAME program on the same host, so the ratio is
+    # machine-load-independent and gates as a lower-is-better key
+    "serving/aot_cold_start": {"cold_compile_ms", "warm_load_ms",
+                               "warm_over_cold_compile_ratio",
+                               "max_abs_diff"},
 }
 
 # higher-is-better ratio metrics: stable across machines, so they gate
@@ -87,7 +94,7 @@ RATIO_KEYS = ("speedup", "jaxpr_op_reduction", "session_vs_direct_batched",
               "top1_agreement_vgg16", "top1_agreement_resnet18")
 
 # lower-is-better ratio metrics: gate on growth past tol instead of a drop
-LOWER_RATIO_KEYS = ("pallas_over_xla",)
+LOWER_RATIO_KEYS = ("pallas_over_xla", "warm_over_cold_compile_ratio")
 
 
 def _ratio_gate_skipped(name, key, row) -> str | None:
