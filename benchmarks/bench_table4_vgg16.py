@@ -86,6 +86,7 @@ def run() -> list[dict]:
     runtime_rows += run_resnet18_single_program()
     runtime_rows += run_int8_vs_fp32()
     runtime_rows += run_aot_cold_start()
+    runtime_rows += run_fault_injection()
     _write_artifact(runtime_rows)
     return rows + runtime_rows
 
@@ -828,3 +829,88 @@ def run_fleet_sharded(*, n_devices: int = 4) -> list[dict]:
     row = json.loads(line[len("FLEET_ROW:"):])
     row = {"bench": "table4_vgg16", "name": "serving/fleet_sharded", **row}
     return [row]
+
+
+def run_fault_injection(*, img: int = 32, scale: int = 16, batch: int = 4,
+                        n_requests: int = 40) -> list[dict]:
+    """Fault-tolerant serving row: what poisoned-batch isolation costs.
+
+    The same request stream is served twice through one warmed session
+    configuration: once clean, once with ~10% of the requests *cursed*
+    (a deterministic :class:`FaultSpec` fails every batch containing them
+    at the ``execute`` site, forcing the bisect-and-retry recovery). The
+    row records:
+
+    * ``survived`` / ``accounting_balanced`` — the liveness invariant
+      under load: every future resolved, ``submitted == completed +
+      errors + shed``;
+    * ``isolation_overhead_ratio`` — faulty-pass wall clock over the
+      clean pass (lower is better; both passes run back-to-back in one
+      process, so the ratio is machine-load-independent);
+    * ``p95_clean_ms`` / ``p95_faulty_ms`` — tail latency with and
+      without 10% faults;
+    * ``innocent_max_abs_diff`` — innocents co-batched with an offender
+      against the clean pass. The bisection retries re-run the same
+      compiled executor at the same bucket size and row offsets, so this
+      is REQUIRED to be exactly 0.0 (bitwise), not merely small.
+    """
+    import numpy as np
+
+    from repro import api
+    from repro.serving import FaultPlan, FaultSpec
+
+    specs = network_specs(img=img, scale=scale, n_classes=10)
+    acc = api.Accelerator.build(specs, seed=0, batch=batch)
+    rng = np.random.default_rng(0)
+    xs = rng.standard_normal((n_requests, img, img, 3)).astype(np.float32)
+    cursed = tuple(range(0, n_requests, 10))        # every 10th request
+    # request ids are session-global and the timed stream runs after a
+    # 2*batch-request pipeline warmup, so the cursed specs bind to the
+    # warmup-offset ids
+    plan = FaultPlan([FaultSpec(site="execute", kind="error",
+                                requests=(c + 2 * batch,),
+                                message=f"cursed request {c}")
+                      for c in cursed])
+
+    def _pass(fault_plan):
+        with acc.serve(max_batch=batch, buckets=(batch,), max_wait_ms=2.0,
+                       warmup=True, fault_plan=fault_plan) as s:
+            s.run_many(list(xs[:2 * batch]))        # warm pipeline threads
+            s.stats.latencies_ms.clear()
+            t0 = time.monotonic()
+            futs = [s.submit(x) for x in xs]
+            outs = []
+            for f in futs:
+                try:
+                    outs.append(np.asarray(f.result(timeout=120)))
+                except Exception as e:  # noqa: BLE001 — typed resolution
+                    outs.append(e)
+            dt = time.monotonic() - t0
+            st = s.stats
+            resolved = all(f.done() for f in futs)
+        return outs, dt, st, resolved
+
+    clean_outs, t_clean, st_clean, _ = _pass(None)
+    faulty_outs, t_faulty, st_faulty, resolved = _pass(plan)
+    balanced = (st_faulty.submitted
+                == st_faulty.requests + st_faulty.errors + st_faulty.shed)
+    innocent_diff = max(
+        float(np.max(np.abs(f - c)))
+        for i, (f, c) in enumerate(zip(faulty_outs, clean_outs))
+        if i not in cursed)
+    offenders_isolated = all(isinstance(faulty_outs[i], Exception)
+                             for i in cursed)
+    return [{
+        "bench": "table4_vgg16", "name": "serving/fault_injection",
+        "config": (f"img{img}_scale{scale}_maxbatch{batch}_n{n_requests}_"
+                   f"cursed{len(cursed)}"),
+        "fault_rate": round(len(cursed) / n_requests, 3),
+        "survived": bool(resolved and balanced),
+        "accounting_balanced": bool(balanced),
+        "offenders_isolated": bool(offenders_isolated),
+        "retries": st_faulty.retries, "isolated": st_faulty.isolated,
+        "isolation_overhead_ratio": round(t_faulty / t_clean, 2),
+        "p95_clean_ms": round(st_clean.p95_ms(), 2),
+        "p95_faulty_ms": round(st_faulty.p95_ms(), 2),
+        "innocent_max_abs_diff": innocent_diff,
+    }]

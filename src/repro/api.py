@@ -43,7 +43,9 @@ the plug-in table and ``docs/API.md`` for the full reference.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import json
+import logging
 import os
 import threading
 import time
@@ -70,8 +72,18 @@ from repro.core.hybrid_conv import (
 from repro.core.runtime import HybridRuntime
 from repro.quant import QuantSidecar, quantize_params
 from repro.quant import calibrate as quant_calibrate
+from repro.serving import (
+    DeadlineExceeded,
+    DeadlineTable,
+    NumericsError,
+    Overloaded,
+    PipelineCrashed,
+    ThreadSupervisor,
+)
 
 PROGRAM_FORMAT = "hybriddnn-program/v1"
+
+log = logging.getLogger("repro.serving")
 
 
 class ProgramLoadError(ValueError):
@@ -737,6 +749,20 @@ class SessionStats:
     batches: int = 0         # executor invocations
     padded_rows: int = 0     # zero rows added to reach a bucket size
     dispatched_rows: int = 0  # real (non-pad) rows sent to the device(s)
+    # -- failure model (see docs/ARCHITECTURE.md "Failure model") ----------
+    # the accounting invariant every session maintains and the chaos soak
+    # asserts: submitted == requests + errors + shed. A request lands in
+    # exactly one of the three; deadline_exceeded is the subset of errors
+    # failed by the deadline enforcer, isolated the subset quarantined
+    # individually (poisoned-batch bisection or a numerics guard hit).
+    submitted: int = 0           # requests accepted by submit()/run_many()
+    errors: int = 0              # requests resolved with an exception
+    deadline_exceeded: int = 0   # ... of which: missed their deadline_ms
+    shed: int = 0                # refused at admission (queue_limit)
+    retries: int = 0             # bisection re-dispatches after a failure
+    isolated: int = 0            # requests individually quarantined
+    degraded: int = 0            # batches recovered on the XLA fallback
+    watchdog_restarts: int = 0   # pipeline restarts after a dead thread
     # first-use cost per bucket, split by how the executor came to exist so
     # the AOT warm-start win is measurable: compile_ms counts buckets that
     # traced + XLA-compiled in this process (warmup or first use);
@@ -763,6 +789,14 @@ class SessionStats:
         default_factory=lambda: deque(maxlen=4096))
     _lat_lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False)
+
+    def bump(self, name: str, k: int = 1):
+        """Thread-safe counter increment — the failure counters are bumped
+        from the worker, drain, supervisor AND caller threads, and a bare
+        ``+=`` read-modify-write can drop updates across them, which would
+        break the exact-accounting invariant the chaos soak asserts."""
+        with self._lat_lock:
+            setattr(self, name, getattr(self, name) + k)
 
     def record_latency(self, ms: float):
         with self._lat_lock:
@@ -846,24 +880,57 @@ class _SlotPool:
         Fleet's tenants) still has dispatched work in flight."""
         return self._free < self.capacity
 
-    def acquire(self):
+    def acquire(self, cancelled=None) -> bool:
+        """Block for a slot; returns True once acquired. ``cancelled`` (a
+        nullary predicate, polled while waiting) lets a dispatch worker
+        abandon the wait when its pipeline generation is retired — without
+        it, a worker queued on a pool whose holder crashed would block a
+        watchdog restart forever. Returns False when cancelled."""
         token = object()
         with self._cv:
             self._waiters.append(token)
             while self._free <= 0 or self._waiters[0] is not token:
-                self._cv.wait()
+                if cancelled is not None and cancelled():
+                    self._waiters.remove(token)
+                    self._cv.notify_all()   # next in line may now be eligible
+                    return False
+                self._cv.wait(None if cancelled is None else 0.05)
             self._waiters.popleft()
             self._free -= 1
             if self._free > 0:
                 self._cv.notify_all()   # next waiter in line may also go
+            return True
 
     def release(self):
         with self._cv:
-            self._free += 1
+            # clamp: watchdog crash-recovery frees slots on behalf of dead
+            # threads; if a presumed-dead thread still manages a release,
+            # the pool must not inflate past its capacity
+            self._free = min(self._free + 1, self.capacity)
             self._cv.notify_all()
         for cv in self._subscribers:
             with cv:
                 cv.notify_all()
+
+
+class _Request:
+    """One staged request flowing through the session pipeline."""
+
+    __slots__ = ("x", "single", "fut", "t_submit", "rid", "deadline",
+                 "deadline_ms", "off")
+
+    def __init__(self, x, single: bool, fut: Future | None,
+                 t_submit: float, rid: int,
+                 deadline: float | None = None,
+                 deadline_ms: float | None = None):
+        self.x = x                    # staged host array (k, *input_shape)
+        self.single = single          # un-batched submit: scatter row 0
+        self.fut = fut                # None on run_many's inline bulk path
+        self.t_submit = t_submit
+        self.rid = rid                # session-unique id (fault targeting)
+        self.deadline = deadline      # absolute monotonic, None = none
+        self.deadline_ms = deadline_ms
+        self.off = 0                  # row offset inside its staged bucket
 
 
 class ServingSession:
@@ -932,6 +999,44 @@ class ServingSession:
     ``slot_pool`` shares the device-pipeline slots with other sessions — a
     :class:`Fleet` passes one pool to every tenant model so device slots
     round-robin between them; standalone sessions get a private pool of 3.
+
+    **Failure model** (full semantics in ``docs/ARCHITECTURE.md``):
+
+    * ``deadline_ms`` (session default, overridable per ``submit``) — a
+      request whose result has not drained by its deadline resolves with
+      :class:`repro.serving.DeadlineExceeded` instead of hanging; the
+      continuous admitter caps its coalescing hold at the earliest
+      deadline in the open batch.
+    * ``queue_limit`` + ``on_overload`` (``"shed"`` | ``"block"``) —
+      bounded admission: past the limit, ``"shed"`` returns a future
+      pre-failed with :class:`repro.serving.Overloaded`; ``"block"``
+      makes ``submit`` wait for queue space.
+    * poisoned-batch isolation — a failed coalesced batch is bisected and
+      re-dispatched at the SAME bucket size with the excluded rows zeroed
+      in place, so innocent co-batched requests still succeed
+      **bitwise-identically** to a fault-free run; the offender fails with
+      the causal exception (``stats.retries`` / ``stats.isolated``).
+    * graceful backend degradation — on a ``backend="pallas"`` execution
+      failure the whole batch is re-dispatched once through the XLA
+      lowering (``stats.degraded``) before bisection, mirroring the AOT
+      warn-and-recompile path.
+    * ``guard_numerics`` — per-request NaN/Inf quarantine at drain time
+      (:class:`repro.serving.NumericsError`); finite co-batched results
+      still resolve.
+    * supervision — a per-session supervisor thread enforces deadlines and
+      watches the dispatch/drain threads (``is_alive`` + the
+      ``HeartbeatMonitor``-based hang detector when ``hang_after_s`` is
+      set). A dead thread fails every queued/in-flight future with
+      :class:`repro.serving.PipelineCrashed` (causal exception chained),
+      frees the dead thread's device slots and restarts the pipeline
+      (``stats.watchdog_restarts``); ``close()`` stays idempotent through
+      all of it.
+    * ``fault_plan`` — a :class:`repro.serving.FaultPlan` wired into the
+      pipeline boundaries for deterministic fault injection (tests/CI).
+
+    The accounting invariant across all of the above:
+    ``stats.submitted == stats.requests + stats.errors + stats.shed``
+    once every accepted future has resolved.
     """
 
     SCHEDULERS = ("continuous", "bucketed")
@@ -940,12 +1045,24 @@ class ServingSession:
                  buckets: Sequence[int] | None = None, mesh=None,
                  max_wait_ms: float = 5.0, warmup: bool = False,
                  scheduler: str = "continuous",
-                 slot_pool: _SlotPool | None = None):
+                 slot_pool: _SlotPool | None = None,
+                 deadline_ms: float | None = None,
+                 queue_limit: int | None = None,
+                 on_overload: str = "shed",
+                 guard_numerics: bool = False,
+                 fault_plan=None,
+                 supervise: bool = True,
+                 hang_after_s: float | None = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if scheduler not in self.SCHEDULERS:
             raise ValueError(f"unknown scheduler {scheduler!r}: expected "
                              f"one of {self.SCHEDULERS}")
+        if on_overload not in ("shed", "block"):
+            raise ValueError(f"on_overload must be 'shed' or 'block', "
+                             f"got {on_overload!r}")
+        if queue_limit is not None and queue_limit < 1:
+            raise ValueError("queue_limit must be >= 1")
         self.acc = acc
         self.scheduler = scheduler
         self.max_batch = int(max_batch)
@@ -973,6 +1090,43 @@ class ServingSession:
         self._pending: deque = deque()
         self._cv = threading.Condition()
         self._closed = False
+
+        # -- failure model state --------------------------------------------
+        self._deadline_default = (None if deadline_ms is None
+                                  else max(0.0, float(deadline_ms)))
+        self.queue_limit = queue_limit
+        self.on_overload = on_overload
+        self._guard_numerics = bool(guard_numerics)
+        self._faults = fault_plan
+        self._rid_counter = itertools.count()
+        self._deadlines = DeadlineTable()
+        self._backend_tag = getattr(acc, "backend", "xla") or "xla"
+        self._fallback_entries: dict[int, Any] = {}  # lazy XLA degradation
+        self._fallback_lock = threading.Lock()
+        # pipeline generation: bumped by the watchdog on restart; stale
+        # threads check it and stand down without touching shared state
+        self._gen = 0
+        self._life_lock = threading.Lock()   # serializes restart vs close
+        self._closed_done = False
+        self._worker_exited_clean = False
+        # slot bookkeeping the watchdog uses to free a dead thread's slots:
+        # flags only ever flip in the owning thread, and are only read by
+        # the watchdog after that thread is confirmed dead/joined
+        self._worker_holds_slot = False
+        self._drain_popped_unreleased = False
+        # the group a pipeline thread is actively working on, visible so a
+        # crash mid-dispatch / mid-deliver (group popped from the shared
+        # deques, held only in the thread's locals) cannot strand futures:
+        # the watchdog fails whatever a confirmed-dead thread left here
+        self._worker_group: list | None = None
+        self._drain_group: list | None = None
+        self._thread_exc: BaseException | None = None   # causal, for restart
+        self._sup = (ThreadSupervisor(("dispatch", "drain"),
+                                      hang_after_s=hang_after_s)
+                     if supervise else None)
+        self._sup_cv = threading.Condition()
+        self._sup_stop = False
+        self._sup_thread: threading.Thread | None = None
 
         # hot path: one cached executor entry per bucket (validated once,
         # lowered once per bucket), donating the staged input buffer.
@@ -1082,10 +1236,25 @@ class ServingSession:
                     self._count_first_use(b, t0)
                     self._warm.add(b)
 
+        self._start_pipeline_threads()
+        if supervise:
+            self._sup_thread = threading.Thread(
+                target=self._supervise, daemon=True,
+                name="hybriddnn-serving-watchdog")
+            self._sup_thread.start()
+
+    def _start_pipeline_threads(self):
+        """(Re)start the dispatch + drain pair for the current generation.
+        Thread targets take the generation by value: a restarted pipeline
+        must never process state a stale thread still thinks it owns."""
+        gen = self._gen
+        self._worker_exited_clean = False
         self._dispatch_thread = threading.Thread(
-            target=self._worker, daemon=True, name="hybriddnn-serving")
+            target=self._worker, args=(gen,), daemon=True,
+            name=f"hybriddnn-serving-g{gen}")
         self._drain_thread = threading.Thread(
-            target=self._drainer, daemon=True, name="hybriddnn-serving-drain")
+            target=self._drainer, args=(gen,), daemon=True,
+            name=f"hybriddnn-serving-drain-g{gen}")
         self._dispatch_thread.start()
         self._drain_thread.start()
 
@@ -1122,23 +1291,86 @@ class ServingSession:
                 f"the accelerator input shape {self.acc.input_shape}")
         return x, single
 
-    def submit(self, x) -> Future:
+    def _make_request(self, x, fut: Future | None, now: float,
+                      deadline_ms: float | None) -> _Request:
+        """Stage + wrap one request; assigns its session-unique id and
+        resolves its absolute deadline. The fault harness's ``staging``
+        site fires here, on the caller's thread, against a private copy of
+        the staged array (corruption must never alias the caller's
+        buffer)."""
+        xs, single = self._stage(x)
+        rid = next(self._rid_counter)
+        if self._faults is not None:
+            xs = self._faults.visit(
+                "staging", payload=np.array(xs), requests=(rid,),
+                rows={rid: (0, xs.shape[0])})
+        dl_ms = (self._deadline_default if deadline_ms is None
+                 else max(0.0, float(deadline_ms)))
+        dl = None if dl_ms is None else now + dl_ms / 1e3
+        return _Request(xs, single, fut, now, rid, dl, dl_ms)
+
+    def _queue_full(self) -> bool:
+        """Caller holds ``_cv``. Compacts already-resolved (deadline-
+        expired/cancelled) entries out of the queue before refusing —
+        a dead request must not occupy admission capacity."""
+        if len(self._pending) < self.queue_limit:
+            return False
+        self._pending = deque(
+            r for r in self._pending
+            if r.fut is None or not r.fut.done())
+        return len(self._pending) >= self.queue_limit
+
+    def _enqueue(self, reqs: list[_Request]):
+        """Admission control: bounded queue with shed-or-block overflow,
+        deadline registration, exact ``submitted`` accounting."""
+        st = self.stats
+        notify_sup = False
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("ServingSession is closed")
+            for req in reqs:
+                if self.queue_limit is not None and self._queue_full():
+                    if self.on_overload == "block":
+                        while self._queue_full() and not self._closed:
+                            self._cv.wait(0.05)
+                        if self._closed:
+                            raise RuntimeError("ServingSession is closed")
+                    else:
+                        st.bump("submitted")
+                        st.bump("shed")
+                        req.fut.set_exception(Overloaded(
+                            f"pending queue at queue_limit="
+                            f"{self.queue_limit}; request shed"))
+                        continue
+                st.bump("submitted")
+                self._pending.append(req)
+                if req.deadline is not None:
+                    if self._deadlines.add(req.deadline, req):
+                        notify_sup = True
+            self._cv.notify()
+        if notify_sup and self._sup_thread is not None:
+            with self._sup_cv:   # new earliest deadline: shorten the nap
+                self._sup_cv.notify_all()
+
+    def submit(self, x, *, deadline_ms: float | None = None) -> Future:
         """Enqueue one request; returns a Future of the result (a single
         item's logits for single-item requests, a batch for batched ones).
 
         The request is staged host-side (numpy): no jax dispatch happens on
         the caller's thread — the dispatch worker launches one device call
-        per coalesced bucket."""
-        x, single = self._stage(x)
-        fut: Future = Future()
-        with self._cv:
-            if self._closed:
-                raise RuntimeError("ServingSession is closed")
-            self._pending.append((x, single, fut, time.monotonic()))
-            self._cv.notify()
-        return fut
+        per coalesced bucket. ``deadline_ms`` overrides the session default
+        for this request: past it, the future resolves with
+        :class:`repro.serving.DeadlineExceeded` rather than waiting for a
+        result. When the session has a ``queue_limit`` and the queue is
+        full, ``on_overload="shed"`` returns a future pre-failed with
+        :class:`repro.serving.Overloaded`; ``"block"`` waits for space."""
+        now = time.monotonic()
+        req = self._make_request(x, Future(), now, deadline_ms)
+        self._enqueue([req])
+        return req.fut
 
-    def submit_many(self, xs) -> list[Future]:
+    def submit_many(self, xs, *, deadline_ms: float | None = None
+                    ) -> list[Future]:
         """Enqueue a whole request list under ONE lock acquisition.
 
         Per-request ``submit`` wakes the dispatch worker once per call —
@@ -1146,16 +1378,11 @@ class ServingSession:
         traffic alone costs more than a device batch. Validation happens
         before anything enqueues, so a malformed request poisons nothing.
         """
-        staged = [self._stage(x) for x in xs]
-        futs: list[Future] = [Future() for _ in staged]
         now = time.monotonic()
-        with self._cv:
-            if self._closed:
-                raise RuntimeError("ServingSession is closed")
-            for (x, single), fut in zip(staged, futs):
-                self._pending.append((x, single, fut, now))
-            self._cv.notify()
-        return futs
+        reqs = [self._make_request(x, Future(), now, deadline_ms)
+                for x in xs]
+        self._enqueue(reqs)
+        return [r.fut for r in reqs]
 
     def __call__(self, x):
         """Synchronous convenience: submit + wait."""
@@ -1175,74 +1402,188 @@ class ServingSession:
         dispatch mutex serializes staging; the shared slot pool keeps
         device arbitration FIFO-fair), it just isn't co-batched with the
         bulk run."""
-        staged = [self._stage(x) for x in xs]
-        if not staged:
+        t0 = time.monotonic()
+        reqs = [self._make_request(x, None, t0, None) for x in xs]
+        if not reqs:
             return []
         with self._cv:
             if self._closed:
                 raise RuntimeError("ServingSession is closed")
+        self.stats.bump("submitted", len(reqs))
         # cut [start, end) item groups of <= max_batch rows
         groups, start, n = [], 0, 0
-        for i, (x, _) in enumerate(staged):
-            k = x.shape[0]
+        for i, r in enumerate(reqs):
+            k = r.x.shape[0]
             if n + k > self.max_batch:
                 groups.append((start, i, n))
                 start, n = i, 0
             n += k
-        groups.append((start, len(staged), n))
-        out: list = [None] * len(staged)
-        inflight: deque = deque()   # (start, end, y)
+        groups.append((start, len(reqs), n))
+        out: list = [None] * len(reqs)
+        errs: list[Exception] = []
+        inflight: deque = deque()   # (start, end, y, bucket, buf)
+
+        def _deliver_bulk(s0, outcomes):
+            st = self.stats
+            for i, (r, ok, val) in enumerate(outcomes):
+                if ok:
+                    gexc = self._guard(r, val)
+                    if gexc is None:
+                        out[s0 + i] = val[0] if r.single else val
+                        st.bump("requests")
+                        continue
+                    st.bump("isolated")
+                    val = gexc
+                errs.append(val)
+                st.bump("errors")
 
         def _sync_oldest():
-            s0, e0, y = inflight.popleft()
+            s0, e0, y, bucket, buf = inflight.popleft()
+            group = reqs[s0:e0]
             try:
+                if self._faults is not None:
+                    self._faults.visit(
+                        "drain", requests=[r.rid for r in group])
                 y_np = self._to_host(y)          # host sync (+ dequant)
-            finally:
-                self._slots.release()
+            except Exception as exc:  # noqa: BLE001 — recover per request
+                # recover BEFORE releasing the slot: the staging ring must
+                # not refill ``buf`` until the bisection has re-read it
+                try:
+                    _deliver_bulk(s0, self._recover(group, bucket, buf, exc))
+                finally:
+                    self._slots.release()
+                return
+            self._slots.release()
             done_t = time.monotonic()
-            self.stats.batches += 1
-            self.stats.requests += e0 - s0
+            self.stats.bump("batches")
+            _deliver_bulk(
+                s0, [(r, True, y_np[r.off:r.off + r.x.shape[0]])
+                     for r in group])
             self.stats.record_latencies(
                 [(done_t - t0) * 1e3] * (e0 - s0))
-            off = 0
-            for j in range(s0, e0):
-                xj, single = staged[j]
-                k = xj.shape[0]
-                out[j] = y_np[off] if single else y_np[off:off + k]
-                off += k
 
-        t0 = time.monotonic()
         try:
             for s0, e0, n in groups:
                 if len(inflight) >= self._slots.capacity:
                     _sync_oldest()   # never self-deadlock on the pool
+                group = reqs[s0:e0]
                 self._slots.acquire()
+                bucket = buf = None
                 try:
                     with self._dispatch_mutex:
-                        y = self._dispatch_group(
-                            [(x, single, None, t0)
-                             for x, single in staged[s0:e0]], n, bulk=True)
+                        bucket, buf = self._stage_group(group, n, bulk=True)
+                    y = self._launch(bucket, buf, group)
+                except Exception as e:  # noqa: BLE001 — recover per request
+                    try:
+                        if buf is None:
+                            raise    # staging failed: nothing to recover
+                        _deliver_bulk(
+                            s0, self._recover(group, bucket, buf, e))
+                    finally:
+                        self._slots.release()
+                    continue
                 except BaseException:
                     self._slots.release()
                     raise
-                inflight.append((s0, e0, y))
+                inflight.append((s0, e0, y, bucket, buf))
         finally:
-            err = None
             while inflight:     # release EVERY held slot even on error
                 try:
                     _sync_oldest()
                 except Exception as e:  # noqa: BLE001 — keep draining
-                    err = err or e
-            if err is not None:
-                raise err
+                    errs.append(e)
+        if errs:
+            self._raise_joined(errs)
         return out
 
+    @staticmethod
+    def _raise_joined(errs: list[Exception]):
+        """Raise the first error; the rest are attached as notes (3.11+)
+        and ``secondary_errors``, and logged — a multi-slot failure must
+        not silently swallow every error after the first."""
+        first, rest = errs[0], errs[1:]
+        for e in rest:
+            log.error("serving: additional in-flight batch failure "
+                      "(suppressed by %r): %r", first, e)
+            if hasattr(first, "add_note"):   # pragma: no cover — py3.11+
+                first.add_note(f"additionally failed: {e!r}")
+        first.secondary_errors = tuple(rest)
+        raise first
+
     def close(self):
+        """Drain and shut down. Idempotent, and safe mid-failure: a
+        pipeline that crashed (dead worker/drain thread) cannot strand
+        ``close`` — joins are bounded, a missing drain sentinel is
+        re-queued, and whatever is left queued/in-flight afterwards is
+        failed with :class:`repro.serving.PipelineCrashed` and its device
+        slots returned to the pool."""
+        with self._life_lock:
+            if self._closed_done:
+                return
+            with self._cv:
+                self._closed = True
+                self._cv.notify_all()
+            self._dispatch_thread.join(timeout=60.0)
+            if not self._worker_exited_clean:
+                # the worker died without queueing the drain sentinel
+                # (crashed or stale): queue it so the drainer can exit
+                with self._inflight_cv:
+                    self._inflight.append(None)
+                    self._inflight_cv.notify_all()
+            self._drain_thread.join(timeout=60.0)
+            exc = PipelineCrashed("ServingSession closed while its "
+                                  "pipeline was down")
+            exc.__cause__ = self._thread_exc
+            self._fail_all_queued(exc)
+            self._closed_done = True
+        if self._sup_thread is not None:
+            with self._sup_cv:
+                self._sup_stop = True
+                self._sup_cv.notify_all()
+            self._sup_thread.join(timeout=10.0)
+
+    def _fail_all_queued(self, exc):
+        """Fail every queued + in-flight request and return their pipeline
+        slots. Only called with the pipeline threads dead or joined (close
+        after join; watchdog after gen retirement), so the deques are not
+        concurrently drained."""
         with self._cv:
-            self._closed = True
+            pending = list(self._pending)
+            self._pending.clear()
             self._cv.notify_all()
-        self._dispatch_thread.join()     # drains pending, enqueues sentinel
-        self._drain_thread.join()        # resolves every in-flight batch
+        with self._inflight_cv:
+            items = [it for it in self._inflight if it is not None]
+            self._inflight.clear()
+            self._inflight_cv.notify_all()
+        for _ in range(len(items)):
+            self._slots.release()
+        # a dead thread's locals: its held slot, and the group it popped
+        # from the shared deques but never handed off/delivered — without
+        # collecting these, a crash mid-dispatch or mid-deliver would
+        # strand futures forever (the liveness invariant's hardest case)
+        stranded = []
+        if not self._dispatch_thread.is_alive():
+            if self._worker_holds_slot:
+                self._worker_holds_slot = False
+                self._slots.release()
+            if self._worker_group:
+                stranded.extend(self._worker_group)
+                self._worker_group = None
+        if not self._drain_thread.is_alive():
+            if self._drain_popped_unreleased:
+                self._drain_popped_unreleased = False
+                self._slots.release()
+            if self._drain_group:
+                stranded.extend(self._drain_group)
+                self._drain_group = None
+        for it in items:
+            for r in it[0]:
+                self._reject_req(r, exc)
+        for r in stranded:
+            self._reject_req(r, exc)
+        for r in pending:
+            self._reject_req(r, exc)
+        return len(items) + (1 if stranded else 0), len(pending)
 
     def __enter__(self):
         return self
@@ -1252,7 +1593,7 @@ class ServingSession:
         return False
 
     # -- dispatch side ------------------------------------------------------
-    def _take_group(self):
+    def _take_group(self, gen: int):
         """Admit pending requests into one device batch (<= max_batch).
 
         ``"bucketed"``: the legacy fixed window — cut when ``max_wait_ms``
@@ -1268,32 +1609,61 @@ class ServingSession:
         drainer wakes us (via the slot pool's subscriber hook) the moment a
         slot frees; the short wait below is only a backstop against a
         missed wakeup.
+
+        Failure-model extensions: already-resolved requests (deadline
+        expired / cancelled while queued) are dropped instead of admitted;
+        the coalescing hold is additionally capped at the earliest
+        deadline in the open batch (holding past it would guarantee a
+        ``DeadlineExceeded``); and a retired generation (watchdog restart)
+        hands its partial batch back to the queue and stands down.
+
+        Returns ``(group, n, stale)``.
         """
         continuous = self.scheduler == "continuous"
         with self._cv:
-            while not self._pending and not self._closed:
-                self._cv.wait()
+            while (not self._pending and not self._closed
+                   and self._gen == gen):
+                self._beat("dispatch")
+                self._cv.wait(0.25)
+            if self._gen != gen:
+                return None, 0, True
             if not self._pending:
-                return None, 0           # closed and drained
+                return None, 0, False    # closed and drained
             group, n = [], 0
             deadline = time.monotonic() + self._max_wait
             hard_deadline = deadline + 8 * self._max_wait
             while True:
                 while (self._pending
-                       and n + self._pending[0][0].shape[0] <= self.max_batch):
-                    group.append(self._pending.popleft())
-                    n += group[-1][0].shape[0]
-                if n >= self.max_batch or self._pending or self._closed:
+                       and n + self._pending[0].x.shape[0] <= self.max_batch):
+                    r = self._pending.popleft()
+                    if r.fut is not None and r.fut.done():
+                        continue     # expired/cancelled while queued
+                    group.append(r)
+                    n += r.x.shape[0]
+                self._cv.notify_all()    # queue shrank: wake blocked admitters
+                if (n >= self.max_batch or self._pending or self._closed
+                        or self._gen != gen):
                     break                # full, head won't fit, or draining
-                if (continuous and self._slots.busy()
-                        and time.monotonic() < hard_deadline):
+                dls = [r.deadline for r in group if r.deadline is not None]
+                batch_cap = min(dls) if dls else None
+                now = time.monotonic()
+                if batch_cap is not None and now >= batch_cap:
+                    break                # earliest deadline reached: cut
+                if (continuous and self._slots.busy() and now < hard_deadline
+                        and (batch_cap is None or now < batch_cap)):
                     self._cv.wait(0.005)     # device busy: keep admitting
                     continue
-                timeout = deadline - time.monotonic()
+                timeout = deadline - now
+                if batch_cap is not None:
+                    timeout = min(timeout, batch_cap - now)
                 if timeout <= 0:
                     break                # batching window expired
                 self._cv.wait(timeout)
-            return group, n
+            if self._gen != gen:
+                # retired mid-take: hand the batch to the new pipeline
+                self._pending.extendleft(reversed(group))
+                return None, 0, True
+            return group, n, False
 
     def _to_host(self, y) -> np.ndarray:
         """Host-sync one device batch; dequantize int8 logits to fp32.
@@ -1318,15 +1688,16 @@ class ServingSession:
             return entry(self._params, x)
         return self.acc(x)
 
-    def _dispatch_group(self, group, n, *, bulk: bool = False):
-        """Stage one device batch and launch it — no host sync.
+    def _stage_group(self, group, n, *, bulk: bool = False):
+        """Assemble one device batch into the staging ring — no dispatch.
 
         Assembly is numpy into a preallocated staging ring (one buffer per
         pipeline slot — see ``__init__``): per-op jax dispatch dominates at
         this granularity (8 expand_dims + concat + 8 slices per batch), so
         the queue would otherwise run slower than the direct loop it exists
-        to beat. Returns the in-flight device result; the drain thread
-        syncs it.
+        to beat. Records each request's row offset (``req.off``) so a
+        failed batch can be bisected at the same offsets. Returns
+        ``(bucket, buf)``; ``_launch`` dispatches it.
         """
         bucket = next(b for b in self.buckets if b >= n)
         if bulk:
@@ -1342,21 +1713,36 @@ class ServingSession:
         buf = ring[flips[bucket]]
         flips[bucket] = (flips[bucket] + 1) % len(ring)
         off = 0
-        for xi, _, _, _ in group:
-            buf[off:off + xi.shape[0]] = xi
-            off += xi.shape[0]
+        for r in group:
+            k = r.x.shape[0]
+            buf[off:off + k] = r.x
+            r.off = off
+            off += k
         if bucket > n:
             buf[n:] = 0
             self.stats.padded_rows += bucket - n
         self.stats.dispatched_rows += n
         now = time.monotonic()
-        self.stats.record_waits([(now - t) * 1e3 for _, _, _, t in group])
+        self.stats.record_waits([(now - r.t_submit) * 1e3 for r in group])
         dev_ids = (self._fleet_device_ids
                    if bucket in self._sharded_entries
                    else self._local_device_ids)
         for d in dev_ids:
             self.stats.device_batches[d] = \
                 self.stats.device_batches.get(d, 0) + 1
+        return bucket, buf
+
+    def _launch(self, bucket, buf, group):
+        """Launch a staged batch — no host sync. The fault harness's
+        ``dispatch`` and ``execute`` sites fire here; the drain thread (or
+        the bulk path) syncs the returned in-flight device result."""
+        if self._faults is not None:
+            rids = [r.rid for r in group]
+            self._faults.visit("dispatch", requests=rids)
+            buf = self._faults.visit(
+                "execute", payload=buf, requests=rids,
+                rows={r.rid: (r.off, r.x.shape[0]) for r in group},
+                backend=self._backend_tag)
         first_use = bucket not in self._warm
         t0 = time.monotonic()
         # the staging ring guarantees this buffer is not refilled until its
@@ -1369,6 +1755,176 @@ class ServingSession:
         else:
             y = self._run_bucket(jnp.asarray(buf))
         return y
+
+    # -- failure handling ---------------------------------------------------
+    def _beat(self, name: str):
+        if self._sup is not None:
+            self._sup.beat(name)
+
+    def _guard(self, req: _Request, rows):
+        """``guard_numerics``: the NumericsError for non-finite output rows
+        of this request, else None."""
+        if not self._guard_numerics:
+            return None
+        rows = np.asarray(rows)
+        if (np.issubdtype(rows.dtype, np.floating)
+                and not np.all(np.isfinite(rows))):
+            return NumericsError(
+                f"request {req.rid}: non-finite values in its output rows "
+                f"quarantined (guard_numerics=True)")
+        return None
+
+    def _reject_req(self, req: _Request, exc: BaseException) -> bool:
+        """Resolve ``req`` with ``exc``; True when THIS call resolved it.
+        The set_exception winner does the error accounting, so a request
+        racing the deadline enforcer against the drain thread is counted
+        exactly once."""
+        if req.fut is None:
+            return False    # bulk path: run_many accounts for it inline
+        try:
+            req.fut.set_exception(exc)
+        except InvalidStateError:
+            return False
+        st = self.stats
+        with st._lat_lock:
+            st.errors += 1
+            if isinstance(exc, DeadlineExceeded):
+                st.deadline_exceeded += 1
+        return True
+
+    def _resolve_req(self, req: _Request, rows) -> bool:
+        """Resolve ``req`` with its output rows (numerics-guarded); True
+        when this call delivered the result."""
+        gexc = self._guard(req, rows)
+        if gexc is not None:
+            if self._reject_req(req, gexc):
+                self.stats.bump("isolated")
+            return False
+        try:
+            req.fut.set_result(rows[0] if req.single else rows)
+        except InvalidStateError:
+            return False    # expired/cancelled first; already accounted
+        return True
+
+    def _deliver(self, group, y_np):
+        """Scatter a drained batch's rows to its futures + count it."""
+        done_t = time.monotonic()
+        n_ok, lats = 0, []
+        for r in group:
+            rows = y_np[r.off:r.off + r.x.shape[0]]
+            if self._resolve_req(r, rows):
+                n_ok += 1
+                lats.append((done_t - r.t_submit) * 1e3)
+        st = self.stats
+        st.bump("batches")
+        if n_ok:
+            st.bump("requests", n_ok)
+            st.record_latencies(lats)
+
+    def _deliver_outcomes(self, group, outcomes):
+        """Resolve per-request recovery outcomes ``(req, ok, rows|exc)``."""
+        done_t = time.monotonic()
+        n_ok, lats = 0, []
+        for r, ok, val in outcomes:
+            if ok:
+                if self._resolve_req(r, val):
+                    n_ok += 1
+                    lats.append((done_t - r.t_submit) * 1e3)
+            else:
+                self._reject_req(r, val)
+        if n_ok:
+            self.stats.bump("requests", n_ok)
+            self.stats.record_latencies(lats)
+
+    def _fallback_entry(self, bucket: int):
+        """The lazily-compiled XLA degradation executor for ``bucket`` —
+        same Program, same params, ``backend="xla"`` keyed separately in
+        the program cache. Raises for strict/segmented accelerators (no
+        cached-entry hot path to degrade onto)."""
+        with self._fallback_lock:
+            pair = self._fallback_entries.get(bucket)
+            if pair is None:
+                rt = self.acc.runtime
+                if rt is None or rt.strict or not self._entries:
+                    raise RuntimeError("no XLA fallback entry available")
+                pair = rt.executor_entry(bucket, self.acc.input_dtype,
+                                         donate_input=False, backend="xla")
+                self._fallback_entries[bucket] = pair
+            return pair
+
+    def _execute_staged(self, bucket, buf, group, *, fallback: bool = False):
+        """Synchronously execute an already-staged buffer — the recovery
+        path (XLA degradation and bisection retries). Re-visits the fault
+        plan's ``execute`` site so request-bound ("cursed") faults keep
+        firing on retry and the bisection converges on the offender."""
+        if self._faults is not None:
+            buf = self._faults.visit(
+                "execute", payload=buf, requests=[r.rid for r in group],
+                rows={r.rid: (r.off, r.x.shape[0]) for r in group},
+                backend="xla" if fallback else self._backend_tag)
+        if fallback:
+            entry, params = self._fallback_entry(bucket)
+            y = entry(params, jnp.asarray(buf))
+        else:
+            y = self._run_bucket(jnp.asarray(buf))
+        return self._to_host(y)
+
+    def _recover(self, group, bucket, buf, exc):
+        """Per-request outcomes for a failed device batch.
+
+        Order of escalation: (1) a ``backend="pallas"`` failure re-runs the
+        WHOLE batch once through the XLA lowering (``stats.degraded``) —
+        the kernel-level analog of the AOT warn-and-recompile path; (2)
+        bisection — re-dispatch each half **at the same bucket size with
+        the other half's rows zeroed in place**, recursing into halves
+        that still fail until the offender is alone. Same bucket + same
+        row offsets means the innocent rows run through the *identical*
+        compiled executor at identical positions, so their results are
+        bitwise-identical to a fault-free run (changing the bucket would
+        change the lowering and drift the floats). Runs on the thread that
+        detected the failure while the batch's pipeline slot is still held
+        (the staging buffer must survive the re-reads).
+
+        Returns ``[(req, ok, rows_or_exc), ...]`` in group order.
+        """
+        if self._backend_tag == "pallas":
+            try:
+                y_np = self._execute_staged(bucket, buf, group,
+                                            fallback=True)
+                self.stats.bump("degraded")
+                log.warning(
+                    "serving: batch of %d requests re-dispatched on the "
+                    "XLA backend after a pallas failure: %r",
+                    len(group), exc)
+                return [(r, True, y_np[r.off:r.off + r.x.shape[0]])
+                        for r in group]
+            except Exception as e2:  # noqa: BLE001 — fall through to bisect
+                log.warning("serving: XLA fallback also failed (%r); "
+                            "bisecting the batch", e2)
+        return self._bisect(group, bucket, buf, exc)
+
+    def _bisect(self, group, bucket, buf, exc):
+        if len(group) == 1:
+            self.stats.bump("isolated")
+            log.warning("serving: request %d isolated as the batch "
+                        "offender: %r", group[0].rid, exc)
+            return [(group[0], False, exc)]
+        mid = len(group) // 2
+        outcomes = []
+        for part in (group[:mid], group[mid:]):
+            part_buf = np.zeros_like(buf)
+            for r in part:
+                k = r.x.shape[0]
+                part_buf[r.off:r.off + k] = buf[r.off:r.off + k]
+            self.stats.bump("retries")
+            try:
+                y_np = self._execute_staged(bucket, part_buf, part)
+            except Exception as e:  # noqa: BLE001 — recurse on the half
+                outcomes.extend(self._bisect(part, bucket, part_buf, e))
+                continue
+            outcomes.extend((r, True, y_np[r.off:r.off + r.x.shape[0]])
+                            for r in part)
+        return outcomes
 
     def _count_first_use(self, bucket: int, t0: float):
         """Attribute a bucket's first-use stall to ``warm_load_ms`` when its
@@ -1384,84 +1940,234 @@ class ServingSession:
         else:
             self.stats.compile_ms += dt
 
-    def _worker(self):
+    def _worker(self, gen: int):
         """Dispatch loop: batch i+1 is staged and launched while batch i is
-        still executing on the device (the drain thread owns completion)."""
-        while True:
-            group, n = self._take_group()
-            if group is None:
-                with self._inflight_cv:       # closed: wake the drain thread
-                    self._inflight.append(None)
-                    self._inflight_cv.notify_all()
-                return
-            # acquire the pipeline slot BEFORE launching, so at most
-            # pool-capacity device batches are ever outstanding — across
-            # the whole Fleet when the pool is shared
-            self._slots.acquire()
-            try:
-                with self._dispatch_mutex:
-                    y = self._dispatch_group(group, n)
-            except Exception as e:  # noqa: BLE001 — surface via the futures
-                self._slots.release()         # never entered the pipeline
-                self._fail_group(group, e)
-                continue
-            with self._inflight_cv:
-                self._inflight.append((group, y))
-                self._inflight_cv.notify_all()
+        still executing on the device (the drain thread owns completion).
+
+        Crash containment: any escaping exception (including the fault
+        harness's ``ThreadKilled``, a BaseException) is recorded as the
+        causal ``_thread_exc`` and the thread dies — the supervisor
+        detects the dead thread, fails stranded futures and restarts the
+        pipeline under a new generation. A retired (stale-generation)
+        worker hands unstarted work back to the queue and stands down
+        without touching shared pipeline state."""
+        try:
+            while True:
+                group, n, stale = self._take_group(gen)
+                if stale:
+                    return
+                if group is None:
+                    with self._inflight_cv:   # closed: wake the drain thread
+                        self._inflight.append(None)
+                        self._inflight_cv.notify_all()
+                    self._worker_exited_clean = True
+                    return
+                if not group:
+                    continue    # every admitted request had already expired
+                # the group now lives only in this thread: publish it so the
+                # watchdog can fail its futures if we die before handoff
+                self._worker_group = group
+                self._beat("dispatch")
+                # acquire the pipeline slot BEFORE launching, so at most
+                # pool-capacity device batches are ever outstanding — across
+                # the whole Fleet when the pool is shared. The wait is
+                # cancellable on generation retirement: a wedged pool (its
+                # holder crashed) must not block the watchdog restart.
+                if not self._slots.acquire(
+                        cancelled=lambda: self._gen != gen):
+                    with self._cv:
+                        self._pending.extendleft(reversed(group))
+                    self._worker_group = None
+                    return
+                self._worker_holds_slot = True
+                bucket = buf = None
+                try:
+                    with self._dispatch_mutex:
+                        bucket, buf = self._stage_group(group, n)
+                    y = self._launch(bucket, buf, group)
+                except Exception as e:  # noqa: BLE001 — recover per request
+                    try:
+                        outcomes = (self._recover(group, bucket, buf, e)
+                                    if buf is not None else None)
+                    finally:
+                        self._slots.release()
+                        self._worker_holds_slot = False
+                    if outcomes is None:    # staging failed: nothing staged
+                        self._fail_group(group, e)
+                    else:
+                        self._deliver_outcomes(group, outcomes)
+                    self._worker_group = None
+                    continue
+                retired = False
+                with self._inflight_cv:
+                    if self._gen != gen:
+                        retired = True    # watchdog owns cleanup now
+                    else:
+                        self._inflight.append((group, y, bucket, buf))
+                        self._worker_holds_slot = False
+                        self._worker_group = None
+                        self._inflight_cv.notify_all()
+                if retired:
+                    self._slots.release()
+                    self._worker_holds_slot = False
+                    with self._cv:
+                        self._pending.extendleft(reversed(group))
+                    self._worker_group = None
+                    return
+        except BaseException as e:  # noqa: BLE001 — watchdog handles it
+            self._thread_exc = e
+            log.error("serving: dispatch worker died: %r", e)
 
     # -- completion side ----------------------------------------------------
-    def _drainer(self):
+    def _drainer(self, gen: int):
         """Completion loop: block on the oldest in-flight batch, scatter its
         rows back to the futures in submission order. The batch is PEEKED,
         synced, and only then released — releasing the dispatch slot before
         the host sync would let a third batch launch (and its staging
         buffer be refilled) while this one may still be executing, breaking
-        the documented in-flight bound of the slot pool."""
-        while True:
-            with self._inflight_cv:
-                while not self._inflight:
-                    self._inflight_cv.wait()
-                item = self._inflight[0]         # peek: slot stays occupied
-            if item is None:
-                return
-            group, y = item
-            exc = None
-            try:
-                y_np = self._to_host(y)  # the one host sync per batch
-                                         # (+ dequant for int8 sessions)
-            except Exception as e:  # noqa: BLE001 — device error surfaces here
-                exc = e
-            with self._inflight_cv:
-                self._inflight.popleft()         # only this thread pops
-                self._inflight_cv.notify_all()
-            self._slots.release()                # batch done: free the slot
-            if exc is not None:
-                self._fail_group(group, exc)
-                continue
-            # count the batch BEFORE resolving futures: callers blocked on
-            # result() read stats as soon as the last future fires
-            self.stats.batches += 1
-            self.stats.requests += len(group)
-            done_t = time.monotonic()
-            self.stats.record_latencies(
-                [(done_t - t) * 1e3 for _, _, _, t in group])
-            off = 0
-            for xi, single, fut, _ in group:
-                k = xi.shape[0]
-                try:
-                    fut.set_result(y_np[off] if single else y_np[off:off + k])
-                except InvalidStateError:
-                    pass    # caller cancelled mid-flight; drop only their rows
-                off += k
+        the documented in-flight bound of the slot pool.
 
-    @staticmethod
-    def _fail_group(group, e):
-        for _, _, fut, _ in group:
-            try:
-                if not fut.done():
-                    fut.set_exception(e)
-            except InvalidStateError:
-                pass    # cancelled in the done()/set race
+        A sync failure triggers per-request recovery (XLA degradation /
+        bisection — see ``_recover``) BEFORE the slot is released, while
+        the staged buffer is still guaranteed intact. A retired generation
+        abandons its peeked batch untouched: after the generation bump the
+        watchdog owns every in-flight item, and a stale pop/release here
+        would double-free its slot."""
+        try:
+            while True:
+                with self._inflight_cv:
+                    while not self._inflight and self._gen == gen:
+                        self._beat("drain")
+                        self._inflight_cv.wait(0.25)
+                    if self._gen != gen:
+                        return
+                    item = self._inflight[0]     # peek: slot stays occupied
+                if item is None:
+                    return
+                self._beat("drain")
+                group, y, bucket, buf = item
+                exc = None
+                try:
+                    if self._faults is not None:
+                        self._faults.visit(
+                            "drain", requests=[r.rid for r in group])
+                    y_np = self._to_host(y)  # the one host sync per batch
+                                             # (+ dequant for int8 sessions)
+                except Exception as e:  # noqa: BLE001 — device error lands here
+                    exc = e
+                outcomes = (None if exc is None
+                            else self._recover(group, bucket, buf, exc))
+                with self._inflight_cv:
+                    if self._gen != gen or not self._inflight:
+                        return               # retired mid-sync: abandon
+                    self._inflight.popleft()     # only this thread pops
+                    self._drain_popped_unreleased = True
+                    self._drain_group = group    # local-only until delivered
+                    self._inflight_cv.notify_all()
+                self._slots.release()            # batch done: free the slot
+                self._drain_popped_unreleased = False
+                if outcomes is not None:
+                    self._deliver_outcomes(group, outcomes)
+                else:
+                    self._deliver(group, y_np)
+                self._drain_group = None
+        except BaseException as e:  # noqa: BLE001 — watchdog handles it
+            self._thread_exc = e
+            log.error("serving: drain thread died: %r", e)
+
+    def _fail_group(self, group, e):
+        for r in group:
+            self._reject_req(r, e)
+
+    # -- supervision --------------------------------------------------------
+    def _supervise(self):
+        """Watchdog loop (own thread): enforce request deadlines and watch
+        the pipeline threads. Sleeps until the earliest registered
+        deadline (or a 50ms poll tick), fails due requests with
+        ``DeadlineExceeded``, and triggers a pipeline restart when a
+        dispatch/drain thread is dead — or silent past ``hang_after_s``
+        while the session has work."""
+        while True:
+            with self._sup_cv:
+                if self._sup_stop:
+                    return
+                timeout = 0.05
+                nxt = self._deadlines.next_at()
+                if nxt is not None:
+                    timeout = min(timeout, max(0.001, nxt - time.monotonic()))
+                self._sup_cv.wait(timeout)
+                if self._sup_stop:
+                    return
+            now = time.monotonic()
+            expired = False
+            for req in self._deadlines.pop_due(now):
+                if req.fut is not None and not req.fut.done():
+                    if self._reject_req(req, DeadlineExceeded(
+                            f"request {req.rid} missed its "
+                            f"{req.deadline_ms:.1f}ms deadline")):
+                        expired = True
+            if expired:
+                with self._cv:
+                    self._cv.notify_all()    # free queue space / admitters
+            if self._closed:
+                continue    # keep enforcing deadlines until close() stops us
+            if self._sup is not None:
+                with self._cv:
+                    busy = bool(self._pending)
+                if not busy:
+                    with self._inflight_cv:
+                        busy = any(it is not None for it in self._inflight)
+                self._sup.update_busy(busy, now=now)
+                hung = self._sup.hung(now=now)
+            else:
+                hung = []
+            dead = [name for name, t
+                    in (("dispatch", self._dispatch_thread),
+                        ("drain", self._drain_thread))
+                    if not t.is_alive()]
+            if dead or hung:
+                self._restart_pipeline(hung)
+
+    def _restart_pipeline(self, hung):
+        """Retire the current pipeline generation, fail every queued and
+        in-flight future with ``PipelineCrashed`` (causal exception
+        chained), return the dead threads' device slots to the pool, and
+        start fresh dispatch/drain threads. Serialized against ``close``
+        by ``_life_lock``; re-validates liveness under the lock so a
+        concurrent clean shutdown is never mistaken for a crash."""
+        with self._life_lock:
+            if self._closed or self._sup_stop or self._closed_done:
+                return
+            old = (self._dispatch_thread, self._drain_thread)
+            dead = [name for name, t in zip(("dispatch", "drain"), old)
+                    if not t.is_alive()]
+            if not dead and not hung:
+                return
+            causal = self._thread_exc
+            exc = PipelineCrashed(
+                f"pipeline thread(s) {dead or hung} "
+                f"{'died' if dead else 'hung'}; the watchdog failed this "
+                f"request and restarted the pipeline")
+            exc.__cause__ = causal
+            with self._cv:
+                self._gen += 1           # retire survivors
+                self._cv.notify_all()
+            with self._inflight_cv:
+                self._inflight_cv.notify_all()
+            for t in old:
+                t.join(timeout=15.0)
+            n_inflight, n_pending = self._fail_all_queued(exc)
+            self._thread_exc = None
+            self.stats.bump("watchdog_restarts")
+            log.warning(
+                "serving: watchdog restarted the pipeline (gen %d) after "
+                "%s %s; failed %d in-flight batch(es) + %d queued "
+                "request(s) with PipelineCrashed (causal: %r)",
+                self._gen, dead or hung, "died" if dead else "hung",
+                n_inflight, n_pending, causal)
+            if self._sup is not None:
+                self._sup.update_busy(False)     # re-arm hang detection
+            self._start_pipeline_threads()
 
 
 # ---------------------------------------------------------------------------
@@ -1501,7 +2207,14 @@ class Fleet:
     def __init__(self, accelerators, *, mesh=None, max_batch: int = 8,
                  buckets: Sequence[int] | None = None,
                  max_wait_ms: float = 5.0, warmup: bool = False,
-                 scheduler: str = "continuous", max_inflight: int = 3):
+                 scheduler: str = "continuous", max_inflight: int = 3,
+                 deadline_ms: float | None = None,
+                 queue_limit: int | None = None,
+                 on_overload: str = "shed",
+                 guard_numerics: bool = False,
+                 fault_plan=None,
+                 supervise: bool = True,
+                 hang_after_s: float | None = None):
         items = dict(accelerators)
         if not items:
             raise ValueError("Fleet needs at least one named Accelerator")
@@ -1512,10 +2225,17 @@ class Fleet:
         self._pool = _SlotPool(max_inflight)
         self.sessions: dict[str, ServingSession] = {}
         for name, acc in items.items():
+            # the failure model is per-session (each tenant gets its own
+            # deadlines/queue bound/watchdog) over the SHARED slot pool —
+            # a tenant's watchdog restart returns its dead pipeline's
+            # slots so co-tenants never lose pool capacity
             self.sessions[name] = ServingSession(
                 acc, max_batch=max_batch, buckets=buckets, mesh=mesh,
                 max_wait_ms=max_wait_ms, warmup=warmup, scheduler=scheduler,
-                slot_pool=self._pool)
+                slot_pool=self._pool, deadline_ms=deadline_ms,
+                queue_limit=queue_limit, on_overload=on_overload,
+                guard_numerics=guard_numerics, fault_plan=fault_plan,
+                supervise=supervise, hang_after_s=hang_after_s)
 
     @property
     def models(self) -> tuple[str, ...]:

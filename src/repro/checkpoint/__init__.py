@@ -1,0 +1,14 @@
+"""``repro.checkpoint`` — sharded checkpoints and fault-tolerance seeds.
+
+``HeartbeatMonitor`` (straggler z-score + dead-after-silence detection)
+is re-exported at the package level because the serving watchdog
+(``repro.serving.watchdog.ThreadSupervisor``) adapts it as its pipeline
+hang detector — see ``docs/ARCHITECTURE.md`` "Failure model".
+"""
+from repro.checkpoint.fault_tolerance import (
+    HeartbeatMonitor,
+    elastic_restore,
+    run_with_recovery,
+)
+
+__all__ = ["HeartbeatMonitor", "elastic_restore", "run_with_recovery"]

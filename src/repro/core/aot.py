@@ -49,6 +49,20 @@ log = logging.getLogger("repro.aot")
 AOT_FORMAT = "hybriddnn-aot/v1"
 MANIFEST = "manifest.json"
 
+# Test-only seam: the serving fault harness (repro.serving.faults) installs
+# a hook here to exercise the warn-and-recompile path deterministically. The
+# hook runs INSIDE load_entry's artifact try-block, so anything it raises is
+# indistinguishable from a corrupt artifact on disk.
+_fault_hook = None
+
+
+def set_fault_hook(hook):
+    """Install ``hook(digest)`` to run on every artifact read attempt;
+    returns the previous hook so callers can restore it."""
+    global _fault_hook
+    prev, _fault_hook = _fault_hook, hook
+    return prev
+
 # the stale-diagnosis report walks these in order, so the most identity-like
 # dimensions (schedule, environment) lead the logged reason
 KEY_DIMENSIONS = (
@@ -222,6 +236,8 @@ def load_entry(aot_dir: str, cache_key: tuple, env: dict | None = None):
                 _fmt_diffs(stale))
             return None
         try:
+            if _fault_hook is not None:
+                _fault_hook(digest)
             with open(path, "rb") as f:
                 blob = pickle.loads(f.read())
             if blob.get("format") != AOT_FORMAT:

@@ -76,6 +76,9 @@ class CacheStats:
     evictions: int = 0
     validated_evictions: int = 0    # validation-stat entries dropped
     aot_loads: int = 0              # misses served from a disk artifact
+    fallbacks: int = 0              # degraded-backend entry requests (the
+                                    # serving layer's pallas->XLA recovery
+                                    # path; hits AND misses both count)
 
 
 def cache_key(program: Program, *, batch: int, dtype,
@@ -158,7 +161,8 @@ class ProgramCache:
             param_dtypes: tuple = (), backend: str = "xla",
             interpret: bool | None = None, opt_level: int = 1,
             donate_input: bool = False, mesh=None,
-            quant=None, aot_dir: str | None = None) -> CompiledExecutor:
+            quant=None, aot_dir: str | None = None,
+            fallback: bool = False) -> CompiledExecutor:
         """The jitted executor for ``program`` at this
         batch/dtype/backend/opt_level/mesh (compile on miss).
 
@@ -184,7 +188,18 @@ class ProgramCache:
         back to the fresh compile with the reason logged on ``repro.aot``.
         Mesh-sharded variants never load from disk — their binaries would
         pin one host's device ids.
+
+        ``fallback`` marks a graceful-degradation request (the serving
+        layer re-keying a failed Pallas batch onto the XLA lowering).
+        Degraded entries need no special treatment here — ``backend`` is
+        already part of the key, so the healthy and fallback executors
+        coexist — but the flag is counted (``stats.fallbacks``) so
+        operators can see degradation traffic at the cache, not just per
+        session.
         """
+        if fallback:
+            with self._lock:
+                self.stats.fallbacks += 1
         backend, interpret = resolve_backend(backend, interpret)
         opt_level = resolve_opt_level(opt_level)
         # a 1-device mesh lowers identically to no mesh — normalize before

@@ -189,7 +189,8 @@ class HybridRuntime:
                 if cl.kind not in ("pool", "eltwise")]
 
     def executor_entry(self, batch: int, dtype, *,
-                       donate_input: bool = False, mesh=None):
+                       donate_input: bool = False, mesh=None,
+                       backend: str | None = None):
         """The cached jitted executor + DRAM weight image for (batch, dtype).
 
         The serving hot path: a caller holding a fixed parameter set (e.g.
@@ -201,18 +202,31 @@ class HybridRuntime:
         they pass (the pipelined serving queue). ``mesh`` requests the
         shard_map'd executor variant (batch split over every mesh axis,
         Pallas PEs running per-shard); the batch must divide evenly by the
-        mesh's device count."""
+        mesh's device count.
+
+        ``backend`` overrides the runtime's own backend for this one entry
+        — the serving layer's graceful-degradation path re-dispatches a
+        failed Pallas batch through ``backend="xla"``. An override resets
+        ``interpret`` (a Pallas-only knob the XLA lowering would reject)
+        and skips the AOT artifact dir (keyed for the primary backend;
+        probing it would only log spurious stale-artifact warnings) — the
+        DRAM weight image is shared, since backend selection changes the
+        lowering, never the weights."""
         if self.strict:
             raise RuntimeError(
                 "strict interpreter mode has no cached executor entry")
         params = self.dram_params()
         self.stats = self.cache.validate(self.program)
+        is_fallback = backend is not None and backend != self.backend
         entry = self.cache.get(
             self.program, batch=batch, dtype=dtype,
             param_dtypes=tuple(jnp.dtype(w.dtype).name for w, _ in params),
-            backend=self.backend, interpret=self.interpret,
+            backend=self.backend if backend is None else backend,
+            interpret=self.interpret if not is_fallback else None,
             opt_level=self.opt_level, donate_input=donate_input, mesh=mesh,
-            quant=self.quant, aot_dir=self.aot_dir)
+            quant=self.quant,
+            aot_dir=self.aot_dir if not is_fallback else None,
+            fallback=is_fallback)
         return entry, params
 
     def export_aot(self, aot_dir: str, x_shape, dtype, *,

@@ -100,7 +100,9 @@ def serve_cnn(arch: str = "vgg16", *, reduced: bool = True, batch: int = 8,
               segmented: bool = False, target: str = "tpu",
               session: bool = False, backend: str = "xla",
               opt_level: int = 1, mesh: str = "host",
-              scheduler: str = "continuous", dtype: str = "float32"):
+              scheduler: str = "continuous", dtype: str = "float32",
+              deadline_ms: float | None = None,
+              queue_limit: int | None = None):
     """CNN inference through the full HybridDNN pipeline — now a thin driver
     over ``repro.api``.
 
@@ -177,7 +179,9 @@ def serve_cnn(arch: str = "vgg16", *, reduced: bool = True, batch: int = 8,
     if session:
         mesh_arg = None if mesh == "none" else mesh
         with acc.serve(max_batch=batch, buckets=(batch,), warmup=True,
-                       mesh=mesh_arg, scheduler=scheduler) as s:
+                       mesh=mesh_arg, scheduler=scheduler,
+                       deadline_ms=deadline_ms,
+                       queue_limit=queue_limit) as s:
             n_req = batch * iters
             # materialize requests host-side before timing, like real
             # clients arriving with their own arrays
@@ -201,6 +205,14 @@ def serve_cnn(arch: str = "vgg16", *, reduced: bool = True, batch: int = 8,
             per_dev = ", ".join(f"{d}: {n}" for d, n in
                                 sorted(st.device_batches.items()))
             print(f"  per-device batches: {{{per_dev}}}")
+            # failure-model counters: the liveness ledger (submitted ==
+            # completed + errors + shed, enforced by the fault suite)
+            print(f"  failure model: submitted {st.submitted} = "
+                  f"completed {st.requests} + errors {st.errors} + "
+                  f"shed {st.shed}; deadline_exceeded "
+                  f"{st.deadline_exceeded}, retries {st.retries}, "
+                  f"isolated {st.isolated}, degraded {st.degraded}, "
+                  f"watchdog restarts {st.watchdog_restarts}")
     if compare_interpreter:
         strict_request = acc.strict_request()
         jax.block_until_ready(strict_request(x))   # warm XLA op caches
@@ -256,6 +268,15 @@ def main():
                     help="CNN serving precision: int8 builds the quantized "
                          "accelerator (calibrated sidecar, int8 PEs with "
                          "fused requantize, int8-aware DSE)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline for the ServingSession: "
+                         "requests not completed in time fail with "
+                         "DeadlineExceeded instead of waiting forever")
+    ap.add_argument("--queue-limit", type=int, default=None,
+                    help="bound the ServingSession's pending queue; "
+                         "overflow requests are shed with Overloaded "
+                         "(explicit backpressure instead of unbounded "
+                         "memory growth)")
     ap.add_argument("--opt-level", type=int, default=1, choices=(0, 1),
                     help="lowering-optimizer level: 1 fuses each layer's "
                          "per-block loop into one PE dispatch where "
@@ -269,7 +290,9 @@ def main():
                       segmented=args.segmented, target=args.target,
                       session=args.session, backend=args.backend,
                       opt_level=args.opt_level, mesh=args.mesh,
-                      scheduler=args.scheduler, dtype=args.dtype)
+                      scheduler=args.scheduler, dtype=args.dtype,
+                      deadline_ms=args.deadline_ms,
+                      queue_limit=args.queue_limit)
         print("logits:", y.shape)
         return
     toks = serve(args.arch, reduced=args.reduced, batch=args.batch,

@@ -1,0 +1,441 @@
+"""The fault-tolerant serving tier: deterministic fault injection
+(``repro.serving.faults``), per-request deadlines, bounded admission,
+poisoned-batch isolation, thread supervision, and graceful degradation.
+
+The load-bearing property is the **liveness invariant**: under every
+seeded :class:`FaultPlan` — including plans that kill a pipeline thread —
+every submitted request's future resolves (result or typed error) and the
+session counters balance exactly::
+
+    stats.submitted == stats.requests + stats.errors + stats.shed
+
+Isolation is held to a bitwise standard: when one poisoned request fails
+a batch, every innocent co-batched request must return **bit-identical**
+results to a fault-free run (the bisection retries re-run the same
+compiled executor at the same bucket size and row offsets).
+"""
+import logging
+import time
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.checkpoint import HeartbeatMonitor
+from repro.core import aot
+from repro.core import perf_model as pm
+from repro.core.hybrid_conv import ConvSpec, FCSpec
+from repro.core.program_cache import ProgramCache
+from repro.serving import (
+    DeadlineExceeded,
+    DeadlineTable,
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    NumericsError,
+    Overloaded,
+    PipelineCrashed,
+    ThreadKilled,
+    ThreadSupervisor,
+    chaos_soak,
+)
+
+SPECS = [ConvSpec("c1", 16, 16, 3, 8), FCSpec("fc", 16 * 16 * 8, 10,
+                                              relu=False)]
+
+
+@pytest.fixture(scope="module")
+def acc():
+    return api.Accelerator.build(SPECS, target=pm.V5E, batch=4, seed=0)
+
+
+@pytest.fixture(scope="module")
+def acc_pallas():
+    return api.Accelerator.build(SPECS, target=pm.V5E, batch=4, seed=0,
+                                 backend="pallas")
+
+
+def _x(seed=0, n=1):
+    xs = np.random.default_rng(seed).standard_normal(
+        (n, 16, 16, 3)).astype(np.float32)
+    return xs[0] if n == 1 else xs
+
+
+def _balanced(st):
+    return st.submitted == st.requests + st.errors + st.shed
+
+
+# -- the FaultPlan itself ----------------------------------------------------
+
+def test_fault_plan_is_deterministic_and_validated():
+    a = FaultPlan.seeded(7, n_faults=12, n_requests=32)
+    b = FaultPlan.seeded(7, n_faults=12, n_requests=32)
+    assert a.specs == b.specs                       # byte-identical schedule
+    assert a.specs != FaultPlan.seeded(8, n_faults=12, n_requests=32).specs
+    for s in a.specs:                               # corruption needs payload
+        if s.kind in ("nan", "inf"):
+            assert s.site in ("staging", "execute")
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultSpec(site="warp-core")
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec(site="dispatch", kind="gamma-ray")
+
+
+def test_fault_plan_matching_ordinals_requests_and_ctx():
+    plan = FaultPlan([
+        FaultSpec(site="dispatch", kind="error", at=(1,), message="ordinal"),
+        FaultSpec(site="execute", kind="error", requests=(5,),
+                  message="cursed"),
+        FaultSpec(site="execute", kind="error",
+                  match=(("backend", "pallas"),), message="ctx"),
+    ])
+    plan.visit("dispatch")                          # ordinal 0: no match
+    with pytest.raises(InjectedFault, match="ordinal"):
+        plan.visit("dispatch")                      # ordinal 1 fires
+    plan.visit("execute", requests=[1, 2], backend="xla")   # innocent batch
+    with pytest.raises(InjectedFault, match="cursed"):
+        plan.visit("execute", requests=[4, 5], backend="xla")
+    with pytest.raises(InjectedFault, match="ctx"):
+        plan.visit("execute", requests=[9], backend="pallas")
+    assert plan.counts()["dispatch"] == 2 and plan.counts()["execute"] == 3
+    assert [e["message"] for e in plan.fired()] == ["ordinal", "cursed",
+                                                    "ctx"]
+
+
+def test_fault_plan_corruption_scoped_and_int_safe():
+    plan = FaultPlan([FaultSpec(site="execute", kind="nan", requests=(3,))])
+    buf = np.ones((4, 2), np.float32)
+    plan.visit("execute", payload=buf, requests=[2, 3],
+               rows={2: (0, 2), 3: (2, 2)})
+    assert np.isfinite(buf[:2]).all()               # innocent rows untouched
+    assert np.isnan(buf[2:]).all()                  # cursed rows poisoned
+    ibuf = np.ones((4, 2), np.int8)                 # int8 has no NaN: no-op
+    plan.visit("execute", payload=ibuf, requests=[3], rows={3: (2, 2)})
+    assert (ibuf == 1).all()
+
+
+def test_fault_plan_kill_is_base_exception():
+    # ThreadKilled must slip through `except Exception` recovery blocks —
+    # that is what makes it model abrupt thread death, not a batch failure
+    assert not issubclass(ThreadKilled, Exception)
+    with pytest.raises(BaseException):
+        FaultPlan([FaultSpec(site="drain", kind="kill")]).visit("drain")
+
+
+# -- liveness under seeded chaos ---------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_chaos_soak_liveness_and_exact_accounting(acc, seed):
+    plan = FaultPlan.seeded(seed, n_faults=6, horizon=12, n_requests=24)
+    report = chaos_soak(acc, plan=plan, n_requests=24, timeout_s=90.0,
+                        raise_on_failure=True)
+    assert report["unresolved"] == 0 and report["balanced"]
+
+
+def test_chaos_soak_survives_killed_worker_thread(acc):
+    plan = FaultPlan([FaultSpec(site="dispatch", kind="kill", at=(2,))])
+    report = chaos_soak(acc, plan=plan, n_requests=12, timeout_s=90.0,
+                        raise_on_failure=True, max_batch=2, buckets=(2,))
+    assert report["watchdog_restarts"] >= 1
+
+
+def test_chaos_soak_survives_killed_drain_thread(acc):
+    plan = FaultPlan([FaultSpec(site="drain", kind="kill", at=(1,))])
+    report = chaos_soak(acc, plan=plan, n_requests=12, timeout_s=90.0,
+                        raise_on_failure=True, max_batch=2, buckets=(2,))
+    assert report["watchdog_restarts"] >= 1
+
+
+def test_watchdog_restart_fails_inflight_with_causal_exception(acc):
+    plan = FaultPlan([FaultSpec(site="dispatch", kind="kill", at=(1,))])
+    with acc.serve(max_batch=2, buckets=(2,), max_wait_ms=1.0, warmup=True,
+                   fault_plan=plan) as s:
+        assert s.submit(_x()).result(timeout=60) is not None
+        doomed = s.submit(_x())
+        with pytest.raises(PipelineCrashed) as ei:
+            doomed.result(timeout=60)
+        assert isinstance(ei.value.__cause__, ThreadKilled)   # causal chain
+        # the restarted pipeline serves new traffic
+        assert s.submit(_x()).result(timeout=60) is not None
+        st = s.stats
+        assert st.watchdog_restarts >= 1 and _balanced(st)
+
+
+# -- poisoned-batch isolation ------------------------------------------------
+
+def test_innocent_requests_bitwise_identical_after_isolation(acc):
+    xs = _x(seed=3, n=4)
+    with acc.serve(max_batch=4, buckets=(4,), max_wait_ms=20.0,
+                   warmup=True) as s:
+        ref = [np.asarray(f.result(timeout=60))
+               for f in s.submit_many(xs)]
+    plan = FaultPlan([FaultSpec(site="execute", kind="error", requests=(2,),
+                                message="cursed")])
+    with acc.serve(max_batch=4, buckets=(4,), max_wait_ms=20.0, warmup=True,
+                   fault_plan=plan) as s:
+        futs = s.submit_many(xs)
+        for i in (0, 1, 3):                         # innocents: bitwise
+            np.testing.assert_array_equal(
+                np.asarray(futs[i].result(timeout=60)), ref[i])
+        with pytest.raises(InjectedFault, match="cursed"):
+            futs[2].result(timeout=60)              # offender: causal error
+        st = s.stats
+    assert st.isolated == 1 and st.retries >= 2 and _balanced(st)
+
+
+def test_numerics_guard_quarantines_poisoned_rows(acc):
+    plan = FaultPlan([FaultSpec(site="execute", kind="nan", requests=(1,))])
+    with acc.serve(max_batch=2, buckets=(2,), max_wait_ms=20.0, warmup=True,
+                   fault_plan=plan, guard_numerics=True) as s:
+        futs = s.submit_many(_x(seed=4, n=2))
+        assert np.isfinite(np.asarray(futs[0].result(timeout=60))).all()
+        with pytest.raises(NumericsError):
+            futs[1].result(timeout=60)
+        st = s.stats
+    assert st.isolated >= 1 and _balanced(st)
+
+
+# -- deadlines and bounded admission ----------------------------------------
+
+def test_deadline_exceeded_while_queued(acc):
+    plan = FaultPlan([FaultSpec(site="dispatch", kind="delay", at=(0,),
+                                delay_ms=400.0)])
+    with acc.serve(max_batch=2, buckets=(2,), max_wait_ms=1.0, warmup=True,
+                   fault_plan=plan) as s:
+        f = s.submit(_x(), deadline_ms=100.0)
+        with pytest.raises(DeadlineExceeded, match="deadline"):
+            f.result(timeout=60)
+        st = s.stats
+    assert st.deadline_exceeded == 1 and _balanced(st)
+
+
+def test_session_default_deadline_applies(acc):
+    plan = FaultPlan([FaultSpec(site="dispatch", kind="delay", at=(0,),
+                                delay_ms=400.0)])
+    with acc.serve(max_batch=2, buckets=(2,), max_wait_ms=1.0, warmup=True,
+                   fault_plan=plan, deadline_ms=100.0) as s:
+        with pytest.raises(DeadlineExceeded):
+            s.submit(_x()).result(timeout=60)
+
+
+def test_queue_limit_sheds_with_overloaded(acc):
+    plan = FaultPlan([FaultSpec(site="dispatch", kind="delay",
+                                delay_ms=250.0)])
+    with acc.serve(max_batch=1, buckets=(1,), max_wait_ms=1.0, warmup=True,
+                   fault_plan=plan, queue_limit=2, on_overload="shed") as s:
+        futs = [s.submit(_x()) for _ in range(8)]
+        shed = [f for f in futs if f.done()
+                and isinstance(f.exception(), Overloaded)]
+        assert shed                                 # overflow shed instantly
+        for f in futs:
+            if f not in shed:
+                f.result(timeout=120)               # admitted ones complete
+        st = s.stats
+    assert st.shed == len(shed) and _balanced(st)
+
+
+def test_queue_limit_block_admits_everything(acc):
+    plan = FaultPlan([FaultSpec(site="dispatch", kind="delay",
+                                delay_ms=100.0)])
+    with acc.serve(max_batch=1, buckets=(1,), max_wait_ms=1.0, warmup=True,
+                   fault_plan=plan, queue_limit=2, on_overload="block") as s:
+        futs = [s.submit(_x()) for _ in range(6)]   # submit blocks, not sheds
+        for f in futs:
+            f.result(timeout=120)
+        st = s.stats
+    assert st.shed == 0 and st.requests == 6 and _balanced(st)
+
+
+def test_serve_rejects_bad_failure_kwargs(acc):
+    with pytest.raises(ValueError, match="on_overload"):
+        acc.serve(max_batch=2, queue_limit=2, on_overload="explode")
+    with pytest.raises(ValueError, match="queue_limit"):
+        acc.serve(max_batch=2, queue_limit=0)
+
+
+# -- graceful degradation ----------------------------------------------------
+
+def test_pallas_failure_degrades_to_xla_whole_batch(acc_pallas):
+    plan = FaultPlan([FaultSpec(site="execute", kind="error", at=(0,),
+                                match=(("backend", "pallas"),))])
+    cache = acc_pallas.runtime.cache
+    fb0 = cache.stats.fallbacks
+    with acc_pallas.serve(max_batch=2, buckets=(2,), max_wait_ms=1.0,
+                          warmup=True, fault_plan=plan) as s:
+        y = np.asarray(s.submit(_x()).result(timeout=60))
+        st = s.stats
+    # the whole batch succeeded on the XLA lowering: degradation, not
+    # isolation — and the cache counted the degraded-entry request
+    assert st.degraded == 1 and st.isolated == 0 and _balanced(st)
+    assert cache.stats.fallbacks > fb0
+    with acc_pallas.serve(max_batch=2, buckets=(2,), max_wait_ms=1.0,
+                          warmup=True) as s:
+        y_clean = np.asarray(s.submit(_x()).result(timeout=60))
+    np.testing.assert_allclose(y, y_clean, atol=1e-5, rtol=1e-5)
+
+
+def test_aot_load_fault_takes_warn_and_recompile_path(acc, tmp_path, caplog):
+    bundle = str(tmp_path / "bundle")
+    acc.save_program(bundle, aot=True, buckets=(2,))
+    y_ref = np.asarray(acc(_x(n=2)))
+    plan = FaultPlan([FaultSpec(site="aot_load", kind="error")])
+    prev = aot.set_fault_hook(plan.aot_hook())
+    try:
+        cache = ProgramCache()
+        acc2 = api.Accelerator.from_program(bundle, params=acc.params,
+                                            cache=cache)
+        with caplog.at_level(logging.WARNING, logger="repro.aot"):
+            with acc2.serve(max_batch=2, buckets=(2,), warmup=True) as s:
+                y = np.asarray(s.run_many(list(_x(n=2)))[0])
+    finally:
+        assert aot.set_fault_hook(prev) is not None
+    assert plan.fired("aot_load")                  # the hook really ran
+    assert cache.stats.aot_loads == 0              # no artifact served
+    assert any("falling back to fresh compile" in r.getMessage()
+               for r in caplog.records)
+    np.testing.assert_array_equal(y, y_ref[0])     # recompile is bit-exact
+
+
+# -- run_many under faults (satellite: swallowed-error fix) ------------------
+
+def test_run_many_reports_suppressed_secondary_errors(acc, caplog):
+    plan = FaultPlan([
+        FaultSpec(site="execute", kind="error", requests=(1,),
+                  message="first"),
+        FaultSpec(site="execute", kind="error", requests=(6,),
+                  message="second"),
+    ])
+    xs = list(_x(seed=5, n=8))
+    with acc.serve(max_batch=2, buckets=(2,), max_wait_ms=1.0, warmup=True,
+                   fault_plan=plan) as s:
+        with caplog.at_level(logging.ERROR, logger="repro.serving"):
+            with pytest.raises(InjectedFault, match="first") as ei:
+                s.run_many(xs)
+        st = s.stats
+    # the second batch's failure is attached AND logged, never swallowed
+    assert [str(e) for e in ei.value.secondary_errors] == ["second"]
+    assert any("suppressed" in r.getMessage() for r in caplog.records)
+    assert _balanced(st)
+
+
+def test_run_many_isolates_cursed_request_bitwise(acc):
+    xs = list(_x(seed=6, n=4))
+    with acc.serve(max_batch=4, buckets=(4,), warmup=True) as s:
+        ref = [np.asarray(y) for y in s.run_many(xs)]
+    plan = FaultPlan([FaultSpec(site="execute", kind="error", requests=(0,),
+                                message="cursed")])
+    with acc.serve(max_batch=4, buckets=(4,), warmup=True,
+                   fault_plan=plan) as s:
+        with pytest.raises(InjectedFault, match="cursed"):
+            s.run_many(xs)
+        st = s.stats
+    assert st.isolated == 1 and _balanced(st)
+    # innocents in the same poisoned device batch still match bitwise
+    with acc.serve(max_batch=4, buckets=(4,), warmup=True) as s:
+        again = [np.asarray(y) for y in s.run_many(xs)]
+    for a, b in zip(again, ref):
+        np.testing.assert_array_equal(a, b)
+
+
+# -- lifecycle edge cases (satellite) ---------------------------------------
+
+def test_close_with_requests_in_flight_resolves_everything(acc):
+    plan = FaultPlan([FaultSpec(site="dispatch", kind="delay",
+                                delay_ms=150.0)])
+    s = acc.serve(max_batch=1, buckets=(1,), max_wait_ms=1.0, warmup=True,
+                  fault_plan=plan)
+    futs = [s.submit(_x()) for _ in range(4)]
+    s.close()                                      # while batches in flight
+    for f in futs:                                 # liveness: all resolved,
+        assert f.done()                            # result or typed error
+        try:
+            f.result(timeout=0)
+        except Exception:  # noqa: BLE001 — typed error is a resolution too
+            pass
+    assert _balanced(s.stats)
+
+
+def test_double_close_is_idempotent_even_after_crash(acc):
+    plan = FaultPlan([FaultSpec(site="dispatch", kind="kill", at=(0,))])
+    s = acc.serve(max_batch=2, buckets=(2,), max_wait_ms=1.0, warmup=True,
+                  fault_plan=plan, supervise=False)   # no watchdog rescue
+    f = s.submit(_x())
+    time.sleep(0.3)                                # let the worker die
+    s.close()
+    s.close()                                      # second close: no-op
+    with pytest.raises(PipelineCrashed):
+        f.result(timeout=0)
+    assert _balanced(s.stats)
+
+
+def test_run_many_empty_and_zero_max_wait(acc):
+    with acc.serve(max_batch=2, buckets=(2,), max_wait_ms=0.0,
+                   warmup=False) as s:
+        assert s.run_many([]) == []                # no work: no batches
+        y = s.submit(_x()).result(timeout=60)      # zero-wait admitter cuts
+        assert np.asarray(y).shape == (10,)        # singleton batches
+        assert s.stats.batches >= 1
+    assert _balanced(s.stats)
+
+
+def test_submit_after_close_still_raises(acc):
+    s = acc.serve(max_batch=2, buckets=(2,), warmup=False)
+    s.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        s.submit(_x())
+
+
+# -- the supervision primitives (satellite: checkpoint wiring) ---------------
+
+def test_heartbeat_monitor_detects_stragglers_and_dead():
+    mon = HeartbeatMonitor(n_workers=3, window=8, zscore_threshold=3.0,
+                           dead_after_s=5.0)
+    now = 100.0
+    for step in range(8):
+        for w in range(3):
+            slow = 4.0 if w == 2 else 1.0          # worker 2 is 4x slower
+            mon.report(w, step_time=slow, now=now)
+        now += 1.0
+    assert mon.stragglers() == [2]
+    assert mon.dead(now=now) == []                 # everyone reported
+    assert mon.dead(now=now + 10.0) == [0, 1, 2]   # silence kills them all
+
+
+def test_thread_supervisor_only_flags_hung_when_busy():
+    sup = ThreadSupervisor(("dispatch", "drain"), hang_after_s=1.0)
+    sup.beat("dispatch", now=0.0)
+    sup.beat("drain", now=0.0)
+    assert sup.hung(now=10.0) == []                # idle: silence is normal
+    sup.update_busy(True, now=10.0)                # arming re-reports all
+    assert sup.hung(now=10.5) == []
+    assert sorted(sup.hung(now=20.0)) == ["dispatch", "drain"]
+    sup.beat("drain", now=20.0)
+    assert sup.hung(now=20.5) == ["dispatch"]
+
+
+def test_deadline_table_orders_and_pops_due():
+    t = DeadlineTable()
+    assert t.next_at() is None
+    assert t.add(5.0, "b") and t.add(3.0, "a")     # new-min flags
+    assert not t.add(9.0, "c")
+    assert t.next_at() == 3.0 and len(t) == 3
+    assert t.pop_due(6.0) == ["a", "b"]
+    assert t.pop_due(6.0) == [] and len(t) == 1
+
+
+# -- Fleet passthrough -------------------------------------------------------
+
+def test_fleet_sessions_share_failure_model(acc):
+    plan = FaultPlan([FaultSpec(site="execute", kind="error", requests=(0,),
+                                message="cursed")])
+    fleet = api.Fleet({"m": acc}, max_batch=2, buckets=(2,),
+                      max_wait_ms=1.0, warmup=True, fault_plan=plan,
+                      deadline_ms=30_000.0)
+    try:
+        with pytest.raises(InjectedFault, match="cursed"):
+            fleet.submit("m", _x()).result(timeout=60)
+        assert fleet.submit("m", _x()).result(timeout=60) is not None
+        st = fleet.sessions["m"].stats
+        assert st.isolated == 1 and _balanced(st)
+    finally:
+        fleet.close()

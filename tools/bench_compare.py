@@ -85,6 +85,17 @@ ROW_SCHEMAS: dict[str, set[str]] = {
     "serving/aot_cold_start": {"cold_compile_ms", "warm_load_ms",
                                "warm_over_cold_compile_ratio",
                                "max_abs_diff"},
+    # survived/accounting_balanced/offenders_isolated are hard booleans
+    # (liveness invariant), innocent_max_abs_diff must be exactly 0.0
+    # (bisection re-runs the same executor at the same offsets), and
+    # isolation_overhead_ratio gates as lower-is-better: both passes run
+    # back-to-back in one process, so the ratio is load-independent
+    "serving/fault_injection": {"fault_rate", "survived",
+                                "accounting_balanced", "offenders_isolated",
+                                "retries", "isolated",
+                                "isolation_overhead_ratio",
+                                "p95_clean_ms", "p95_faulty_ms",
+                                "innocent_max_abs_diff"},
 }
 
 # higher-is-better ratio metrics: stable across machines, so they gate
@@ -94,7 +105,8 @@ RATIO_KEYS = ("speedup", "jaxpr_op_reduction", "session_vs_direct_batched",
               "top1_agreement_vgg16", "top1_agreement_resnet18")
 
 # lower-is-better ratio metrics: gate on growth past tol instead of a drop
-LOWER_RATIO_KEYS = ("pallas_over_xla", "warm_over_cold_compile_ratio")
+LOWER_RATIO_KEYS = ("pallas_over_xla", "warm_over_cold_compile_ratio",
+                    "isolation_overhead_ratio")
 
 
 def _ratio_gate_skipped(name, key, row) -> str | None:
